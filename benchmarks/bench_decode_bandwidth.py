@@ -1,0 +1,58 @@
+"""Batch-1 decode bandwidth model (paper §3's speedup, extended).
+
+ms/token lower bound when weight streaming saturates HBM (v5e: 819 GB/s),
+with and without QP removal, for every assigned architecture — plus the KV
+cache read traffic at the assigned decode contexts (beyond the paper, which
+models weights only)."""
+from __future__ import annotations
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import (active_weights_per_token, decode_ms_per_token,
+                        weight_table)
+
+
+def kv_bytes_per_token(cfg, context: int, bytes_per=2) -> int:
+    """KV cache bytes read per decoded token at a given context."""
+    if not cfg.has_attention:
+        # SSD state read instead: (H, P, N) fp32 per layer
+        return cfg.n_layers * cfg.ssm_n_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    eff = min(context, cfg.sliding_window) if cfg.sliding_window else context
+    kv = cfg.n_layers * 2 * eff * cfg.kv_dim * bytes_per
+    if cfg.ssm_state:  # hybrid: both
+        kv += cfg.n_layers * cfg.ssm_n_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    return kv
+
+
+def run(context: int = 32_768):
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        if cfg.is_encoder:
+            continue  # no autoregressive decode
+        t = weight_table(cfg)
+        act_w = active_weights_per_token(cfg, with_qp=True)
+        act_wo = active_weights_per_token(cfg, with_qp=False)
+        kvb = kv_bytes_per_token(cfg, context)
+        ms_with = decode_ms_per_token(act_w) + kvb / 819e9 * 1e3
+        ms_wo = decode_ms_per_token(act_wo) + kvb / 819e9 * 1e3
+        rows.append(dict(
+            arch=arch, weights_ms=decode_ms_per_token(act_w),
+            kv_ms=kvb / 819e9 * 1e3,
+            ms_with=ms_with, ms_without=ms_wo,
+            speedup_weights=t["speedup"],
+            speedup_e2e=ms_with / ms_wo if ms_wo else 1.0))
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'arch':26s} {'W ms/tok':>9s} {'KV ms/tok':>10s} "
+          f"{'paper speedup':>14s} {'e2e speedup@32k':>16s}")
+    for r in rows:
+        print(f"{r['arch']:26s} {r['weights_ms']:>9.2f} {r['kv_ms']:>10.3f} "
+              f"{r['speedup_weights']:>14.3f} {r['speedup_e2e']:>16.3f}")
+    print("(bf16 weights, fp32 SSM state, v5e 819 GB/s; batch 1, 1 chip)")
+
+
+if __name__ == "__main__":
+    main()

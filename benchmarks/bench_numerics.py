@@ -1,0 +1,72 @@
+"""§Numerics: runtime precision of the merged form (beyond the paper).
+
+The merge is computed in float64 (exact); at runtime the merged model
+evaluates (u·Q)(Q⁻¹K) where the vanilla model evaluates u·K, so the logit
+discrepancy scales like cond(Q)·eps·L.  This benchmark measures that for
+lecun-normal vs orthogonal Q at fp32/bf16 runtime — the deployment guidance
+the paper doesn't give (its §4 experiment is fp32, shallow).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import condition_numbers, merge_skipless
+from repro.models import forward_seq, init_params
+
+
+def _case(init_style: str, runtime_dtype: str, n_layers: int = 4,
+          d_model: int = 256):
+    cfg = ModelConfig(
+        name="numerics", family="dense", n_layers=n_layers, d_model=d_model,
+        n_heads=8, n_kv_heads=4, d_ff=512, vocab_size=512,
+        ffn_type="gelu_mlp", block_style="skipless", init_style=init_style,
+        dtype=runtime_dtype, param_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params["embed"]["table"] = params["embed"]["table"] * 50.0
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab_size)
+    base, _, _ = forward_seq(params, cfg, toks)
+    mparams, mcfg = merge_skipless(params, cfg, "qp")
+    merged, _, _ = forward_seq(mparams, mcfg, toks)
+    rel = (float(np.max(np.abs(np.asarray(base, np.float32)
+                               - np.asarray(merged, np.float32))))
+           / (float(np.max(np.abs(np.asarray(base, np.float32)))) + 1e-12))
+    conds = condition_numbers(params, cfg, "qp")
+    return dict(init=init_style, dtype=runtime_dtype, layers=n_layers,
+                cond_med=float(np.median(conds)), rel_err=rel)
+
+
+def run():
+    rows = []
+    for init in ("normal", "orthogonal"):
+        for dt in ("float32", "bfloat16"):
+            rows.append(_case(init, dt))
+    # depth scaling at the worst combination
+    for L in (2, 8):
+        rows.append(_case("normal", "bfloat16", n_layers=L))
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'init':12s} {'runtime':9s} {'L':>2s} {'cond(Q) med':>12s} "
+          f"{'rel logit err':>14s}")
+    for r in rows:
+        print(f"{r['init']:12s} {r['dtype']:9s} {r['layers']:>2d} "
+              f"{r['cond_med']:>12.1f} {r['rel_err']:>14.2e}")
+    # the deployment rule: orthogonal-init (or well-conditioned) Q keeps the
+    # merged runtime faithful even in bf16
+    ortho_bf16 = next(r for r in rows if r["init"] == "orthogonal"
+                      and r["dtype"] == "bfloat16")
+    normal_bf16 = next(r for r in rows if r["init"] == "normal"
+                       and r["dtype"] == "bfloat16" and r["layers"] == 4)
+    assert ortho_bf16["rel_err"] < normal_bf16["rel_err"], \
+        "conditioning must dominate the merged-runtime error"
+    print("guidance: audit cond(Q) before deploying the merged form in bf16")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""§Roofline table from dry-run artifacts (artifacts/dryrun/*.json).
+
+Per (arch × shape) on the single-pod 16×16 mesh:
+  compute_s    = HLO_FLOPs_per_chip / 197e12        (v5e bf16 peak)
+  memory_s     = HLO_bytes_per_chip / 819e9         (HBM)
+  collective_s = collective_bytes_per_chip / 50e9   (ICI link)
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs ratio, and per-chip memory.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_records(mesh="single", style="default"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ARTIFACTS, f"*__{mesh}__{style}.json"))):
+        r = json.load(open(f))
+        if not r.get("skipped") and "error" not in r:
+            recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for r in load_records():
+        rf = r.get("roofline", {})
+        if not rf:
+            continue
+        total = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"],
+            compute_s=rf["compute_s"], memory_s=rf["memory_s"],
+            collective_s=rf["collective_s"], dominant=rf["dominant"],
+            compute_frac=rf["compute_s"] / total if total else 0.0,
+            mfr=r.get("model_flops_ratio", float("nan")),
+            peak_gb=(r["memory"]["peak_bytes"] or 0) / 1e9))
+    return rows
+
+
+def main():
+    rows = run()
+    if not rows:
+        print("no dry-run artifacts found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --out "
+              "artifacts/dryrun")
+        return
+    print(f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'collect_s':>10s} {'dominant':>10s} {'cmp_frac':>8s} "
+          f"{'MFR':>6s} {'peakGB':>7s}")
+    for r in rows:
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:>10.4f} "
+              f"{r['memory_s']:>10.4f} {r['collective_s']:>10.4f} "
+              f"{r['dominant']:>10s} {r['compute_frac']:>8.3f} "
+              f"{r['mfr']:>6.2f} {r['peak_gb']:>7.1f}")
+    n_dom = {}
+    for r in rows:
+        n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    print(f"cells={len(rows)} dominant breakdown: {n_dom}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run
+
+Prints a ``name,us_per_call,derived`` CSV summary after the tables.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import (bench_decode_bandwidth, bench_equivalence,
+                            bench_kernels, bench_numerics, bench_roofline,
+                            bench_weight_table)
+
+    suites = [
+        ("weight_table[paper_s3]", bench_weight_table),
+        ("equivalence[paper_s4]", bench_equivalence),
+        ("decode_bandwidth[paper_s3_ext]", bench_decode_bandwidth),
+        ("numerics[merged_runtime]", bench_numerics),
+        ("kernels", bench_kernels),
+        ("roofline[dryrun]", bench_roofline),
+    ]
+    csv = ["name,us_per_call,derived"]
+    for name, mod in suites:
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.perf_counter()
+        mod.main()
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ""
+        try:
+            rows = mod.run()
+            if name.startswith("weight_table"):
+                m = next(r for r in rows if r["arch"] == "mistral-7b")
+                derived = f"mistral_speedup={m['speedup']:.3f}"
+            elif name.startswith("equivalence"):
+                derived = f"max_rel_err={max(r['rel_err'] for r in rows):.2e}"
+            elif name.startswith("decode_bandwidth"):
+                m = next(r for r in rows if r["arch"] == "qwen2.5-32b")
+                derived = f"qwen_e2e_speedup={m['speedup_e2e']:.3f}"
+            elif name.startswith("numerics"):
+                o = next(r for r in rows if r["init"] == "orthogonal"
+                         and r["dtype"] == "float32")
+                derived = f"ortho_fp32_rel={o['rel_err']:.2e}"
+            elif name == "kernels":
+                derived = f"max_err={max(r['err'] for r in rows):.2e}"
+            elif name.startswith("roofline"):
+                derived = f"cells={len(rows)}"
+        except Exception as e:  # derived metrics are best-effort
+            derived = f"derived_error={type(e).__name__}"
+        csv.append(f"{name},{us:.0f},{derived}")
+
+    print("\n" + "\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the paper's trick in 60 seconds.
+
+Build a small skipless GQA transformer (Fig 1a), remove its Q and P weights
+exactly (Fig 1b / Table 1), and verify the two models are the same function.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import merge_skipless, weight_table
+from repro.models import count_params, forward_seq, init_params
+
+# a Mistral-style GQA decoder, skipless (no residuals / no norms)
+cfg = ModelConfig(
+    name="quickstart", family="dense",
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=2, d_ff=688,
+    vocab_size=1024, ffn_type="swiglu",
+    block_style="skipless", dtype="float32", param_dtype="float32")
+
+params = init_params(jax.random.PRNGKey(0), cfg)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+logits, _, _ = forward_seq(params, cfg, tokens)
+
+# --- the paper's merge: Q and P vanish, K*/V*/M*/O* absorb them -----------
+merged_params, merged_cfg = merge_skipless(params, cfg, variant="qp")
+merged_logits, _, _ = forward_seq(merged_params, merged_cfg, tokens)
+
+n0, n1 = count_params(params), count_params(merged_params)
+err = float(np.max(np.abs(np.asarray(logits) - np.asarray(merged_logits))))
+rel = err / float(np.max(np.abs(np.asarray(logits))))
+
+print(f"params:        {n0:,} -> {n1:,}  "
+      f"(-{n0 - n1:,} = -{100 * (n0 - n1) / n0:.1f}%)")
+print(f"removed/layer: 2·d² = {2 * cfg.d_model ** 2:,} (Q and P)")
+print(f"max |Δlogit|:  {err:.2e}  (relative {rel:.2e})")
+print("note: the merge itself is exact (float64); the residual above is the")
+print("      fp32 RUNTIME cost of evaluating (u·Q)·(Q⁻¹K) vs u·K — it scales")
+print("      with cond(Q)·eps per layer (see EXPERIMENTS.md §Numerics)")
+
+# --- what this means for Mistral-7B (paper §3) ----------------------------
+from repro.configs import get_config
+t = weight_table(get_config("mistral-7b"))
+print(f"\nMistral-7B:    {t['total'] / 1e9:.1f}B -> "
+      f"{t['total_without_qp'] / 1e9:.1f}B weights "
+      f"({100 * t['savings_frac']:.0f}% saved) -> "
+      f"{t['speedup']:.2f}x batch-1 decode speedup (memory-bound)")
+assert rel < 5e-2  # fp32 runtime; drops to ~1e-13 under float64 evaluation
+print("\nOK")

@@ -1,0 +1,53 @@
+"""Config registry. Importing this package registers all architectures."""
+from repro.configs.base import (
+    ModelConfig,
+    REGISTRY,
+    get_config,
+    list_archs,
+    reduce_config,
+    register,
+)
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable_shapes, shape_applicable
+
+# eagerly import every arch module so REGISTRY is complete
+from repro.configs import (  # noqa: F401
+    qwen2_5_32b,
+    phi3_medium_14b,
+    chatglm3_6b,
+    llama3_2_1b,
+    llama3_2_vision_11b,
+    hymba_1_5b,
+    mamba2_2_7b,
+    phi3_5_moe_42b,
+    moonshot_v1_16b,
+    hubert_xlarge,
+    pythia_6_9b,
+    mistral_7b,
+)
+
+ASSIGNED_ARCHS = (
+    "qwen2.5-32b",
+    "phi3-medium-14b",
+    "chatglm3-6b",
+    "llama3.2-1b",
+    "llama3.2-vision-11b",
+    "hymba-1.5b",
+    "mamba2-2.7b",
+    "phi3.5-moe-42b-a6.6b",
+    "moonshot-v1-16b-a3b",
+    "hubert-xlarge",
+)
+
+__all__ = [
+    "ModelConfig",
+    "REGISTRY",
+    "get_config",
+    "list_archs",
+    "reduce_config",
+    "register",
+    "SHAPES",
+    "ShapeSpec",
+    "applicable_shapes",
+    "shape_applicable",
+    "ASSIGNED_ARCHS",
+]

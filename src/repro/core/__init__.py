@@ -1,0 +1,23 @@
+"""The paper's contribution: exact Q/P (K/P, V/P) weight removal for
+skipless transformers, plus its weight/bandwidth accounting."""
+from repro.core.merge import (
+    condition_numbers,
+    merge_skipless,
+    removed_weight_count,
+)
+from repro.core.analysis import (
+    active_weights_per_token,
+    decode_ms_per_token,
+    decode_speedup,
+    weight_table,
+)
+
+__all__ = [
+    "condition_numbers",
+    "merge_skipless",
+    "removed_weight_count",
+    "active_weights_per_token",
+    "decode_ms_per_token",
+    "decode_speedup",
+    "weight_table",
+]

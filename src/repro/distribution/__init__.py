@@ -1,0 +1,3 @@
+from repro.distribution import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,237 @@
+"""Logical-axis sharding rules -> PartitionSpecs for every pytree we place.
+
+Parallelism mapping (1000+ chip design):
+  * DP  — batch over ("pod", "data") (multi-pod) or ("data",): gradients
+    all-reduce hierarchically (XLA schedules intra-pod reduce-scatter +
+    inter-pod all-reduce over the "pod" axis).
+  * TP  — heads / kv-heads / d_ff / vocab / ssm-rows over "model";
+    GSPMD inserts the block-level collectives (all-reduce or
+    reduce-scatter+all-gather depending on downstream shardings).
+  * EP  — MoE expert axis over "model" (expert parallelism); the dispatch
+    einsums induce the all-to-all-style resharding.
+  * batch-less shapes (long_500k, batch 1) drop the DP axis (replicate)
+    rather than padding 1 -> |dp|.
+
+Rules are path-based over the parameter tree: ``_PARAM_RULES`` matches the
+TRAILING dims of each leaf by (module, param-name); leading stack axes
+(layers / groups) are never sharded (they are scanned over).
+
+Uneven shardings (e.g. 40 heads over 16 chips) are permitted — GSPMD pads —
+and flagged by ``check_divisibility`` so the roofline/perf pass can see the
+padding waste explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axes (None = replicate)."""
+    dp: Optional[Tuple[str, ...]] = ("data",)  # batch
+    tp: Optional[str] = "model"  # heads/ffn/vocab/experts
+    # overrides let the perf pass re-map specific logical dims:
+    vocab: Optional[str] = "use_tp"
+    heads: Optional[str] = "use_tp"
+    ffn: Optional[str] = "use_tp"
+    experts: Optional[str] = "use_tp"
+
+    def axis(self, name: str):
+        v = getattr(self, name)
+        return self.tp if v == "use_tp" else v
+
+
+def make_rules(mesh: Mesh, *, batch: int = 0, **kw) -> ShardingRules:
+    """Default rules for a mesh; drops DP when the batch can't use it."""
+    names = mesh.axis_names
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    if batch and batch < dp_size:
+        dp_axes = None  # replicate tiny batches (e.g. long_500k batch=1)
+    return ShardingRules(dp=dp_axes, tp="model" if "model" in names else None, **kw)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (path-based)
+# ---------------------------------------------------------------------------
+
+def _param_spec(path: Tuple[str, ...], ndim: int, rules: ShardingRules) -> P:
+    """Spec for one param; trailing-dim rules, leading stack dims -> None."""
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    tp = rules.axis
+    table = {
+        # (parent, name): trailing spec
+        ("embed", "table"): (tp("vocab"), None),
+        ("unembed", "table"): (tp("vocab"), None),
+        ("attn", "wq"): (None, tp("heads")),
+        ("attn", "wk"): (None, tp("heads")),
+        ("attn", "wv"): (None, tp("heads")),
+        ("attn", "wp"): (tp("heads"), None),
+        ("attn", "bq"): (tp("heads"),),
+        ("attn", "bk"): (tp("heads"),),
+        ("attn", "bv"): (tp("heads"),),
+        ("ffn", "w_gate"): (None, tp("ffn")),
+        ("ffn", "w_up"): (None, tp("ffn")),
+        ("ffn", "w_down"): (tp("ffn"), None),
+        ("ffn", "w_in"): (None, tp("ffn")),
+        ("ffn", "w_out"): (tp("ffn"), None),
+        ("moe", "router"): (None, None),
+        ("moe", "w_gate"): (tp("experts"), None, None),
+        ("moe", "w_up"): (tp("experts"), None, None),
+        ("moe", "w_down"): (tp("experts"), None, None),
+        ("ssm", "in_proj"): (tp("ffn"), None),  # row (d_model) sharded
+        ("ssm", "out_proj"): (tp("ffn"), None),  # row (d_inner) sharded
+        ("ssm", "conv_kernel"): (None, None),
+        ("ssm", "conv_bias"): (None,),
+        ("ssm", "A_log"): (None,),
+        ("ssm", "D"): (None,),
+        ("ssm", "dt_bias"): (None,),
+    }
+    trailing = table.get((parent, name))
+    if trailing is None:
+        # norms, biases, conv_pos, input_proj, b_out, … -> replicate
+        trailing = tuple(None for _ in range(ndim))
+    pad = ndim - len(trailing)
+    return P(*((None,) * pad + tuple(trailing)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_pspecs(params_shape, rules: ShardingRules):
+    """PartitionSpec pytree matching a params (shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(_path_names(path), len(leaf.shape), rules),
+        params_shape)
+
+
+def param_shardings(params_shape, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params_shape, rules))
+
+
+# ---------------------------------------------------------------------------
+# activation / input / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_pspec(rules: ShardingRules, extra_dims: int = 1) -> P:
+    return P(rules.dp, *([None] * extra_dims))
+
+
+def input_pspecs(cfg: ModelConfig, kind: str, rules: ShardingRules) -> Dict[str, P]:
+    """Specs for the input dict of train/prefill/decode steps."""
+    dp = rules.dp
+    if kind == "train":
+        specs = {"inputs": P(dp, None), "labels": P(dp, None)}
+        if cfg.family == "audio":
+            specs["inputs"] = P(dp, None, None)
+        if cfg.family == "vlm":
+            specs["vision"] = P(dp, None, None)
+        return specs
+    if kind == "prefill":
+        specs = {"inputs": P(dp, None)}
+        if cfg.family == "audio":
+            specs["inputs"] = P(dp, None, None)
+        if cfg.family == "vlm":
+            specs["vision"] = P(dp, None, None)
+        return specs
+    if kind == "decode":
+        return {"token": P(dp)}
+    raise ValueError(kind)
+
+
+def cache_pspecs(cfg: ModelConfig, rules: ShardingRules):
+    """PartitionSpecs for a DecodeCache (structure mirrors the NamedTuple).
+
+    KV caches are SEQUENCE-sharded over the model axis (a flash-decoding
+    style split-K: every chip scores its cache slice, XLA combines the
+    softmax stats) because GQA kv-head counts (8, 5, 2, …) rarely divide a
+    16-way TP axis while cache lengths always do.  SSM state shards over
+    heads when divisible (``evenly`` downgrades it otherwise — e.g. hymba's
+    50 heads stay replicated, they are tiny)."""
+    from repro.models.transformer import DecodeCache
+    from repro.models import mamba2 as m2
+
+    dp, tp = rules.dp, rules.axis("heads")
+    kv = P(None, dp, tp, None, None)
+    return DecodeCache(
+        k=kv, v=kv,
+        kv_pos=P(dp, tp),
+        length=P(dp),
+        ssm=m2.SSMState(ssm=P(None, dp, tp, None, None),
+                        conv=P(None, dp, None, None)),
+        cross_k=P(None, dp, None, tp, None),  # vision tokens: head-sharded
+        cross_v=P(None, dp, None, tp, None),
+    )
+
+
+def logits_pspec(rules: ShardingRules, seq_dim: bool = True) -> P:
+    if seq_dim:
+        return P(rules.dp, None, rules.axis("vocab"))
+    return P(rules.dp, rules.axis("vocab"))
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware downgrade: pjit argument shardings must divide evenly
+# ---------------------------------------------------------------------------
+
+def evenly(pspec_tree, shape_tree, mesh: Mesh):
+    """Replace any spec axis whose dim doesn't divide the mesh axes with
+    None (replicate).  pjit rejects uneven ARGUMENT shardings, so every
+    explicitly-sharded input passes through this.  Downgrades are visible
+    via ``check_divisibility`` (same predicate), never silent corruption."""
+    def fix(spec, leaf):
+        if spec is None or leaf is None:
+            return spec
+        dims = tuple(leaf.shape)
+        parts = []
+        for d, ax in enumerate(tuple(spec) + (None,) * (len(dims) - len(spec))):
+            if ax is None:
+                parts.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            parts.append(ax if dims[d] % size == 0 else None)
+        return P(*parts)
+
+    return jax.tree.map(fix, pspec_tree, shape_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# divisibility audit (padding waste is visible, not silent)
+# ---------------------------------------------------------------------------
+
+def check_divisibility(params_shape, mesh: Mesh, rules: ShardingRules):
+    """Returns a list of (path, dim, size, axis_size) uneven shardings."""
+    uneven = []
+
+    def visit(path, leaf):
+        spec = _param_spec(_path_names(path), len(leaf.shape), rules)
+        for d, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if leaf.shape[d] % size:
+                uneven.append(("/".join(_path_names(path)), d, leaf.shape[d], size))
+
+    jax.tree_util.tree_map_with_path(visit, params_shape)
+    return uneven

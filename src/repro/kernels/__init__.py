@@ -1,0 +1,8 @@
+"""TPU Pallas kernels for the framework's compute hot-spots.
+
+Layout: <name>.py (pl.pallas_call + BlockSpec) / ops.py (jit wrappers) /
+ref.py (pure-jnp oracles).  Validated under interpret=True on CPU; the
+model layer selects them via ``impl="pallas"`` (TPU) or
+``impl="pallas_interpret"`` (tests).
+"""
+from repro.kernels import ops, ref  # noqa: F401

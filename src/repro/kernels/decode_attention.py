@@ -1,0 +1,111 @@
+"""Single-token GQA decode attention vs a (ring-buffer) KV cache.
+
+Flash-decoding adapted to TPU: grid = (batch, kv_heads, kv_blocks); the kv
+block axis is sequential ("arbitrary") and carries the online-softmax state
+for the G = Hq/Hkv query heads of this kv head in VMEM scratch.  Cache
+validity/causality/sliding-window are evaluated from an explicit per-slot
+position array (−1 = empty slot), which is what the serving layer's ring
+buffer maintains — the kernel itself is layout-agnostic.
+
+The (G, bk) score matmul is small on the M dimension by nature of decode;
+the kernel keeps D and bk MXU-aligned which is where the FLOPs are.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bk)
+
+    kpos = kpos_ref[0]  # (bk,) int32
+    qpos = qpos_ref[0, 0]  # scalar int32
+    ok = (kpos >= 0) & (kpos <= qpos)
+    if window > 0:
+        ok &= qpos - kpos < window
+    mask = jnp.broadcast_to(ok[None, :], s.shape)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_next = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_next)
+    p = jnp.where(mask, jnp.exp(s - m_next), 0.0)
+
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    l_scr[:, :1] = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_bhsd(
+    q: jnp.ndarray,  # (B, Hkv, G, D) — grouped query heads
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    kv_positions: jnp.ndarray,  # (B, S) int32; -1 marks empty slots
+    q_position: jnp.ndarray,  # (B, 1) int32
+    *,
+    sliding_window: int = 0,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hkv, G, D = q.shape
+    S = k.shape[2]
+    bk = min(block_k, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               window=sliding_window, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention",
+    )(q, k, v, kv_positions, q_position)

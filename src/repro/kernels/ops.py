@@ -1,0 +1,107 @@
+"""jit'd wrappers exposing the Pallas kernels in model-layer layouts.
+
+These adapt (B, S, H, D) model tensors to the kernels' head-major layouts,
+enforce blocking constraints, and fall back loudly (assert) rather than
+silently when an unsupported configuration is requested.  ``interpret=True``
+runs the kernel bodies in Python on CPU (how this container validates them);
+on TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.decode_attention import decode_attention_bhsd
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _pick_block(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (prefers multiples of 128)."""
+    b = min(target, S)
+    while S % b:
+        b -= 1
+    return b
+
+
+@partial(jax.jit, static_argnames=("causal", "sliding_window", "interpret",
+                                   "block_q", "block_k"))
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    q_positions=None,  # accepted for API parity; kernel assumes arange
+    kv_positions=None,
+    causal: bool = True,
+    sliding_window: int = 0,
+    kv_valid=None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    assert kv_valid is None, "flash kernel: use the decode kernel for padded caches"
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(Sk, block_k)
+    out = flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, sliding_window=sliding_window,
+        block_q=bq, block_k=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)  # back to (B, Sq, Hq, D)
+
+
+@partial(jax.jit, static_argnames=("sliding_window", "interpret", "block_k"))
+def decode_attention(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    *,
+    kv_positions: jnp.ndarray,  # (B, S) int32, -1 empty
+    q_position: jnp.ndarray,  # (B,) int32
+    sliding_window: int = 0,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    bk = _pick_block(S, block_k)
+    out = decode_attention_bhsd(
+        q.reshape(B, Hkv, G, D),
+        k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
+        kv_positions.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
+        sliding_window=sliding_window, block_k=bk, interpret=interpret)
+    return out.reshape(B, Hq, D)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_jit(x, dt, a, Bm, Cm, chunk, interpret):
+    return ssd_scan_pallas(x, dt, a, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) post-softplus
+    A: jnp.ndarray,  # (H,) negative
+    Bm: jnp.ndarray,  # (B, S, H, N)
+    Cm: jnp.ndarray,  # (B, S, H, N)
+    *,
+    chunk: int,
+    D: Optional[jnp.ndarray] = None,
+    init_state=None,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    assert init_state is None, (
+        "pallas ssd kernel starts from zero state; use impl='xla' for "
+        "mid-sequence continuation")
+    a = (dt.astype(jnp.float32) * A.astype(jnp.float32)).astype(jnp.float32)
+    y, fin = _ssd_jit(x, dt.astype(jnp.float32), a, Bm, Cm,
+                      chunk=min(chunk, x.shape[1]), interpret=interpret)
+    if D is not None:
+        y = y + D[None, None, :, None].astype(jnp.float32) * x.astype(jnp.float32)
+    return y.astype(x.dtype), fin

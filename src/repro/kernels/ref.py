@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematically transparent O(S²)/sequential version;
+kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def ref_attention(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Sk, D)
+    v: jnp.ndarray,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32) / (D ** 0.5)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= cols <= rows
+    if sliding_window > 0:
+        mask &= rows - cols < sliding_window
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def ref_decode_attention(
+    q: jnp.ndarray,  # (B, Hkv, G, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    kv_positions: jnp.ndarray,  # (B, S) int32, -1 empty
+    q_position: jnp.ndarray,  # (B, 1) int32
+    *,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    B, Hkv, G, D = q.shape
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    qpos = q_position[:, 0][:, None]
+    ok = (kv_positions >= 0) & (kv_positions <= qpos)
+    if sliding_window > 0:
+        ok &= qpos - kv_positions < sliding_window
+    s = jnp.where(ok[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(ok[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ref_ssd(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) post-softplus
+    a: jnp.ndarray,  # (B, S, H) = dt * A
+    Bm: jnp.ndarray,  # (B, S, H, N)
+    Cm: jnp.ndarray,  # (B, S, H, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential (step-by-step) SSD recurrence — the ground truth.
+    Returns (y (B,S,H,P) fp32, final_state (B,H,P,N) fp32)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        xs, dts, as_, bs, cs = inp  # (B,H,P), (B,H), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(as_)[..., None, None]  # (B,H,1,1)
+        dBx = jnp.einsum("bh,bhn,bhp->bhpn", dts, bs, xs)
+        state = state * decay + dBx
+        y = jnp.einsum("bhn,bhpn->bhp", cs, state)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          a.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Cm.transpose(1, 0, 2, 3).astype(jnp.float32))
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    fin, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), fin

@@ -1,0 +1,108 @@
+"""Step builders + ShapeDtypeStruct input specs for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable
+ShapeDtypeStruct stand-ins for every model input — no device allocation —
+and ``build_step(cfg, kind)`` returns the function the cell lowers:
+
+  train    -> full train_step (fwd + bwd + AdamW update, donated)
+  prefill  -> forward_prefill (logits + filled DecodeCache); encoder archs
+              lower the plain encode forward (no cache exists)
+  decode   -> forward_decode (one token against the cache) == serve_step
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import (forward_decode, forward_prefill, forward_seq,
+                          init_cache, init_params)
+from repro.models.transformer import DecodeCache
+from repro.training.optimizer import make_optimizer
+from repro.training.train_loop import make_train_step
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStructs of the parameter tree (no allocation)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def opt_specs(cfg: ModelConfig, optimizer):
+    p = param_specs(cfg)
+    return jax.eval_shape(optimizer.init, p)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model-input stand-ins for one (arch × shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            specs = {"inputs": sds((B, S, cfg.d_model), jnp.float32),
+                     "labels": sds((B, S), jnp.int32)}
+        else:
+            specs = {"inputs": sds((B, S), jnp.int32),
+                     "labels": sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["vision"] = sds((B, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+        return specs
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            specs = {"inputs": sds((B, S, cfg.d_model), jnp.float32)}
+        else:
+            specs = {"inputs": sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["vision"] = sds((B, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+        return specs
+    if shape.kind == "decode":
+        return {"token": sds((B,), jnp.int32),
+                "cache": cache_specs(cfg, B, S)}
+    raise ValueError(shape.kind)
+
+
+def build_step(cfg: ModelConfig, kind: str, *, grad_accum: int = 1,
+               remat: bool = True, impl: str = "xla", unroll: bool = False,
+               logits_sharding=None, stream_sharding=None, qkv_sharding=None):
+    """Returns (fn, arg_names) for lowering."""
+    if kind == "train":
+        opt = make_optimizer("adamw", 3e-4, 100, 10_000)
+        step = make_train_step(cfg, opt, grad_accum=grad_accum, remat=remat,
+                               impl=impl, unroll=unroll,
+                               logits_sharding=logits_sharding,
+                               stream_sharding=stream_sharding,
+                               qkv_sharding=qkv_sharding)
+        return step, ("params", "opt_state", "batch")
+    if kind == "prefill":
+        if cfg.is_encoder:
+            def encode(params, batch):
+                logits, _, _ = forward_seq(params, cfg, batch["inputs"],
+                                           impl=impl, unroll=unroll,
+                                           qkv_sharding=qkv_sharding)
+                return logits
+            return encode, ("params", "batch")
+
+        def prefill(params, batch):
+            return forward_prefill(params, cfg, batch["inputs"],
+                                   cache_len=batch["inputs"].shape[1],
+                                   vision=batch.get("vision"), impl=impl,
+                                   unroll=unroll)
+        return prefill, ("params", "batch")
+    if kind == "decode":
+        def serve_step(params, token, cache):
+            return forward_decode(params, cfg, token, cache, impl=impl,
+                                  unroll=unroll)
+        return serve_step, ("params", "token", "cache")
+    raise ValueError(kind)

@@ -1,0 +1,68 @@
+"""End-to-end training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 200 --block-style skipless_merged
+
+``--smoke`` uses the reduced config (CPU-friendly); omit it on a real
+cluster to train the full architecture.  ``--mesh dxm`` lays the host's
+devices out as a data×model mesh (e.g. ``--mesh 2x2`` under
+XLA_FLAGS=--xla_force_host_platform_device_count=4).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--block-style", default=None)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--corpus", default=None, help="path to a text file")
+    ap.add_argument("--mesh", default=None, help="DxM host mesh, e.g. 2x2")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, reduce_config
+    from repro.training import DataConfig, Trainer, TrainerConfig
+    from repro.launch.mesh import make_mesh
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_config(cfg)
+    if args.block_style:
+        cfg = cfg.with_(block_style=args.block_style)
+        cfg.validate_style()
+
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+
+    tc = TrainerConfig(steps=args.steps, log_every=args.log_every,
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                       lr=args.lr, warmup=args.warmup,
+                       grad_accum=args.grad_accum, optimizer=args.optimizer,
+                       seed=args.seed)
+    dc = DataConfig(global_batch=args.batch, seq_len=args.seq_len,
+                    seed=args.seed)
+    trainer = Trainer(cfg, tc, dc, mesh=mesh, corpus_path=args.corpus)
+    print(f"training {cfg.name} [{cfg.block_style}] from step "
+          f"{trainer.start_step} to {tc.steps}", flush=True)
+    metrics = trainer.run()
+    print("final:", metrics, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+from repro.models.transformer import (
+    DecodeCache,
+    count_params,
+    forward_decode,
+    forward_prefill,
+    forward_seq,
+    init_cache,
+    init_params,
+    layer_plan,
+    lm_loss,
+)
+
+__all__ = [
+    "DecodeCache",
+    "count_params",
+    "forward_decode",
+    "forward_prefill",
+    "forward_seq",
+    "init_cache",
+    "init_params",
+    "layer_plan",
+    "lm_loss",
+]

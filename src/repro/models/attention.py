@@ -1,0 +1,167 @@
+"""Attention cores: MHA/MQA/GQA, causal & sliding-window, prefill & decode.
+
+Projections (Q/K/V/P) live in the *block* modules (``core.blocks`` /
+``models.transformer``) because the paper's merged form changes which
+projections exist.  This module only computes attention given projected
+(and RoPE'd) q/k/v.
+
+Three implementations:
+  * ``impl="xla"`` — chunked exact attention (lax.map over query chunks) so
+    the materialized score buffer is O(chunk × S_k), never O(S_q × S_k).
+    This is the path the multi-pod dry-run lowers.
+  * ``impl="pallas"`` — TPU Pallas flash-attention kernel (kernels/).
+  * ``impl="pallas_interpret"`` — same kernel, interpret mode (CPU tests).
+
+GQA is computed grouped (q reshaped to (…, n_kv, group, d)) — KV heads are
+never materialized repeated.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,  # (B, Sq) int32
+    kv_pos: jnp.ndarray,  # (B, Sk) int32
+    *,
+    causal: bool,
+    sliding_window: int,
+    kv_valid: Optional[jnp.ndarray],  # (B, Sk) bool
+) -> jnp.ndarray:
+    """Additive bias (B, 1, Sq, Sk) fp32: 0 where attendable, NEG_INF else."""
+    ok = jnp.ones((q_pos.shape[0], q_pos.shape[1], kv_pos.shape[1]), bool)
+    if causal:
+        ok &= kv_pos[:, None, :] <= q_pos[:, :, None]
+    if sliding_window > 0:
+        ok &= q_pos[:, :, None] - kv_pos[:, None, :] < sliding_window
+    if kv_valid is not None:
+        ok &= kv_valid[:, None, :]
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, :, :].astype(jnp.float32)
+
+
+def _attend_block(q, k, v, bias, scale):
+    """q (B,Sq,Hkv,G,D) k/v (B,Sk,Hkv,D) bias (B,1,Sq,Sk) -> (B,Sq,Hkv,G,D)."""
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale + bias[:, :, None, :, :]
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+
+
+def attention_core(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    q_positions: jnp.ndarray,  # (B, Sq) int32
+    kv_positions: jnp.ndarray,  # (B, Sk) int32
+    causal: bool = True,
+    sliding_window: int = 0,
+    kv_valid: Optional[jnp.ndarray] = None,  # (B, Sk) bool (padded caches)
+    query_chunk: int = 1024,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Exact softmax attention; returns (B, Sq, Hq, D) in v.dtype."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(
+            q, k, v,
+            q_positions=q_positions, kv_positions=kv_positions,
+            causal=causal, sliding_window=sliding_window, kv_valid=kv_valid,
+            interpret=(impl == "pallas_interpret"),
+        )
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    if Sq <= query_chunk or Sq % query_chunk != 0:
+        bias = _mask_bias(q_positions, kv_positions, causal=causal,
+                          sliding_window=sliding_window, kv_valid=kv_valid)
+        out = _attend_block(qg, k, v, bias, scale)
+        return out.reshape(B, Sq, Hq, D)
+
+    # chunked over query blocks: score buffer is (B, chunk, …) not (B, Sq, …)
+    n_chunks = Sq // query_chunk
+    qg_c = qg.reshape(B, n_chunks, query_chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp_c = q_positions.reshape(B, n_chunks, query_chunk).transpose(1, 0, 2)
+
+    def one_chunk(args):
+        qc, qpc = args
+        bias = _mask_bias(qpc, kv_positions, causal=causal,
+                          sliding_window=sliding_window, kv_valid=kv_valid)
+        return _attend_block(qc, k, v, bias, scale)
+
+    out = jax.lax.map(one_chunk, (qg_c, qp_c))  # (n_chunks, B, chunk, Hkv, G, D)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, D)
+    return out
+
+
+def decode_attention_core(
+    q: jnp.ndarray,  # (B, Hq, D) — single new token per sequence
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    *,
+    cache_len: jnp.ndarray,  # (B,) int32 — number of valid cache entries
+    sliding_window: int = 0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """One-token attention against a (padded) KV cache -> (B, Hq, D).
+
+    The query's position is ``cache_len`` (0-indexed next position); the
+    cache holds positions [0, cache_len).  For sliding-window archs the
+    cache may be a ring buffer — ``kv_positions`` are then supplied by the
+    cache layer via ``decode_attention_core_positions``.
+    """
+    B, S, Hkv, D = k_cache.shape
+    kv_positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return decode_attention_core_positions(
+        q, k_cache, v_cache, kv_positions=kv_positions,
+        q_position=cache_len, sliding_window=sliding_window, impl=impl,
+    )
+
+
+def decode_attention_core_positions(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    *,
+    kv_positions: jnp.ndarray,  # (B, S) int32; -1 marks empty slots
+    q_position: jnp.ndarray,  # (B,) int32
+    sliding_window: int = 0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.decode_attention(
+            q, k_cache, v_cache, kv_positions=kv_positions,
+            q_position=q_position, sliding_window=sliding_window,
+            interpret=(impl == "pallas_interpret"),
+        )
+
+    qg = q.reshape(B, Hkv, G, D)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    ok = (kv_positions >= 0) & (kv_positions[:, :] <= q_position[:, None])
+    if sliding_window > 0:
+        ok &= q_position[:, None] - kv_positions < sliding_window
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # (B, S)
+    probs = jax.nn.softmax(scores + bias[:, None, None, :], axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, Hq, D)

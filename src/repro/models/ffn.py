@@ -1,0 +1,52 @@
+"""Feed-forward networks: SwiGLU / GEGLU / GeLU-MLP.
+
+The FFN input dimension is a parameter (``d_in``) because under the paper's
+merged form (Fig 1b) the post-attention projection P is folded into the FFN
+input matrices, whose input is then the attention concat (attn_dim) rather
+than the block stream (d_model).  The fold does not change any shape when
+attn_dim == d_model (all assigned archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_ffn(key, d_in: int, d_ff: int, d_out: int, ffn_type: str,
+             dtype=jnp.float32, init_fn=dense_init, out_gain: float = 1.0):
+    if ffn_type in ("swiglu", "geglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": init_fn(k1, d_in, d_ff, dtype),
+            "w_up": init_fn(k2, d_in, d_ff, dtype),
+            "w_down": init_fn(k3, d_ff, d_out, dtype, scale=out_gain),
+        }
+    elif ffn_type == "gelu_mlp":
+        k1, k2 = jax.random.split(key)
+        return {
+            "w_in": init_fn(k1, d_in, d_ff, dtype),
+            "w_out": init_fn(k2, d_ff, d_out, dtype, scale=out_gain),
+        }
+    raise ValueError(f"unknown ffn_type {ffn_type!r}")
+
+
+def ffn_hidden(params, x, ffn_type: str):
+    """First half of the FFN: input matmul(s) + nonlinearity -> (…, d_ff)."""
+    if ffn_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if ffn_type == "swiglu" else jax.nn.gelu
+        g = x @ params["w_gate"].astype(x.dtype)
+        u = x @ params["w_up"].astype(x.dtype)
+        return act(g) * u
+    h = x @ params["w_in"].astype(x.dtype)
+    return jax.nn.gelu(h)
+
+
+def ffn_out(params, h, ffn_type: str):
+    w = params["w_down"] if ffn_type in ("swiglu", "geglu") else params["w_out"]
+    return h @ w.astype(h.dtype)
+
+
+def apply_ffn(params, x, ffn_type: str):
+    return ffn_out(params, ffn_hidden(params, x, ffn_type), ffn_type)

@@ -1,0 +1,210 @@
+"""Shared layer primitives: dtypes, inits, norms, RoPE, embeddings.
+
+All modules in this framework are pure functions over pytree params:
+``init_x(key, ...) -> params`` and ``apply_x(params, inputs, ...) -> out``.
+No module framework is used (flax is unavailable in the target container and
+pure pytrees keep the lowered HLO fully under our control).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "float64": jnp.float64,
+}
+
+
+def dtype_of(name: str):
+    return _DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, fan_out: int, dtype=jnp.float32, scale: float = 1.0):
+    """Lecun-normal style init, variance 1/fan_in (times scale^2)."""
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, (fan_in, fan_out)) * std).astype(dtype)
+
+
+def orthogonal_init(key, fan_in: int, fan_out: int, dtype=jnp.float32,
+                    scale: float = 1.0):
+    """(Semi-)orthogonal init: exactly norm-preserving linear maps.
+
+    The natural init for skipless stacks (no residual to re-center scale;
+    see He et al.) — and it makes every Q/K/V well-conditioned (cond ≈ 1),
+    which keeps the paper's merged form numerically pristine at runtime
+    (the (u·Q)(Q⁻¹K) error scales with cond(Q)·eps)."""
+    big = max(fan_in, fan_out)
+    a = jax.random.normal(key, (big, min(fan_in, fan_out)))
+    q, r = jnp.linalg.qr(a)
+    q = q * jnp.sign(jnp.diagonal(r))[None, :]  # fix sign convention
+    w = q[:fan_in, :fan_out] if fan_in >= fan_out else q[:fan_out, :fan_in].T
+    return (w * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def apply_rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_rot: int, theta: float) -> np.ndarray:
+    """inv_freq for a rotated sub-dimension of size d_rot (must be even)."""
+    assert d_rot % 2 == 0
+    return 1.0 / (theta ** (np.arange(0, d_rot, 2, dtype=np.float64) / d_rot))
+
+
+def rope_cos_sin(positions: jnp.ndarray, d_rot: int, theta: float):
+    """positions (...,) int32 -> cos/sin of shape (..., d_rot//2), fp32."""
+    inv_freq = jnp.asarray(rope_frequencies(d_rot, theta), jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., d_rot/2)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    style: str = "half",
+    theta: float = 10_000.0,
+    fraction: float = 1.0,
+) -> jnp.ndarray:
+    """Apply rotary embedding.
+
+    x: (..., seq, n_heads, d_head); positions: broadcastable to (..., seq).
+    style "half": llama layout — rotate (x1, x2) = split-in-half pairs.
+    style "chatglm2d": interleaved-pair layout on the first ``fraction`` of
+      d_head (ChatGLM's partial 2D rotary); remainder passes through.
+    style "none": identity.
+    """
+    if style == "none":
+        return x
+    d_head = x.shape[-1]
+    d_rot = int(d_head * fraction)
+    d_rot -= d_rot % 2
+    cos, sin = rope_cos_sin(positions, d_rot, theta)  # (..., seq, d_rot/2)
+    # broadcast over the heads axis: (..., seq, 1, d_rot/2)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    xr32 = xr.astype(jnp.float32)
+    if style == "half":
+        x1, x2 = jnp.split(xr32, 2, axis=-1)
+        out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    elif style == "chatglm2d":
+        x1 = xr32[..., 0::2]
+        x2 = xr32[..., 1::2]
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        out = jnp.stack([r1, r2], axis=-1).reshape(xr32.shape)
+    else:
+        raise ValueError(f"unknown rope style {style!r}")
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1) if d_rot < d_head else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": embed_init(key, vocab, dim, dtype)}
+
+
+def apply_embedding(params, tokens: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def apply_unembedding(params, x: jnp.ndarray):
+    """Logits in fp32 (loss numerics) WITHOUT materializing an fp32 copy of
+    the (V, d) table: multiply in the table's dtype, accumulate fp32
+    (preferred_element_type). With bf16 serving weights this saves a
+    V·d·4-byte temp per step (§Perf H7 diagnosis)."""
+    t = params["table"]
+    return jnp.einsum("...d,vd->...v", x.astype(t.dtype), t,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# hubert-style depthwise conv positional embedding (encoder, rope_style none)
+# ---------------------------------------------------------------------------
+
+def init_conv_pos(key, dim: int, width: int, dtype=jnp.float32):
+    # depthwise conv: (width, 1, dim) feature-group-count = dim
+    std = 1.0 / np.sqrt(width)
+    k = (jax.random.normal(key, (width, 1, dim)) * std).astype(dtype)
+    return {"kernel": k, "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_conv_pos(params, x: jnp.ndarray):
+    """x (B, S, D) -> x + gelu(depthwise_conv(x)) (wav2vec2 positional conv)."""
+    dt = x.dtype
+    dim = x.shape[-1]
+    width = params["kernel"].shape[0]
+    pad = (width // 2, width - 1 - width // 2)
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        params["kernel"].astype(jnp.float32),
+        window_strides=(1,),
+        padding=(pad,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=dim,
+    )
+    y = jax.nn.gelu(y + params["bias"].astype(jnp.float32))
+    return x + y.astype(dt)

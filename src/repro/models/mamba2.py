@@ -1,0 +1,255 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked scan, pure JAX/XLA path.
+
+Implements the SSD algorithm of arXiv:2405.21060: within-chunk outputs via
+masked (decay-weighted) matmuls — the "duality" with attention, which is what
+makes this MXU-friendly — plus a sequential inter-chunk recurrence carrying
+the (H, P, N) state.  A Pallas kernel for the intra-chunk compute lives in
+``kernels/ssd_scan.py``; this module is the XLA oracle path used by the
+dry-run and smoke tests (``impl="xla"``).
+
+Block layout (mamba_ssm reference):
+  in_proj -> [z (d_inner) | xBC (d_inner + 2·G·N) | dt (H)]
+  causal depthwise conv over xBC, silu
+  SSD(x, dt, A, B, C) + D·x
+  gated RMSNorm: norm(y * silu(z))
+  out_proj -> d_model
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, apply_rmsnorm
+
+
+class SSMState(NamedTuple):
+    ssm: jnp.ndarray  # (B, H, P, N)
+    conv: jnp.ndarray  # (B, W-1, conv_channels)
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner = cfg.ssm_d_inner
+    H = cfg.ssm_n_heads
+    G, N, W = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_conv_width
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    dt = np.exp(np.random.RandomState(0).uniform(np.log(1e-3), np.log(1e-1), H))
+    dt_bias = dt + np.log(-np.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(k1, d, d_in_proj, dtype),
+        "conv_kernel": (jax.random.normal(k2, (W, conv_channels(cfg))) / np.sqrt(W)).astype(dtype),
+        "conv_bias": jnp.zeros((conv_channels(cfg),), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.asarray(dt_bias, dtype),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": dense_init(k3, d_inner, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan (sequence mode)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) — post-softplus, positive
+    A: jnp.ndarray,  # (H,) — negative
+    Bm: jnp.ndarray,  # (B, S, H, N) — already broadcast G->H
+    Cm: jnp.ndarray,  # (B, S, H, N)
+    *,
+    chunk: int,
+    D: Optional[jnp.ndarray] = None,  # (H,)
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+    impl: str = "xla",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = chunk if S % chunk == 0 else S
+    nc = S // L
+    dtype = x.dtype
+
+    a = (dt * A).astype(jnp.float32)  # (B, S, H), <= 0
+
+    def c(t, tail_shape):
+        return t.reshape((B_, nc, L) + tail_shape)
+
+    x_c = c(x, (H, P))
+    a_c = c(a, (H,))
+    dt_c = c(dt.astype(jnp.float32), (H,))
+    B_c = c(Bm, (H, N))
+    C_c = c(Cm, (H, N))
+
+    state0 = (jnp.zeros((B_, H, P, N), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.ssd_scan(x, dt, A, Bm, Cm, chunk=L, D=D,
+                             init_state=init_state,
+                             interpret=(impl == "pallas_interpret"))
+
+    def body(carry, inp):
+        xc, ac, dtc, Bc, Cc = inp  # leading axis B_
+        A_cum = jnp.cumsum(ac, axis=1)  # (B, L, H)
+        a_sum = A_cum[:, -1, :]  # (B, H)
+        decay_out = jnp.exp(A_cum)  # (B, L, H)
+        decay_end = jnp.exp(a_sum[:, None, :] - A_cum)  # (B, L, H)
+
+        # intra-chunk (the "dual" attention-like term)
+        CB = jnp.einsum("blhn,bmhn->blmh", Cc, Bc, preferred_element_type=jnp.float32)
+        seg = A_cum[:, :, None, :] - A_cum[:, None, :, :]  # (B, L, M, H)
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        kern = jnp.where(mask, jnp.exp(seg), 0.0) * CB * dtc[:, None, :, :]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", kern, xc.astype(jnp.float32))
+
+        # inter-chunk (state entering this chunk)
+        y_inter = jnp.einsum("blhn,bhpn->blhp", Cc.astype(jnp.float32), carry)
+        y_inter = y_inter * decay_out[..., None]
+
+        # state update
+        dBx = jnp.einsum("blh,blh,blhn,blhp->bhpn", decay_end, dtc,
+                         Bc.astype(jnp.float32), xc.astype(jnp.float32))
+        new_state = carry * jnp.exp(a_sum)[:, :, None, None] + dBx
+
+        return new_state, (y_intra + y_inter)
+
+    # scan over chunks (chunk axis must lead)
+    xs = tuple(t.transpose(1, 0, *range(2, t.ndim)) for t in (x_c, a_c, dt_c, B_c, C_c))
+    final_state, ys = jax.lax.scan(body, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, P)
+    if D is not None:
+        y = y + D[None, None, :, None].astype(jnp.float32) * x.astype(jnp.float32)
+    return y.astype(dtype), final_state
+
+
+def ssd_step(
+    x: jnp.ndarray,  # (B, H, P)
+    dt: jnp.ndarray,  # (B, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, H, N)
+    Cm: jnp.ndarray,  # (B, H, N)
+    state: jnp.ndarray,  # (B, H, P, N) fp32
+    D: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. Returns (y (B,H,P), new_state)."""
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32 * A)[:, :, None, None]  # (B, H, 1, 1)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt32, Bm.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    new_state = state * decay + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), new_state)
+    if D is not None:
+        y = y + D[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full mixer (projections + conv + SSD + gate + norm)
+# ---------------------------------------------------------------------------
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d_inner = cfg.ssm_d_inner
+    gn = cfg.ssm_n_groups * cfg.ssm_state
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xBC, dt
+
+
+def _broadcast_groups(t: jnp.ndarray, cfg: ModelConfig):
+    """(…, G, N) -> (…, H, N) by repeating each group across its heads."""
+    H, G = cfg.ssm_n_heads, cfg.ssm_n_groups
+    reps = H // G
+    return jnp.repeat(t, reps, axis=-2)
+
+
+def apply_mamba2_seq(
+    params, x: jnp.ndarray, cfg: ModelConfig, *,
+    init_state: Optional[SSMState] = None, return_state: bool = False,
+    impl: str = "xla",
+):
+    """Sequence mode (train / prefill). x (B,S,d) -> (B,S,d) [, SSMState]."""
+    B, S, d = x.shape
+    H, P, N, G, W = (cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                     cfg.ssm_n_groups, cfg.ssm_conv_width)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt_raw = _split_in_proj(cfg, zxbcdt)
+
+    # causal depthwise conv over xBC
+    kern = params["conv_kernel"].astype(jnp.float32)  # (W, C)
+    if init_state is not None:
+        xBC_in = jnp.concatenate([init_state.conv.astype(xBC.dtype), xBC], axis=1)
+    else:
+        xBC_in = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    conv_tail = xBC_in[:, -(W - 1):, :] if W > 1 else xBC_in[:, :0, :]
+    xBC32 = xBC_in.astype(jnp.float32)
+    conv = sum(xBC32[:, i:i + S, :] * kern[i][None, None, :] for i in range(W))
+    xBC = jax.nn.silu(conv + params["conv_bias"].astype(jnp.float32)).astype(x.dtype)
+
+    x_ssm, B_in, C_in = jnp.split(
+        xBC, [cfg.ssm_d_inner, cfg.ssm_d_inner + G * N], axis=-1)
+    x_h = x_ssm.reshape(B, S, H, P)
+    Bm = _broadcast_groups(B_in.reshape(B, S, G, N), cfg)
+    Cm = _broadcast_groups(C_in.reshape(B, S, G, N), cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, fin = ssd_chunked(x_h, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                         D=params["D"].astype(jnp.float32),
+                         init_state=None if init_state is None else init_state.ssm,
+                         impl=impl)
+    y = y.reshape(B, S, cfg.ssm_d_inner)
+    y = apply_rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(y.dtype)
+    if return_state:
+        return out, SSMState(ssm=fin, conv=conv_tail.astype(jnp.float32))
+    return out
+
+
+def apply_mamba2_step(params, x: jnp.ndarray, cfg: ModelConfig, state: SSMState,
+                      ) -> Tuple[jnp.ndarray, SSMState]:
+    """Decode mode: x (B, d) one token -> (B, d), new state."""
+    B, d = x.shape
+    H, P, N, G, W = (cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                     cfg.ssm_n_groups, cfg.ssm_conv_width)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt_raw = _split_in_proj(cfg, zxbcdt)
+
+    window = jnp.concatenate([state.conv, xBC.astype(jnp.float32)[:, None, :]], axis=1)
+    kern = params["conv_kernel"].astype(jnp.float32)
+    conv = jnp.einsum("bwc,wc->bc", window, kern) + params["conv_bias"].astype(jnp.float32)
+    new_conv = window[:, 1:, :]
+    xBC = jax.nn.silu(conv).astype(x.dtype)
+
+    x_ssm, B_in, C_in = jnp.split(
+        xBC, [cfg.ssm_d_inner, cfg.ssm_d_inner + G * N], axis=-1)
+    x_h = x_ssm.reshape(B, H, P)
+    Bm = _broadcast_groups(B_in.reshape(B, G, N), cfg)
+    Cm = _broadcast_groups(C_in.reshape(B, G, N), cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, new_ssm = ssd_step(x_h, dt, A, Bm, Cm, state.ssm,
+                          D=params["D"].astype(jnp.float32))
+    y = y.reshape(B, cfg.ssm_d_inner)
+    y = apply_rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, SSMState(ssm=new_ssm, conv=new_conv)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    return SSMState(
+        ssm=jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)), jnp.float32),
+    )

@@ -1,0 +1,827 @@
+"""Transformer stacks for every assigned family, in all paper block styles.
+
+Block styles (paper mapping):
+  standard         pre-norm residual blocks (public-literature baseline)
+  skipless         Fig 1(a): no skips / no norms, full Q,K,V,P
+  skipless_merged  Fig 1(b): Q and P removed.  Serial layout is the paper's
+                   exact rewrite (see core/merge.py); parallel layout is the
+                   paper's Fig 3(a) architecture.
+  residual_qpfree  Fig 4: Q/P-free blocks *with* norms and skips (paper §5)
+
+Layer kinds: "attn" (self-attn + FFN/MoE), "cross" (vlm cross-attn + FFN),
+"ssm" (mamba2 mixer), "hybrid" (attn ∥ ssm heads + FFN).
+
+All stacks scan over layer-stacked params so the lowered HLO is O(1) in
+depth (required for tractable 512-device compiles; also the production
+choice). The VLM interleave (cross-attn every Nth layer) scans over
+"super-blocks" of (N-1) self layers + 1 cross layer.
+
+Modes:
+  forward_train / forward_encode : full-sequence, returns logits (+aux)
+  forward_prefill                : full-sequence, fills a DecodeCache
+  forward_decode                 : one token vs DecodeCache (serve_step body)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    apply_conv_pos,
+    apply_embedding,
+    apply_rmsnorm,
+    apply_rope,
+    apply_unembedding,
+    dense_init,
+    dtype_of,
+    init_conv_pos,
+    init_embedding,
+    init_rmsnorm,
+    orthogonal_init,
+)
+
+
+def _init_fn_for(cfg: ModelConfig):
+    """Orthogonal init for skipless styles (norm-preserving, cond(Q)≈1 so
+    the merged runtime is numerically clean); lecun-normal otherwise."""
+    if cfg.init_style == "orthogonal":
+        return orthogonal_init
+    if cfg.init_style == "normal":
+        return dense_init
+    return (orthogonal_init if cfg.block_style in ("skipless", "skipless_merged")
+            else dense_init)
+
+# ---------------------------------------------------------------------------
+# layer kind layout per config
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> Dict[str, Any]:
+    """Describes how layers are stacked/scanned for this config."""
+    if cfg.family == "ssm":
+        return {"kind": "ssm", "n": cfg.n_layers}
+    if cfg.family == "hybrid":
+        return {"kind": "hybrid", "n": cfg.n_layers}
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_every
+        assert cfg.n_layers % per == 0
+        return {"kind": "vlm", "n_groups": cfg.n_layers // per, "self_per_group": per - 1}
+    return {"kind": "attn", "n": cfg.n_layers}
+
+
+# ---------------------------------------------------------------------------
+# per-layer param init
+# ---------------------------------------------------------------------------
+
+def _init_attn_proj(key, cfg: ModelConfig, dtype, merged: bool, cross: bool):
+    """Q/K/V/P params for one attention sub-module.
+
+    Merged styles omit the eliminated pair per ``cfg.merged_variant``
+    (paper Table 1): "qp" drops wq+wp, "kp" drops wk+wp, "vp" drops wv+wp.
+    Cross-attention always keeps wk/wv (they read the vision tokens, which
+    are not in the rotated stream basis) — only "qp" is legal for cross.
+    """
+    d, ad, kd = cfg.d_model, cfg.attn_dim, cfg.kv_dim
+    init_fn = _init_fn_for(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    variant = cfg.merged_variant if merged else ""
+    if variant and cross and variant != "qp":
+        raise ValueError("cross-attention supports only the qp merged variant")
+    if variant != "qp":
+        p["wq"] = init_fn(ks[0], d, ad, dtype)
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((ad,), dtype)
+    if variant != "kp":
+        p["wk"] = init_fn(ks[1], d, kd, dtype)
+        if cfg.qkv_bias:
+            p["bk"] = jnp.zeros((kd,), dtype)
+    if variant != "vp":
+        p["wv"] = init_fn(ks[2], d, kd, dtype)
+        if cfg.qkv_bias:
+            p["bv"] = jnp.zeros((kd,), dtype)
+    if not merged:
+        p["wp"] = init_fn(ks[3], ad, d, dtype)
+    return p
+
+
+def _needs_norms(style: str) -> bool:
+    return style in ("standard", "residual_qpfree")
+
+
+def _is_merged(style: str) -> bool:
+    return style in ("skipless_merged", "residual_qpfree")
+
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype) -> Dict[str, Any]:
+    style = cfg.block_style
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    merged = _is_merged(style)
+
+    if kind in ("attn", "cross", "hybrid"):
+        p["attn"] = _init_attn_proj(ks[0], cfg, dtype, merged, cross=(kind == "cross"))
+    if kind == "hybrid":
+        # hybrid merged style removes Q only (P must stay: FFN input is the
+        # fused attn+ssm stream — see DESIGN.md §5), so keep wp always.
+        if merged and "wp" not in p["attn"]:
+            p["attn"]["wp"] = dense_init(ks[5], cfg.attn_dim, cfg.d_model, dtype)
+        p["ssm"] = m2.init_mamba2(ks[1], cfg, dtype)
+    if kind == "ssm":
+        p["ssm"] = m2.init_mamba2(ks[1], cfg, dtype)
+
+    if cfg.has_ffn and kind != "ssm":
+        # merged serial dense/moe/vlm: FFN input dim is attn_dim (P folded in)
+        ffn_in = cfg.attn_dim if (merged and not cfg.parallel_block and kind != "hybrid") else cfg.d_model
+        if cfg.n_experts and kind == "attn":
+            p["moe"] = moe_mod.init_moe(ks[2], ffn_in, cfg.d_ff, cfg.d_model,
+                                        cfg.n_experts, cfg.ffn_type, dtype)
+        else:
+            p["ffn"] = ffn_mod.init_ffn(ks[2], ffn_in, cfg.d_ff, cfg.d_model,
+                                        cfg.ffn_type, dtype,
+                                        init_fn=_init_fn_for(cfg),
+                                        out_gain=cfg.ffn_out_gain)
+
+    if _needs_norms(style):
+        p["norm1"] = init_rmsnorm(cfg.d_model, dtype)
+        if cfg.has_ffn and kind != "ssm":
+            p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    params["embed"] = init_embedding(keys[0], cfg.padded_vocab, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(keys[1], cfg.padded_vocab, cfg.d_model, dtype)
+
+    def stack_layers(k, n, kind):
+        lk = jax.random.split(k, n)
+        layers = [init_block(lki, cfg, kind, dtype) for lki in lk]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    if plan["kind"] == "vlm":
+        ng, spg = plan["n_groups"], plan["self_per_group"]
+        sk = jax.random.split(keys[2], ng)
+        groups = [stack_layers(ski, spg, "attn") for ski in sk]
+        params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)  # (ng, spg, …)
+        params["cross_layers"] = stack_layers(keys[3], ng, "cross")  # (ng, …)
+    else:
+        params["layers"] = stack_layers(keys[2], plan["n"], plan["kind"])
+
+    if _needs_norms(cfg.block_style):
+        params["final_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    if cfg.conv_pos_width:
+        params["conv_pos"] = init_conv_pos(keys[4], cfg.d_model, cfg.conv_pos_width, dtype)
+    return params
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# attention sub-module apply (projections + rope + core)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(lp, cfg: ModelConfig, u, kv_src, merged: bool):
+    """u: (B,S,d) query-side stream; kv_src: (B,Sk,d) key/value source.
+
+    In merged styles the projection named by ``cfg.merged_variant`` is the
+    identity: the stream is already in that projection's output basis
+    (paper Fig 2b/c/d).
+    """
+    ad, kd, Dh = cfg.attn_dim, cfg.kv_dim, cfg.d_head
+    variant = cfg.merged_variant if merged else ""
+
+    def proj(name, src):
+        y = src @ lp["w" + name].astype(u.dtype)
+        if "b" + name in lp:
+            y = y + lp["b" + name].astype(u.dtype)
+        return y
+
+    q = u if variant == "qp" else proj("q", u)
+    k = kv_src if variant == "kp" else proj("k", kv_src)
+    v = kv_src if variant == "vp" else proj("v", kv_src)
+    B, Sq = u.shape[0], u.shape[1]
+    Sk = kv_src.shape[1]
+    q = q.reshape(B, Sq, cfg.n_heads, Dh)
+    k = k.reshape(B, Sk, cfg.n_kv_heads, Dh)
+    v = v.reshape(B, Sk, cfg.n_kv_heads, Dh)
+    return q, k, v
+
+
+def _self_attention_seq(lp, cfg: ModelConfig, u, positions, merged: bool,
+                        impl: str, qkv_sharding=None):
+    q, k, v = _project_qkv(lp, cfg, u, u, merged)
+    if qkv_sharding is not None:
+        # merged styles lose the TP sharding anchor for q (no wq matmul to
+        # propagate head-sharding from): without this constraint GSPMD
+        # computes attention replicated over the model axis (§Perf)
+        q = jax.lax.with_sharding_constraint(q, qkv_sharding)
+        k = jax.lax.with_sharding_constraint(k, qkv_sharding)
+        v = jax.lax.with_sharding_constraint(v, qkv_sharding)
+    q = apply_rope(q, positions, style=cfg.rope_style, theta=cfg.rope_theta,
+                   fraction=cfg.rope_fraction)
+    k = apply_rope(k, positions, style=cfg.rope_style, theta=cfg.rope_theta,
+                   fraction=cfg.rope_fraction)
+    out = attn_mod.attention_core(
+        q, k, v, q_positions=positions, kv_positions=positions,
+        causal=cfg.causal, sliding_window=cfg.sliding_window, impl=impl,
+        query_chunk=cfg.query_chunk or q.shape[1])
+    B, S = u.shape[0], u.shape[1]
+    return out.reshape(B, S, cfg.attn_dim), (k, v)
+
+
+def _cross_attention_seq(lp, cfg: ModelConfig, u, vision, merged: bool, impl: str):
+    """Cross-attn: queries from text stream, K/V from vision tokens (no rope)."""
+    q, k, v = _project_qkv(lp, cfg, u, vision, merged)
+    B, S = u.shape[0], u.shape[1]
+    nv = vision.shape[1]
+    qpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    kpos = jnp.broadcast_to(jnp.arange(nv, dtype=jnp.int32), (B, nv))
+    out = attn_mod.attention_core(q, k, v, q_positions=qpos, kv_positions=kpos,
+                                  causal=False, sliding_window=0, impl=impl,
+                                  query_chunk=cfg.query_chunk or q.shape[1])
+    return out.reshape(B, S, cfg.attn_dim), (k, v)
+
+
+def _attn_out_proj(lp, cat):
+    return cat @ lp["wp"].astype(cat.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN dispatch (dense or MoE)
+# ---------------------------------------------------------------------------
+
+def _apply_ffn_or_moe(p, cfg: ModelConfig, x, dropless: bool = False):
+    """Returns (out, aux_loss)."""
+    if "moe" in p:
+        out, aux = moe_mod.apply_moe(
+            p["moe"], x, n_experts=cfg.n_experts,
+            experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor, ffn_type=cfg.ffn_type,
+            dropless=dropless, impl=cfg.moe_impl,
+            group_size=cfg.moe_group or x.shape[0] * x.shape[1])
+        return out, aux
+    return ffn_mod.apply_ffn(p["ffn"], x, cfg.ffn_type), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# one block, sequence mode
+# ---------------------------------------------------------------------------
+
+def apply_block_seq(p, cfg: ModelConfig, kind: str, u, ctx) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Returns (out_stream, aux_loss, kv_for_cache)."""
+    style = cfg.block_style
+    merged = _is_merged(style)
+    impl = ctx.get("impl", "xla")
+    positions = ctx["positions"]
+    aux = jnp.float32(0.0)
+    kv = None
+
+    if kind == "ssm":
+        if style == "standard":
+            out = u + m2.apply_mamba2_seq(p["ssm"], apply_rmsnorm(p["norm1"], u), cfg, impl=impl) \
+                if "norm1" in p else u + m2.apply_mamba2_seq(p["ssm"], u, cfg, impl=impl)
+        else:  # skipless ssm (no paper technique applicable)
+            out = m2.apply_mamba2_seq(p["ssm"], u, cfg, impl=impl)
+        return out, aux, None
+
+    def attn_fn(x):
+        nonlocal kv
+        if kind == "cross":
+            cat, kv_ = _cross_attention_seq(p["attn"], cfg, x, ctx["vision"], merged, impl)
+        else:
+            cat, kv_ = _self_attention_seq(p["attn"], cfg, x, positions, merged, impl)
+        kv = kv_
+        return cat
+
+    def mixer_fn(x):
+        """kind-specific token mixer producing a d_model stream delta."""
+        cat = attn_fn(x)
+        if kind == "hybrid":
+            a = _attn_out_proj(p["attn"], cat)
+            s = m2.apply_mamba2_seq(p["ssm"], x, cfg, impl=impl)
+            return 0.5 * (a + s)
+        if merged:
+            return cat  # no P; FFN input matrices carry the P fold
+        return _attn_out_proj(p["attn"], cat)
+
+    if style == "standard":
+        if cfg.parallel_block:
+            n = apply_rmsnorm(p["norm1"], u)
+            f, aux = _apply_ffn_or_moe(p, cfg, n)
+            out = u + mixer_fn(n) + f
+        else:
+            h = u + mixer_fn(apply_rmsnorm(p["norm1"], u))
+            f, aux = _apply_ffn_or_moe(p, cfg, apply_rmsnorm(p["norm2"], h))
+            out = h + f
+    elif style == "residual_qpfree":
+        if cfg.parallel_block:
+            n = apply_rmsnorm(p["norm1"], u)
+            f, aux = _apply_ffn_or_moe(p, cfg, n)
+            out = u + mixer_fn(n) + f
+        else:
+            h = u + mixer_fn(apply_rmsnorm(p["norm1"], u))
+            f, aux = _apply_ffn_or_moe(p, cfg, apply_rmsnorm(p["norm2"], h))
+            out = h + f
+    elif style == "skipless":
+        if cfg.parallel_block:
+            f, aux = _apply_ffn_or_moe(p, cfg, u)
+            out = mixer_fn(u) + f
+        else:
+            mid = mixer_fn(u)
+            out, aux = _apply_ffn_or_moe(p, cfg, mid)
+    elif style == "skipless_merged":
+        if cfg.parallel_block:
+            f, aux = _apply_ffn_or_moe(p, cfg, u)
+            out = mixer_fn(u) + f  # Fig 3(a): cat adds directly (no P)
+        else:
+            mid = mixer_fn(u)  # = cat for dense/moe/vlm; fused for hybrid
+            out, aux = _apply_ffn_or_moe(p, cfg, mid)
+        if "b_out" in p:  # folded b_q of the NEXT block (affine merge)
+            out = out + p["b_out"].astype(out.dtype)
+    else:
+        raise ValueError(style)
+
+    return out, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / encode / prefill)
+# ---------------------------------------------------------------------------
+
+def _scan_blocks_seq(params, cfg: ModelConfig, h, ctx, collect_kv: bool,
+                     remat: bool = False, unroll: bool = False):
+    plan = layer_plan(cfg)
+    aux0 = jnp.float32(0.0)
+    u = True if unroll else 1
+
+    def block_fn(kind):
+        def f(carry, lp):
+            h, aux = carry
+            out, a, kv = apply_block_seq(lp, cfg, kind, h, ctx)
+            if ctx.get("stream_sharding") is not None:
+                # sequence parallelism on the layer-boundary stream: the
+                # saved-for-backward carries shard over (dp, seq-tp) instead
+                # of being replicated across the model axis (§Perf H6)
+                out = jax.lax.with_sharding_constraint(
+                    out, ctx["stream_sharding"])
+            return (out, aux + a), (kv if collect_kv else None)
+        if remat == "dots":
+            # partial remat: keep matmul outputs, recompute the cheap
+            # elementwise/softmax glue — trades some of full-remat's
+            # recompute FLOPs for modest extra saved bytes (§Perf H7b)
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies.dots_saveable,
+                prevent_cse=False)
+        if remat:
+            return jax.checkpoint(f, prevent_cse=False)
+        return f
+
+    if plan["kind"] == "vlm":
+        def group_fn(carry, gp):
+            (h, aux) = carry
+            (h, aux), kvs_self = jax.lax.scan(block_fn("attn"), (h, aux),
+                                              gp["self"], unroll=u)
+            (h, aux), kv_cross = block_fn("cross")((h, aux), gp["cross"])
+            return (h, aux), (kvs_self, kv_cross)
+        gparams = {"self": params["layers"], "cross": params["cross_layers"]}
+        (h, aux), kvs = jax.lax.scan(group_fn, (h, aux0), gparams, unroll=u)
+        return h, aux, kvs
+    else:
+        (h, aux), kvs = jax.lax.scan(block_fn(plan["kind"]), (h, aux0),
+                                     params["layers"], unroll=u)
+        return h, aux, kvs
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens_or_frames):
+    cdt = dtype_of(cfg.dtype)
+    if tokens_or_frames.dtype in (jnp.int32, jnp.int64):
+        h = apply_embedding(params["embed"], tokens_or_frames, cdt)
+        if cfg.block_style in ("skipless", "skipless_merged"):
+            # skipless stacks have no residual to carry scale, and GLU FFNs
+            # attenuate sub-unit signals quadratically (silu(g)·u ~ 0.5·s²),
+            # so 0.02-std embeddings collapse to zero logits and zero grads.
+            # Scale the embedding output to the GLU fixed point (std ≈ 2,
+            # where silu(g)·u sustains its input scale); He et al. use
+            # comparable signal-preserving inits for skipless nets.
+            h = h * (2.0 / 0.02)
+    else:
+        h = tokens_or_frames.astype(cdt)  # stubbed modality frontend output
+    if "conv_pos" in params:
+        h = apply_conv_pos(params["conv_pos"], h)
+    # merged models: frame inputs can't fold Q_0 into an embedding table, so
+    # the merge keeps Q_0 as an explicit input projection (see core/merge.py)
+    if "input_proj" in params:
+        h = h @ params["input_proj"].astype(h.dtype)
+    if "embed_bias" in params:  # folded b_q of the first block (affine merge)
+        h = h + params["embed_bias"].astype(h.dtype)
+    return h
+
+
+def forward_seq(params, cfg: ModelConfig, inputs, *, positions=None,
+                vision=None, impl: str = "xla", remat: bool = False,
+                collect_kv: bool = False, unroll: bool = False,
+                stream_sharding=None, qkv_sharding=None):
+    """Full-sequence forward. inputs: int tokens (B,S) or frames (B,S,d)."""
+    B, S = inputs.shape[0], inputs.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = embed_inputs(params, cfg, inputs)
+    ctx = {"positions": positions, "vision": None if vision is None else
+           vision.astype(h.dtype), "impl": impl,
+           "stream_sharding": stream_sharding, "qkv_sharding": qkv_sharding}
+    h, aux, kvs = _scan_blocks_seq(params, cfg, h, ctx, collect_kv, remat,
+                                   unroll=unroll)
+    if "final_norm" in params:
+        h = apply_rmsnorm(params["final_norm"], h)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = apply_unembedding(table, h)
+    return logits, aux, kvs
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray, *, z_loss: float = 1e-4,
+            ignore_index: int = -100, vocab_size: int = 0):
+    """Token-mean cross entropy (fp32) + z-loss. labels (B,S) int32.
+
+    ``vocab_size``: logical vocab — logits for padded ids (>= vocab_size)
+    are masked out of the softmax (see ModelConfig.padded_vocab)."""
+    logits = logits.astype(jnp.float32)
+    if vocab_size and vocab_size < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) < vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode cache
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    k: Optional[jnp.ndarray]  # (L, B, Sc, Hkv, Dh) — Sc = window or max_len
+    v: Optional[jnp.ndarray]
+    kv_pos: Optional[jnp.ndarray]  # (B, Sc) int32, -1 = empty (shared across layers)
+    length: jnp.ndarray  # (B,) int32 — tokens generated so far (= next position)
+    ssm: Optional[m2.SSMState]  # stacked (L, …) for ssm/hybrid
+    cross_k: Optional[jnp.ndarray]  # (Lc, B, nv, Hkv, Dh)
+    cross_v: Optional[jnp.ndarray]
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Shapes for an empty cache (used by init and by input_specs)."""
+    plan = layer_plan(cfg)
+    cdt = dtype_of(cfg.dtype)
+    Sc = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    spec: Dict[str, Any] = {}
+    n_attn_layers = 0
+    if plan["kind"] in ("attn", "hybrid"):
+        n_attn_layers = plan["n"]
+    elif plan["kind"] == "vlm":
+        n_attn_layers = plan["n_groups"] * plan["self_per_group"]
+    if n_attn_layers:
+        spec["k"] = ((n_attn_layers, batch, Sc, cfg.n_kv_heads, cfg.d_head), cdt)
+        spec["v"] = spec["k"]
+        spec["kv_pos"] = ((batch, Sc), jnp.int32)
+    spec["length"] = ((batch,), jnp.int32)
+    if cfg.ssm_state:
+        n_ssm = plan["n"]
+        spec["ssm"] = {
+            "ssm": ((n_ssm, batch, cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": ((n_ssm, batch, cfg.ssm_conv_width - 1, m2.conv_channels(cfg)), jnp.float32),
+        }
+    if plan["kind"] == "vlm":
+        spec["cross_k"] = ((plan["n_groups"], batch, cfg.n_vision_tokens,
+                            cfg.n_kv_heads, cfg.d_head), cdt)
+        spec["cross_v"] = spec["cross_k"]
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> DecodeCache:
+    spec = cache_spec(cfg, batch, max_len)
+
+    def z(name, fill=0):
+        if name not in spec:
+            return None
+        sh, dt = spec[name]
+        return jnp.full(sh, fill, dt)
+
+    ssm = None
+    if "ssm" in spec:
+        ssm = m2.SSMState(
+            ssm=jnp.zeros(spec["ssm"]["ssm"][0], jnp.float32),
+            conv=jnp.zeros(spec["ssm"]["conv"][0], jnp.float32),
+        )
+    return DecodeCache(
+        k=z("k"), v=z("v"),
+        kv_pos=None if "kv_pos" not in spec else jnp.full(spec["kv_pos"][0], -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+        ssm=ssm, cross_k=z("cross_k"), cross_v=z("cross_v"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also fills the cache
+# ---------------------------------------------------------------------------
+
+def forward_prefill(params, cfg: ModelConfig, inputs, *, cache_len: int,
+                    vision=None, impl: str = "xla", unroll: bool = False,
+                    qkv_sharding=None):
+    """Returns (last_token_logits (B,V), DecodeCache)."""
+    B, S = inputs.shape[0], inputs.shape[1]
+    logits, aux, kvs = forward_seq(params, cfg, inputs, vision=vision,
+                                   impl=impl, collect_kv=True, unroll=unroll,
+                                   qkv_sharding=qkv_sharding)
+    cache = init_cache(cfg, B, cache_len)
+    Sc = cache.k.shape[2] if cache.k is not None else 0
+
+    def place(kv_stacked):
+        # kv_stacked: (L, B, S, Hkv, Dh) -> keep the last Sc positions
+        if S >= Sc:
+            return kv_stacked[:, :, S - Sc:, :, :]
+        pad = [(0, 0), (0, 0), (0, Sc - S), (0, 0), (0, 0)]
+        return jnp.pad(kv_stacked, pad)
+
+    new = cache._replace(length=jnp.full((B,), S, jnp.int32))
+    plan = layer_plan(cfg)
+    if plan["kind"] == "vlm":
+        kv_self, kv_cross = kvs  # ((ng, spg, B,S,H,D)×2, (ng, B,nv,H,D)×2)
+        ks, vs = kv_self
+        ng, spg = ks.shape[0], ks.shape[1]
+        ks = ks.reshape(ng * spg, *ks.shape[2:])
+        vs = vs.reshape(ng * spg, *vs.shape[2:])
+        new = new._replace(k=place(ks), v=place(vs),
+                           cross_k=kv_cross[0], cross_v=kv_cross[1])
+    elif cfg.has_attention:
+        ks, vs = kvs
+        new = new._replace(k=place(ks), v=place(vs))
+    if new.kv_pos is not None:
+        pos = jnp.arange(Sc, dtype=jnp.int32)[None, :] + max(S - Sc, 0)
+        valid = pos < S
+        new = new._replace(kv_pos=jnp.where(valid, pos, -1).astype(jnp.int32) *
+                           jnp.ones((B, 1), jnp.int32))
+    if cfg.ssm_state:
+        # re-run mamba path collecting final states (cheap relative to attn)
+        ssm = _prefill_ssm_states(params, cfg, inputs, vision, impl, unroll)
+        new = new._replace(ssm=ssm)
+    return logits[:, -1, :], new
+
+
+def _prefill_ssm_states(params, cfg: ModelConfig, inputs, vision, impl,
+                        unroll: bool = False):
+    """Second pass over ssm/hybrid layers to collect final SSM states.
+
+    Exactness note: for ``hybrid``/``ssm`` families the stream must be
+    identical to the main pass — it is, because we rerun the same blocks; we
+    just additionally thread ``return_state``. Implemented as a dedicated scan
+    to keep the common (attention-only) prefill path free of SSM plumbing.
+    """
+    B, S = inputs.shape[0], inputs.shape[1]
+    h = embed_inputs(params, cfg, inputs)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ctx = {"positions": positions, "vision": vision, "impl": impl}
+
+    def f(carry, lp):
+        h = carry
+        kind = layer_plan(cfg)["kind"]
+        # mirror apply_block_seq but thread state out of the ssm mixer
+        if kind == "ssm":
+            if cfg.block_style == "standard":
+                delta, st = m2.apply_mamba2_seq(lp["ssm"], apply_rmsnorm(lp["norm1"], h),
+                                                cfg, return_state=True, impl=impl)
+                out = h + delta
+            else:
+                out, st = m2.apply_mamba2_seq(lp["ssm"], h, cfg, return_state=True, impl=impl)
+            return out, st
+        # hybrid
+        style = cfg.block_style
+        merged = _is_merged(style)
+        x = apply_rmsnorm(lp["norm1"], h) if "norm1" in lp else h
+        cat, _ = _self_attention_seq(lp["attn"], cfg, x, positions, merged, impl)
+        a = _attn_out_proj(lp["attn"], cat)
+        s, st = m2.apply_mamba2_seq(lp["ssm"], x, cfg, return_state=True, impl=impl)
+        mix = 0.5 * (a + s)
+        if style == "standard" or style == "residual_qpfree":
+            hh = h + mix
+            f_, _ = _apply_ffn_or_moe(lp, cfg, apply_rmsnorm(lp["norm2"], hh))
+            out = hh + f_
+        else:
+            out, _ = _apply_ffn_or_moe(lp, cfg, mix)
+        return out, st
+
+    _, states = jax.lax.scan(f, h, params["layers"], unroll=True if unroll else 1)
+    return states
+
+
+# ---------------------------------------------------------------------------
+# decode: one token against the cache
+# ---------------------------------------------------------------------------
+
+def _attn_step(lp, cfg: ModelConfig, u1, k_layer, v_layer, kv_pos, length,
+               merged: bool, impl: str):
+    """u1 (B,1,d); k_layer/v_layer (B,Sc,Hkv,Dh). Returns (cat, new_k, new_v)."""
+    B = u1.shape[0]
+    q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, merged)
+    pos = length[:, None]  # (B,1)
+    q = apply_rope(q, pos, style=cfg.rope_style, theta=cfg.rope_theta,
+                   fraction=cfg.rope_fraction)
+    k_new = apply_rope(k_new, pos, style=cfg.rope_style, theta=cfg.rope_theta,
+                       fraction=cfg.rope_fraction)
+    Sc = k_layer.shape[1]
+    slot = (length % Sc).astype(jnp.int32)  # ring buffer under sliding window
+
+    def upd(cache, new, i):
+        return jax.lax.dynamic_update_slice(cache, new, (i, 0, 0))
+
+    k_layer = jax.vmap(upd)(k_layer, k_new.astype(k_layer.dtype), slot)
+    v_layer = jax.vmap(upd)(v_layer, v_new.astype(v_layer.dtype), slot)
+
+    out = attn_mod.decode_attention_core_positions(
+        q[:, 0], k_layer, v_layer,
+        kv_positions=kv_pos, q_position=length,
+        sliding_window=cfg.sliding_window, impl=impl)
+    return out.reshape(B, 1, cfg.attn_dim), k_layer, v_layer
+
+
+def _cross_attn_step(lp, cfg: ModelConfig, u1, ck, cv, merged: bool, impl: str):
+    B = u1.shape[0]
+    if merged:
+        q = u1
+    else:
+        q = u1 @ lp["wq"].astype(u1.dtype)
+        if "bq" in lp:
+            q = q + lp["bq"].astype(u1.dtype)
+    q = q.reshape(B, cfg.n_heads, cfg.d_head)
+    nv = ck.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(nv, dtype=jnp.int32), (B, nv))
+    out = attn_mod.decode_attention_core_positions(
+        q, ck, cv, kv_positions=kv_pos,
+        q_position=jnp.full((B,), nv, jnp.int32) + 1,  # attend to all vision tokens
+        sliding_window=0, impl=impl)
+    return out.reshape(B, 1, cfg.attn_dim)
+
+
+def apply_block_step(p, cfg: ModelConfig, kind: str, u1, layer_cache, ctx):
+    """One block, one token. layer_cache: dict of this layer's cache slices."""
+    style = cfg.block_style
+    merged = _is_merged(style)
+    impl = ctx.get("impl", "xla")
+    length = ctx["length"]
+    new_cache = dict(layer_cache)
+
+    if kind == "ssm":
+        st = m2.SSMState(ssm=layer_cache["ssm"], conv=layer_cache["conv"])
+        x = apply_rmsnorm(p["norm1"], u1) if "norm1" in p else u1
+        delta, st2 = m2.apply_mamba2_step(p["ssm"], x[:, 0], cfg, st)
+        new_cache.update(ssm=st2.ssm, conv=st2.conv)
+        out = u1 + delta[:, None] if style == "standard" else delta[:, None]
+        return out, new_cache
+
+    def mixer_fn(x):
+        if kind == "cross":
+            cat = _cross_attn_step(p["attn"], cfg, x, layer_cache["ck"],
+                                   layer_cache["cv"], merged, impl)
+            return cat if merged else _attn_out_proj(p["attn"], cat)
+        cat, nk, nv = _attn_step(p["attn"], cfg, x, layer_cache["k"],
+                                 layer_cache["v"], ctx["kv_pos"], length,
+                                 merged, impl)
+        new_cache.update(k=nk, v=nv)
+        if kind == "hybrid":
+            st = m2.SSMState(ssm=layer_cache["ssm"], conv=layer_cache["conv"])
+            a = _attn_out_proj(p["attn"], cat)
+            s, st2 = m2.apply_mamba2_step(p["ssm"], x[:, 0], cfg, st)
+            new_cache.update(ssm=st2.ssm, conv=st2.conv)
+            return 0.5 * (a + s[:, None])
+        if merged:
+            return cat
+        return _attn_out_proj(p["attn"], cat)
+
+    if style in ("standard", "residual_qpfree"):
+        if cfg.parallel_block:
+            n = apply_rmsnorm(p["norm1"], u1)
+            f, _ = _apply_ffn_or_moe(p, cfg, n, dropless=True)
+            out = u1 + mixer_fn(n) + f
+        else:
+            h = u1 + mixer_fn(apply_rmsnorm(p["norm1"], u1))
+            f, _ = _apply_ffn_or_moe(p, cfg, apply_rmsnorm(p["norm2"], h), dropless=True)
+            out = h + f
+    else:
+        if cfg.parallel_block:
+            f, _ = _apply_ffn_or_moe(p, cfg, u1, dropless=True)
+            out = mixer_fn(u1) + f
+        else:
+            mid = mixer_fn(u1)
+            out, _ = _apply_ffn_or_moe(p, cfg, mid, dropless=True)
+        if style == "skipless_merged" and "b_out" in p:
+            out = out + p["b_out"].astype(out.dtype)
+    return out, new_cache
+
+
+def forward_decode(params, cfg: ModelConfig, token, cache: DecodeCache, *,
+                   impl: str = "xla", unroll: bool = False):
+    """token: (B,) int32 (or (B,d) frames). Returns (logits (B,V), new cache)."""
+    B = token.shape[0]
+    cdt = dtype_of(cfg.dtype)
+    if token.dtype in (jnp.int32, jnp.int64):
+        h = apply_embedding(params["embed"], token[:, None], cdt)
+    else:
+        h = token[:, None, :].astype(cdt)
+
+    plan = layer_plan(cfg)
+    # mark the new token's slot as valid BEFORE attention so it attends to
+    # itself (ring-buffer slot = length % Sc under sliding window)
+    kv_pos = cache.kv_pos
+    if kv_pos is not None:
+        Sc = kv_pos.shape[1]
+        slot = (cache.length % Sc).astype(jnp.int32)
+        kv_pos = jax.vmap(lambda pr, s, l: pr.at[s].set(l))(kv_pos, slot, cache.length)
+    ctx = {"length": cache.length, "kv_pos": kv_pos, "impl": impl}
+
+    def layer_cache_slices(kind):
+        if kind == "ssm":
+            return {"ssm": cache.ssm.ssm, "conv": cache.ssm.conv}
+        d = {"k": cache.k, "v": cache.v}
+        if kind == "hybrid":
+            d.update(ssm=cache.ssm.ssm, conv=cache.ssm.conv)
+        return d
+
+    new_cache = cache
+    if plan["kind"] == "vlm":
+        ng, spg = plan["n_groups"], plan["self_per_group"]
+        ks = cache.k.reshape(ng, spg, *cache.k.shape[1:])
+        vs = cache.v.reshape(ng, spg, *cache.v.shape[1:])
+
+        def group_fn(h, xs):
+            gp, klayers, vlayers, ck, cv = xs
+
+            def self_fn(h, xs2):
+                lp, kl, vl = xs2
+                out, nc = apply_block_step(lp, cfg, "attn", h,
+                                           {"k": kl, "v": vl}, ctx)
+                return out, (nc["k"], nc["v"])
+
+            h, (nk, nv) = jax.lax.scan(self_fn, h, (gp["self"], klayers, vlayers),
+                                       unroll=True if unroll else 1)
+            out, _ = apply_block_step(gp["cross"], cfg, "cross", h,
+                                      {"ck": ck, "cv": cv}, ctx)
+            return out, (nk, nv)
+
+        gparams = {"self": params["layers"], "cross": params["cross_layers"]}
+        h, (nk, nv) = jax.lax.scan(group_fn, h,
+                                   (gparams, ks, vs, cache.cross_k, cache.cross_v),
+                                   unroll=True if unroll else 1)
+        new_cache = new_cache._replace(k=nk.reshape(cache.k.shape),
+                                       v=nv.reshape(cache.v.shape))
+    else:
+        kind = plan["kind"]
+
+        def f(h, xs):
+            lp, lc = xs
+            out, nc = apply_block_step(lp, cfg, kind, h, lc, ctx)
+            return out, nc
+
+        lcaches = {}
+        if kind in ("attn", "hybrid"):
+            lcaches.update(k=cache.k, v=cache.v)
+        if kind in ("ssm", "hybrid"):
+            lcaches.update(ssm=cache.ssm.ssm, conv=cache.ssm.conv)
+        h, ncs = jax.lax.scan(f, h, (params["layers"], lcaches),
+                              unroll=True if unroll else 1)
+        if "k" in ncs:
+            new_cache = new_cache._replace(k=ncs["k"], v=ncs["v"])
+        if "ssm" in ncs:
+            new_cache = new_cache._replace(
+                ssm=m2.SSMState(ssm=ncs["ssm"], conv=ncs["conv"]))
+
+    if "final_norm" in params:
+        h = apply_rmsnorm(params["final_norm"], h)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = apply_unembedding(table, h)[:, 0, :]
+
+    # advance shared cache bookkeeping
+    if kv_pos is not None:
+        new_cache = new_cache._replace(kv_pos=kv_pos)
+    new_cache = new_cache._replace(length=cache.length + 1)
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from repro.serving.engine import Engine, Request, ServeConfig
+from repro.serving import kv_cache
+
+__all__ = ["Engine", "Request", "ServeConfig", "kv_cache"]

@@ -1,0 +1,187 @@
+"""Serving engine: prefill + batched decode with continuous batching.
+
+Design (vLLM-style, TPU/JAX-native):
+  * a fixed number of serving SLOTS share one batched DecodeCache; the
+    decode step advances every active slot in a single jitted call
+    (``serve_step`` — the function the decode_* dry-run cells lower);
+  * new requests are prefilled (batch-1) and inserted into free slots with
+    dynamic_update_slice (``kv_cache.insert_request``); finished slots are
+    invalidated and reused — no reallocation, no recompilation;
+  * per-slot lengths live in the cache (`length`, `kv_pos`), so mixed
+    progress is handled by the attention masks, not by padding logic;
+  * sampling: greedy / temperature / top-k, per-slot PRNG streams.
+
+The engine is mesh-aware: given a mesh it shards params/caches with the
+distribution-layer rules and jits with explicit shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distribution import sharding as shd
+from repro.models import forward_decode, forward_prefill, init_cache
+from repro.models.transformer import DecodeCache
+from repro.serving import kv_cache as kvc
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    n_slots: int = 8
+    max_len: int = 512
+    temperature: float = 0.0  # 0 => greedy
+    top_k: int = 0
+    eos_token: int = -1  # -1 => run to max_new_tokens
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: Optional[List[int]] = None
+    slot: int = -1
+    remaining: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, mesh=None,
+                 impl: str = "xla"):
+        assert cfg.causal, "serving requires a decoder"
+        self.cfg, self.sc, self.mesh = cfg, sc, mesh
+        self.params = params
+        self.impl = impl
+        self.cache = init_cache(cfg, sc.n_slots, sc.max_len)
+        self.free_slots = list(range(sc.n_slots))
+        self.active: Dict[int, Request] = {}
+        self.key = jax.random.PRNGKey(sc.seed)
+
+        prefill = partial(forward_prefill, cfg=cfg, cache_len=sc.max_len,
+                          impl=impl)
+        decode = partial(forward_decode, cfg=cfg, impl=impl)
+
+        if mesh is not None:
+            rules = shd.make_rules(mesh, batch=sc.n_slots)
+            pshape = jax.eval_shape(lambda: params)
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               shd.evenly(shd.param_pspecs(pshape, rules),
+                                          pshape, mesh))
+            self.params = jax.device_put(params, psh)
+            cshape = jax.eval_shape(lambda: self.cache)
+            csh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                shd.evenly(_trim_cache_spec(shd.cache_pspecs(cfg, rules),
+                                            self.cache), cshape, mesh))
+            self._decode = jax.jit(
+                lambda p, t, c: forward_decode(p, self.cfg, t, c, impl=impl),
+                donate_argnums=(2,),
+                in_shardings=(psh, NamedSharding(mesh, P()), csh),
+                out_shardings=(None, csh))
+            self._prefill = jax.jit(
+                lambda p, tk, vs: forward_prefill(
+                    p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl),
+                in_shardings=(psh, None, None))
+        else:
+            self._decode = jax.jit(
+                lambda p, t, c: forward_decode(p, self.cfg, t, c, impl=impl),
+                donate_argnums=(2,))
+            self._prefill = jax.jit(
+                lambda p, tk, vs: forward_prefill(
+                    p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl))
+
+        self._last_token = np.zeros((sc.n_slots,), np.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, vision: Optional[np.ndarray] = None) -> bool:
+        """Prefill a request into a free slot. Returns False if saturated."""
+        if not self.free_slots:
+            return False
+        slot = self.free_slots.pop(0)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        vs = None if vision is None else jnp.asarray(vision)[None]
+        logits, one_cache = self._prefill(self.params, toks, vs)
+        self.cache = kvc.insert_request(self.cache, one_cache,
+                                        jnp.int32(slot))
+        tok = self._sample(logits)[0]
+        req.slot = slot
+        req.out_tokens = [int(tok)]
+        req.remaining = req.max_new_tokens - 1
+        self.active[slot] = req
+        self._last_token[slot] = int(tok)
+        return True
+
+    def step(self) -> Dict[int, int]:
+        """One batched decode step for all active slots; returns slot->token."""
+        if not self.active:
+            return {}
+        tokens = jnp.asarray(self._last_token, jnp.int32)
+        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        next_tokens = np.asarray(self._sample(logits))
+        emitted: Dict[int, int] = {}
+        for slot, req in list(self.active.items()):
+            tok = int(next_tokens[slot])
+            req.out_tokens.append(tok)
+            req.remaining -= 1
+            self._last_token[slot] = tok
+            emitted[slot] = tok
+            done = req.remaining <= 0 or tok == self.sc.eos_token
+            if done:
+                self.cache = kvc.clear_slot(self.cache, jnp.int32(slot))
+                del self.active[slot]
+                self.free_slots.append(slot)
+        return emitted
+
+    def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int = 32,
+                 vision: Optional[Sequence[np.ndarray]] = None) -> List[List[int]]:
+        """Continuous batching driver: keeps slots full until all done."""
+        pending = [Request(prompt=np.asarray(p, np.int32),
+                           max_new_tokens=max_new_tokens) for p in prompts]
+        results: List[Optional[List[int]]] = [None] * len(pending)
+        order = {id(r): i for i, r in enumerate(pending)}
+        queue = list(pending)
+        inflight: List[Request] = []
+        vis = list(vision) if vision is not None else [None] * len(pending)
+        vqueue = list(vis)
+        while queue or self.active:
+            while queue and self.free_slots:
+                r = queue.pop(0)
+                v = vqueue.pop(0)
+                self.submit(r, vision=v)
+                inflight.append(r)
+            self.step()
+            for r in list(inflight):
+                if r.slot not in self.active:
+                    results[order[id(r)]] = r.out_tokens
+                    inflight.remove(r)
+        return results  # type: ignore
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        sc = self.sc
+        if logits.shape[-1] > self.cfg.vocab_size:  # mask padded vocab ids
+            pad_mask = jnp.arange(logits.shape[-1]) < self.cfg.vocab_size
+            logits = jnp.where(pad_mask, logits, -1e30)
+        if sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        scaled = logits / sc.temperature
+        if sc.top_k > 0:
+            vals, _ = jax.lax.top_k(scaled, sc.top_k)
+            kth = vals[..., -1:]
+            scaled = jnp.where(scaled < kth, -1e30, scaled)
+        return jax.random.categorical(sub, scaled).astype(jnp.int32)
+
+
+def _trim_cache_spec(spec_cache: DecodeCache, like: DecodeCache) -> DecodeCache:
+    """Drop spec entries for fields that are None in the actual cache."""
+    return DecodeCache(*[
+        None if getattr(like, f) is None else getattr(spec_cache, f)
+        for f in DecodeCache._fields])

@@ -1,0 +1,67 @@
+"""Slot operations over the batched DecodeCache (continuous batching).
+
+The cache produced by ``models.init_cache`` is batched over serving slots;
+these utilities insert a freshly-prefilled single-request cache into slot
+``i`` and evict finished slots, using dynamic_update_slice so the engine's
+jitted update is in-place (donated) on device.
+
+Batch axis position by field:
+  k/v            (L, B, Sc, Hkv, Dh)   axis 1
+  kv_pos         (B, Sc)               axis 0
+  length         (B,)                  axis 0
+  ssm.ssm        (L, B, H, P, N)       axis 1
+  ssm.conv       (L, B, W-1, C)        axis 1
+  cross_k/v      (ng, B, nv, Hkv, Dh)  axis 1
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import DecodeCache
+from repro.models import mamba2 as m2
+
+_FIELD_AXIS = {"k": 1, "v": 1, "kv_pos": 0, "length": 0,
+               "cross_k": 1, "cross_v": 1}
+
+
+def _insert_one(dst, src, slot, axis):
+    if dst is None:
+        return None
+    # src has batch size 1 on `axis`; write it at index `slot`
+    start = [jnp.int32(0)] * dst.ndim
+    start[axis] = slot
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), tuple(start))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def insert_request(cache: DecodeCache, one: DecodeCache, slot: jnp.ndarray
+                   ) -> DecodeCache:
+    """Insert a batch-1 cache ``one`` into slot ``slot`` of ``cache``."""
+    upd = {}
+    for f, axis in _FIELD_AXIS.items():
+        upd[f] = _insert_one(getattr(cache, f), getattr(one, f), slot, axis)
+    if cache.ssm is not None:
+        upd["ssm"] = m2.SSMState(
+            ssm=_insert_one(cache.ssm.ssm, one.ssm.ssm, slot, 1),
+            conv=_insert_one(cache.ssm.conv, one.ssm.conv, slot, 1))
+    else:
+        upd["ssm"] = None
+    return DecodeCache(**upd)
+
+
+def clear_slot(cache: DecodeCache, slot: jnp.ndarray) -> DecodeCache:
+    """Mark a slot idle: zero its length and invalidate kv positions.
+
+    SSM state need not be cleared here: inserting the next request
+    overwrites the slot's state wholesale (insert_request writes every
+    stateful field), and idle slots are never read by the engine.
+    """
+    new = cache
+    if cache.kv_pos is not None:
+        new = new._replace(kv_pos=cache.kv_pos.at[slot].set(-1))
+    new = new._replace(length=cache.length.at[slot].set(0))
+    return new

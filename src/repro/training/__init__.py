@@ -1,0 +1,17 @@
+from repro.training.optimizer import AdamW, Lion, make_optimizer, global_norm
+from repro.training.data import DataConfig, SyntheticLM, ByteCorpus, make_dataset
+from repro.training import checkpoint
+from repro.training.fault_tolerance import PreemptionHandler, StragglerMonitor
+from repro.training.train_loop import (
+    Trainer,
+    TrainerConfig,
+    make_loss_fn,
+    make_train_step,
+)
+
+__all__ = [
+    "AdamW", "Lion", "make_optimizer", "global_norm",
+    "DataConfig", "SyntheticLM", "ByteCorpus", "make_dataset",
+    "checkpoint", "PreemptionHandler", "StragglerMonitor",
+    "Trainer", "TrainerConfig", "make_loss_fn", "make_train_step",
+]

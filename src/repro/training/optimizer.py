@@ -1,0 +1,150 @@
+"""Optimizers and LR schedules, pure JAX (optax is not available offline).
+
+AdamW with decoupled weight decay and global-norm clipping; Lion as the
+low-memory alternative.  Optimizer state is a pytree mirroring the params,
+so the distribution layer shards it with the same PartitionSpecs as the
+parameters (or ZeRO-style over the data axis — see distribution/sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    mu: Any  # pytree like params
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]  # schedule: step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(z, params),
+                          nu=jax.tree.map(z, params))
+
+    def update(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+            if self.clip_norm else 1.0
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m2 / c1
+            vhat = v2 / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+
+class LionState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Lion:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.99
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> LionState:
+        return LionState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(self, grads, state: LionState, params):
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+            if self.clip_norm else 1.0
+        lr = self.lr(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) * scale
+            d = jnp.sign(self.b1 * m + (1 - self.b1) * g)
+            if self.weight_decay and p.ndim >= 2:
+                d = d + self.weight_decay * p.astype(jnp.float32)
+            m2 = self.b2 * m + (1 - self.b2) * g
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m2
+
+        out = jax.tree.map(upd, grads, state.mu, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, LionState(step=step, mu=new_mu)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable:
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int) -> Callable:
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        decay = jnp.clip(1.0 - (s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        return peak_lr * jnp.where(s < warmup, warm, decay)
+    return f
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def make_optimizer(name: str, lr: float, warmup: int, total_steps: int,
+                   weight_decay: float = 0.1, clip_norm: float = 1.0):
+    sched = cosine_schedule(lr, warmup, total_steps)
+    if name == "adamw":
+        return AdamW(lr=sched, weight_decay=weight_decay, clip_norm=clip_norm)
+    if name == "lion":
+        return Lion(lr=sched, weight_decay=weight_decay, clip_norm=clip_norm)
+    raise ValueError(name)

@@ -1,0 +1,237 @@
+"""Distributed train step + resumable Trainer.
+
+``make_train_step`` builds the jitted (donated) step:
+  * bf16 compute / fp32 params & optimizer (mixed precision),
+  * remat (activation checkpointing) around each block scan step,
+  * gradient-accumulation microbatching (lax.scan over microbatches — also
+    the compute/comm overlap lever: XLA overlaps microbatch i's DP
+    all-reduce with microbatch i+1's compute),
+  * MoE aux-loss weighting.
+
+``Trainer`` owns mesh/shardings, checkpoint/resume, preemption, straggler
+monitoring, and metrics logging — the full single-controller production
+loop, parameterized by (config, mesh) so tests drive it on tiny meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distribution import sharding as shd
+from repro.models import forward_seq, init_params, lm_loss
+from repro.training import checkpoint as ckpt_lib
+from repro.training.data import DataConfig, make_dataset
+from repro.training.fault_tolerance import (
+    PREEMPTION_EXIT_CODE, PreemptionHandler, StragglerMonitor)
+from repro.training.optimizer import make_optimizer
+
+
+def make_loss_fn(cfg: ModelConfig, *, aux_weight: float = 1e-2,
+                 remat: bool = True, impl: str = "xla", unroll: bool = False,
+                 logits_sharding=None, stream_sharding=None,
+                 qkv_sharding=None):
+    def loss_fn(params, batch):
+        logits, aux, _ = forward_seq(params, cfg, batch["inputs"],
+                                     vision=batch.get("vision"),
+                                     impl=impl, remat=remat, unroll=unroll,
+                                     stream_sharding=stream_sharding,
+                                     qkv_sharding=qkv_sharding)
+        if logits_sharding is not None:
+            # §Perf H1: keep the fp32 logits/loss sharded over (dp, vocab-tp)
+            # instead of letting GSPMD gather a (B, S, V) fp32 buffer
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        loss = lm_loss(logits, batch["labels"], vocab_size=cfg.vocab_size)
+        return loss + aux_weight * aux, {"loss": loss, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, grad_accum: int = 1,
+                    aux_weight: float = 1e-2, remat: bool = True,
+                    impl: str = "xla", unroll: bool = False,
+                    logits_sharding=None, stream_sharding=None,
+                    qkv_sharding=None):
+    loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, remat=remat, impl=impl,
+                           unroll=unroll, logits_sharding=logits_sharding,
+                           stream_sharding=stream_sharding,
+                           qkv_sharding=qkv_sharding)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum <= 1:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            B = batch["inputs"].shape[0]
+            assert B % grad_accum == 0, (B, grad_accum)
+            mb = B // grad_accum
+
+            def slice_mb(i, x):
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def body(carry, i):
+                acc_grads, acc_metrics = carry
+                micro = jax.tree.map(partial(slice_mb, i), batch)
+                (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, micro)
+                acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+                acc_metrics = jax.tree.map(jnp.add, acc_metrics, metrics)
+                return (acc_grads, acc_metrics), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"loss": jnp.float32(0), "aux_loss": jnp.float32(0)}
+            (grads, msum), _ = jax.lax.scan(
+                body, (zero_g, zero_m), jnp.arange(grad_accum))
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m / grad_accum, msum)
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    lr: float = 3e-4
+    warmup: int = 10
+    weight_decay: float = 0.1
+    grad_accum: int = 1
+    optimizer: str = "adamw"
+    seed: int = 0
+    remat: bool = True
+    straggler_factor: float = 3.0
+    stop_after: Optional[int] = None  # pause mid-schedule (e.g. simulated
+    # preemption windows in tests); LR schedule still spans `steps`
+
+
+class Trainer:
+    """Single-controller resumable trainer (production loop in miniature)."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainerConfig, dc: DataConfig,
+                 mesh=None, corpus_path: Optional[str] = None):
+        self.cfg, self.tc, self.dc = cfg, tc, dc
+        self.mesh = mesh
+        self.dataset = make_dataset(cfg, dc, corpus_path)
+        self.optimizer = make_optimizer(tc.optimizer, tc.lr, tc.warmup, tc.steps,
+                                        tc.weight_decay)
+        self.preempt = PreemptionHandler()
+        self.straggler = StragglerMonitor(tc.straggler_factor)
+        self.ckpt = ckpt_lib.AsyncCheckpointer(tc.ckpt_dir, keep=tc.keep_ckpts)
+        self.metrics_log: list = []
+
+        key = jax.random.PRNGKey(tc.seed)
+        params = init_params(key, cfg)
+        opt_state = self.optimizer.init(params)
+        self.start_step = 0
+
+        # resume from the latest checkpoint if present
+        latest = ckpt_lib.latest_step(tc.ckpt_dir)
+        if latest is not None:
+            state = ckpt_lib.restore(tc.ckpt_dir, latest,
+                                     {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            self.start_step = latest
+
+        step_fn = make_train_step(cfg, self.optimizer,
+                                  grad_accum=tc.grad_accum, remat=tc.remat)
+        if mesh is not None:
+            rules = shd.make_rules(mesh, batch=dc.global_batch)
+            pshape = jax.eval_shape(lambda: params)
+            pspec = shd.evenly(shd.param_pspecs(pshape, rules), pshape, mesh)
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+            oshape = jax.eval_shape(lambda: opt_state)
+            osh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                shd.evenly(_opt_pspecs(opt_state, pspec, mesh), oshape, mesh))
+            bsh = {k: NamedSharding(mesh, P(rules.dp, *([None] * (v.ndim - 1))))
+                   for k, v in self.dataset.batch_at(0).items()}
+            self._jit_step = jax.jit(step_fn,
+                                     in_shardings=(psh, osh, bsh),
+                                     out_shardings=(psh, osh, None),
+                                     donate_argnums=(0, 1))
+            params = jax.device_put(params, psh)
+            opt_state = jax.device_put(opt_state, osh)
+        else:
+            self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        self.params, self.opt_state = params, opt_state
+
+    def run(self) -> Dict[str, Any]:
+        tc = self.tc
+        self.preempt.install()
+        final_metrics: Dict[str, Any] = {}
+        step = self.start_step
+        stop = tc.steps if tc.stop_after is None else min(tc.steps, tc.stop_after)
+        while step < stop:
+            self.straggler.step_start()
+            batch = self.dataset.batch_at(step)
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch)
+            step += 1
+            dt = self.straggler.step_end(step)
+            if step % tc.log_every == 0 or step == tc.steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, sec_per_step=round(dt, 4))
+                self.metrics_log.append(m)
+                print(json.dumps(m), flush=True)
+                final_metrics = m
+            if step % tc.ckpt_every == 0 or step == stop:
+                self._save(step)
+            if self.preempt.preempted:
+                self._save(step)
+                self.ckpt.wait()
+                print(f"preempted at step {step}; checkpointed; exiting "
+                      f"{PREEMPTION_EXIT_CODE}", flush=True)
+                sys.exit(PREEMPTION_EXIT_CODE)
+        self.ckpt.wait()
+        return final_metrics
+
+    def _save(self, step: int):
+        self.ckpt.save(step, {"params": self.params, "opt": self.opt_state},
+                       metadata={"config": self.cfg.name, "step": step,
+                                 "data_seed": self.dc.seed})
+
+
+def _opt_pspecs(opt_state, param_pspec, mesh, zero1: bool = False,
+                dp_axes=None):
+    """Optimizer-state specs: mu/nu follow the params; scalars replicate.
+
+    ``zero1=True`` additionally shards each mu/nu tensor over the data axis
+    on its first unsharded dim (ZeRO-1): GSPMD then reduce-scatters the
+    gradients, computes the update shard-locally, and all-gathers only the
+    updated params — cutting both optimizer memory (÷|dp|) and gradient
+    collective bytes (all-reduce -> reduce-scatter + small all-gather)."""
+    def like(path, leaf):
+        # AdamWState(step, mu, nu): NamedTuple fields appear in the path
+        names = [getattr(p, "name", getattr(p, "key", "")) for p in path]
+        if names and names[0] == "step":
+            return P()
+        # strip the leading field name and look up the param spec
+        sub = param_pspec
+        for n in names[1:]:
+            sub = sub[n]
+        if zero1 and dp_axes:
+            parts = list(tuple(sub) + (None,) * (leaf.ndim - len(sub)))
+            for d in range(leaf.ndim):
+                if parts[d] is None:
+                    parts[d] = dp_axes
+                    break
+            return P(*parts)
+        return sub
+
+    return jax.tree_util.tree_map_with_path(like, opt_state)

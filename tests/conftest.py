@@ -1,0 +1,9 @@
+import os
+import sys
+
+# ensure src/ is importable regardless of how pytest is invoked
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — tests must see 1 (host) device;
+# only launch/dryrun.py sets the 512-device flag (in a subprocess when
+# exercised from tests).

@@ -1,0 +1,74 @@
+"""Incremental decode == full-sequence forward, for every causal arch,
+including ring-buffer sliding-window and SSM state handoff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduce_config
+from repro.models import (forward_decode, forward_prefill, forward_seq,
+                          init_params)
+
+CAUSAL = [a for a in ASSIGNED_ARCHS if get_config(a).causal]
+
+
+@pytest.mark.parametrize("arch", CAUSAL)
+def test_decode_matches_full_forward(arch):
+    cfg = reduce_config(get_config(arch))
+    if cfg.n_experts:
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts))  # dropless both paths
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S_pre, S_gen = 2, 8, 6
+    S = S_pre + S_gen
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    vision = None
+    if cfg.family == "vlm":
+        vision = jax.random.normal(jax.random.PRNGKey(2),
+                                   (B, cfg.n_vision_tokens, cfg.d_model))
+    full, _, _ = forward_seq(params, cfg, toks, vision=vision)
+    last, cache = forward_prefill(params, cfg, toks[:, :S_pre],
+                                  cache_len=S + 2, vision=vision)
+    step = jax.jit(lambda p, t, c: forward_decode(p, cfg, t, c))
+    errs = [np.max(np.abs(np.asarray(last) - np.asarray(full[:, S_pre - 1])))]
+    for t in range(S_pre, S):
+        lg, cache = step(params, toks[:, t], cache)
+        errs.append(np.max(np.abs(np.asarray(lg) - np.asarray(full[:, t]))))
+    assert max(errs) < 2e-3, (arch, errs)
+
+
+def test_sliding_window_ring_buffer_wraps():
+    """Decode far past the window: ring buffer must stay exact."""
+    cfg = reduce_config(get_config("hymba-1.5b")).with_(sliding_window=6)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 20  # window 6 -> wraps 3x
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full, _, _ = forward_seq(params, cfg, toks)
+    _, cache = forward_prefill(params, cfg, toks[:, :4], cache_len=32)
+    assert cache.k.shape[2] == 6  # ring buffer is window-sized
+    step = jax.jit(lambda p, t, c: forward_decode(p, cfg, t, c))
+    for t in range(4, S):
+        lg, cache = step(params, toks[:, t], cache)
+        err = np.max(np.abs(np.asarray(lg) - np.asarray(full[:, t])))
+        assert err < 2e-3, (t, err)
+
+
+def test_decode_merged_equals_decode_vanilla():
+    """QP-removed serving path == vanilla skipless serving path."""
+    from repro.core import merge_skipless
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params["embed"]["table"] = params["embed"]["table"] * 50.0
+    mparams, mcfg = merge_skipless(params, cfg, "qp")
+    B, S_pre = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S_pre + 4), 0,
+                              cfg.vocab_size)
+    _, c0 = forward_prefill(params, cfg, toks[:, :S_pre], cache_len=16)
+    _, c1 = forward_prefill(mparams, mcfg, toks[:, :S_pre], cache_len=16)
+    step0 = jax.jit(lambda p, t, c: forward_decode(p, cfg, t, c))
+    step1 = jax.jit(lambda p, t, c: forward_decode(p, mcfg, t, c))
+    for t in range(S_pre, S_pre + 4):
+        a, c0 = step0(params, toks[:, t], c0)
+        b, c1 = step1(mparams, toks[:, t], c1)
+        denom = np.max(np.abs(np.asarray(a))) + 1e-9
+        assert np.max(np.abs(np.asarray(a) - np.asarray(b))) / denom < 3e-4

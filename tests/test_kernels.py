@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,B,Sq,Sk,Hq,Hkv,D,causal,win", [
+    (jnp.float32, 2, 128, 128, 4, 2, 64, True, 0),
+    (jnp.bfloat16, 2, 128, 128, 4, 2, 64, True, 0),
+    (jnp.float32, 1, 256, 256, 8, 1, 32, True, 0),   # MQA
+    (jnp.float32, 2, 128, 128, 4, 4, 64, True, 48),  # MHA + sliding window
+    (jnp.bfloat16, 1, 128, 128, 2, 2, 16, False, 0),  # encoder
+    (jnp.float32, 1, 64, 64, 6, 3, 128, True, 16),   # GQA + window, d=128
+])
+def test_flash_attention(B, Sq, Sk, Hq, Hkv, D, causal, win, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, sliding_window=win,
+                              block_q=64, block_k=64, interpret=True)
+    want = ref.ref_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal,
+        sliding_window=win).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bq=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    win=st.sampled_from([0, 8, 40]),
+    seed=st.integers(0, 100),
+)
+def test_flash_attention_block_invariance(bq, bk, win, seed):
+    """Output must not depend on the BlockSpec tiling (property)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, sliding_window=win,
+                              block_q=bq, block_k=bk, interpret=True)
+    want = ref.ref_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True,
+                             sliding_window=win).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,B,S,Hq,Hkv,D,win,fill", [
+    (jnp.float32, 2, 128, 4, 2, 64, 0, 64),
+    (jnp.bfloat16, 2, 128, 4, 2, 64, 0, 64),
+    (jnp.float32, 2, 64, 8, 8, 32, 24, 40),
+    (jnp.bfloat16, 1, 128, 8, 1, 128, 0, 128),  # MQA, full cache
+    (jnp.float32, 3, 96, 6, 2, 16, 8, 50),
+])
+def test_decode_attention(B, S, Hq, Hkv, D, win, fill, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    kv_pos = jnp.where(jnp.arange(S)[None, :] < fill,
+                       jnp.arange(S, dtype=jnp.int32)[None, :], -1)
+    kv_pos = jnp.broadcast_to(kv_pos, (B, S))
+    q_position = jnp.full((B,), fill - 1, jnp.int32)
+    out = ops.decode_attention(q, kc, vc, kv_positions=kv_pos,
+                               q_position=q_position, sliding_window=win,
+                               block_k=32, interpret=True)
+    want = ref.ref_decode_attention(
+        q.reshape(B, Hkv, Hq // Hkv, D), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), kv_pos, q_position[:, None],
+        sliding_window=win).reshape(B, Hq, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_ring_layout():
+    """Wrapped ring-buffer positions (not monotonically increasing)."""
+    B, S, Hq, Hkv, D = 1, 16, 2, 1, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D))
+    # ring of window 16 at t=20: slot s holds position 20-16+((s-4)%16)
+    t = 20
+    kv_pos = jnp.asarray([[(t - 16) + ((s - (t % 16)) % 16) for s in range(S)]],
+                         jnp.int32)
+    qp = jnp.full((B,), t, jnp.int32)
+    out = ops.decode_attention(q, kc, vc, kv_positions=kv_pos, q_position=qp,
+                               sliding_window=16, block_k=8, interpret=True)
+    want = ref.ref_decode_attention(q.reshape(B, Hkv, 2, D),
+                                    kc.transpose(0, 2, 1, 3),
+                                    vc.transpose(0, 2, 1, 3), kv_pos,
+                                    qp[:, None], sliding_window=16
+                                    ).reshape(B, Hq, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,B,S,H,P,N,chunk", [
+    (jnp.float32, 2, 64, 4, 16, 8, 16),
+    (jnp.bfloat16, 2, 64, 4, 16, 8, 16),
+    (jnp.float32, 1, 128, 2, 32, 16, 32),
+    (jnp.bfloat16, 1, 96, 3, 64, 128, 32),  # mamba2-2.7b head geometry
+    (jnp.float32, 2, 32, 1, 16, 8, 32),     # single chunk
+])
+def test_ssd_scan(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, H, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, H, N), dtype)
+    y, fin = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, fin_ref = ref.ref_ssd(x.astype(jnp.float32), dt, dt * A,
+                                 Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    tol = 6e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y_ref),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=6, deadline=None)
+@given(chunk=st.sampled_from([8, 16, 32, 64]), seed=st.integers(0, 50))
+def test_ssd_chunk_invariance(chunk, seed):
+    """Chunk size is a tiling choice — results must be identical."""
+    B, S, H, P, N = 1, 64, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, H, N))
+    Cm = jax.random.normal(ks[4], (B, S, H, N))
+    y, fin = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, fin_ref = ref.ref_ssd(x, dt, dt * A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# model-level integration: impl="pallas_interpret" == impl="xla"
+# ---------------------------------------------------------------------------
+
+def test_model_pallas_path_matches_xla():
+    from repro.configs import get_config, reduce_config
+    from repro.models import forward_seq, init_params
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    a, _, _ = forward_seq(params, cfg, toks, impl="xla")
+    b, _, _ = forward_seq(params, cfg, toks, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_mamba_pallas_path_matches_xla():
+    from repro.configs import get_config, reduce_config
+    from repro.models import forward_seq, init_params
+    cfg = reduce_config(get_config("mamba2-2.7b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    a, _, _ = forward_seq(params, cfg, toks, impl="xla")
+    b, _, _ = forward_seq(params, cfg, toks, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)

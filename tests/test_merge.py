@@ -1,0 +1,156 @@
+"""The paper's core claims: exact weight removal + the §3 table.
+
+Property-based (hypothesis) over random skipless models: merging must be
+numerically equivalent (Fig 1b/c/d per Table 1), remove exactly the
+predicted number of weights, and keep Q invertible (cond audit, §4).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduce_config
+from repro.core import (condition_numbers, decode_speedup, merge_skipless,
+                        weight_table)
+from repro.models import count_params, forward_seq, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(cfg, seed=0, scale=50.0):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    # O(1) streams so logit comparisons are well-conditioned (skipless GLU
+    # attenuates small signals quadratically)
+    params["embed"]["table"] = params["embed"]["table"] * scale
+    return params
+
+
+def _inputs(cfg, key, B=2, S=12):
+    if cfg.family == "audio":
+        x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    else:
+        x = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    vision = None
+    if cfg.family == "vlm":
+        vision = jax.random.normal(jax.random.fold_in(key, 7),
+                                   (B, cfg.n_vision_tokens, cfg.d_model))
+    return x, vision
+
+
+def _assert_equiv(cfg, variant, seed=0):
+    params = _mk(cfg, seed)
+    x, vision = _inputs(cfg, jax.random.PRNGKey(seed + 1))
+    base, _, _ = forward_seq(params, cfg, x, vision=vision)
+    mparams, mcfg = merge_skipless(params, cfg, variant)
+    merged, _, _ = forward_seq(mparams, mcfg, x, vision=vision)
+    denom = float(np.max(np.abs(np.asarray(base)))) + 1e-9
+    rel = float(np.max(np.abs(np.asarray(base) - np.asarray(merged)))) / denom
+    assert rel < 3e-4, (cfg.name, variant, rel)
+    return params, mparams
+
+
+# ---- per assigned arch ----------------------------------------------------
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if get_config(a).qp_removal_applicable])
+def test_qp_merge_equivalence(arch):
+    cfg = reduce_config(get_config(arch)).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32")
+    if cfg.n_experts:
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts))  # no drops
+    params, mparams = _assert_equiv(cfg, "qp")
+    # removed weights: Q (d*ad) + P (ad*d) per layer for non-hybrid serial
+    d, ad, L = cfg.d_model, cfg.attn_dim, cfg.n_layers
+    removed = count_params(params) - count_params(mparams)
+    if cfg.family == "hybrid":
+        expect = L * d * ad  # Q only
+    elif cfg.family == "audio":
+        expect = L * (d * ad + ad * d) - d * d  # input_proj retained
+    else:
+        expect = L * (d * ad + ad * d)
+    if cfg.qkv_bias:
+        # bq (L·ad) removed, but b_out (L·d) and embed_bias (d) are added
+        expect += L * ad - L * d - d
+    if cfg.tie_embeddings:
+        expect -= cfg.padded_vocab * d  # merge unties the embeddings
+    assert removed == expect, (arch, removed, expect)
+
+
+@pytest.mark.parametrize("variant", ["kp", "vp"])
+@pytest.mark.parametrize("arch", ["moonshot-v1-16b-a3b", "hubert-xlarge"])
+def test_kp_vp_merge_mha_only(arch, variant):
+    cfg = reduce_config(get_config(arch)).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32")
+    if cfg.n_experts:
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts))
+    assert cfg.kp_vp_removal_applicable
+    _assert_equiv(cfg, variant)
+
+
+def test_kp_variant_rejected_for_gqa():
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(block_style="skipless")
+    with pytest.raises(ValueError):
+        merge_skipless(init_params(jax.random.PRNGKey(0), cfg), cfg, "kp")
+
+
+def test_mamba2_inapplicable():
+    cfg = get_config("mamba2-2.7b")
+    assert not cfg.qp_removal_applicable
+    with pytest.raises(ValueError):
+        cfg.with_(block_style="skipless_merged").validate_style()
+
+
+# ---- property-based: random dense skipless models -------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_layers=st.integers(1, 3),
+    n_heads=st.sampled_from([2, 4]),
+    kv_ratio=st.sampled_from([1, 2]),
+    bias=st.booleans(),
+    ffn_type=st.sampled_from(["swiglu", "gelu_mlp"]),
+    seed=st.integers(0, 2**16),
+)
+def test_merge_property(n_layers, n_heads, kv_ratio, bias, ffn_type, seed):
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(
+        name="prop", family="dense", n_layers=n_layers, d_model=n_heads * 8,
+        n_heads=n_heads, n_kv_heads=n_heads // kv_ratio, d_head=8,
+        d_ff=24, vocab_size=64, qkv_bias=bias, ffn_type=ffn_type,
+        block_style="skipless", dtype="float32", param_dtype="float32")
+    _assert_equiv(cfg, "qp", seed=seed % 97)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_merge_invertibility_audit(seed):
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32")
+    params = _mk(cfg, seed % 31)
+    conds = condition_numbers(params, cfg, "qp")
+    assert len(conds) == cfg.n_layers
+    assert np.all(np.isfinite(conds)), "paper §4: all Q must be invertible"
+
+
+# ---- paper §3 table (the reproduction gate) --------------------------------
+
+@pytest.mark.parametrize("arch,exp", [
+    ("pythia-6.9b", dict(qp=33_554_432, kv=33_554_432, ffn=134_217_728,
+                         embed=412_876_800, total_b=6.9, wo_b=5.8,
+                         savings=16, speedup=1.19)),
+    ("mistral-7b", dict(qp=33_554_432, kv=8_388_608, ffn=176_160_768,
+                        embed=262_144_000, total_b=7.2, wo_b=6.2,
+                        savings=15, speedup=1.17)),
+])
+def test_paper_table(arch, exp):
+    t = weight_table(get_config(arch))
+    assert t["qp_per_layer"] == exp["qp"]
+    assert t["kv_per_layer"] == exp["kv"]
+    assert t["ffn_per_layer"] == exp["ffn"]
+    assert t["embed"] == exp["embed"]
+    assert round(t["total"] / 1e9, 1) == exp["total_b"]
+    assert round(t["total_without_qp"] / 1e9, 1) == exp["wo_b"]
+    assert round(t["savings_frac"] * 100) == exp["savings"]
+    assert round(t["speedup"], 2) == exp["speedup"]
+    assert abs(decode_speedup(get_config(arch)) - t["speedup"]) < 1e-9

@@ -1,0 +1,69 @@
+"""End-to-end system behaviour: the paper's full workflow.
+
+Train a skipless model -> merge (QP removal) -> verify the merged model is
+the same function -> serve it with continuous batching -> outputs identical
+to serving the unmerged model. This is the paper's value proposition
+exercised through every layer of the framework.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core import decode_speedup, merge_skipless, weight_table
+from repro.models import count_params, init_params
+from repro.serving import Engine, ServeConfig
+from repro.training import DataConfig, Trainer, TrainerConfig
+
+
+def test_train_merge_serve_roundtrip(tmp_path):
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        sliding_window=0)
+    dc = DataConfig(global_batch=8, seq_len=24, seed=1)
+    tc = TrainerConfig(steps=25, log_every=25, ckpt_every=25,
+                       ckpt_dir=str(tmp_path / "ck"), lr=1e-3, warmup=3)
+    trainer = Trainer(cfg, tc, dc)
+    trainer.run()
+    params = jax.device_get(trainer.params)
+
+    # --- merge the TRAINED weights (the paper's deployment story) ---------
+    mparams, mcfg = merge_skipless(params, cfg, "qp")
+    n0, n1 = count_params(params), count_params(mparams)
+    assert n1 < n0
+    # per-layer savings = 2·d²  (Q and P)
+    assert n0 - n1 == cfg.n_layers * 2 * cfg.d_model * cfg.d_model
+
+    # --- serve both; greedy outputs must be identical ---------------------
+    prompts = [np.arange(6) % cfg.vocab_size, (np.arange(6) + 3) % cfg.vocab_size]
+    out_a = Engine(cfg, params, ServeConfig(n_slots=2, max_len=48)).generate(
+        prompts, max_new_tokens=8)
+    out_b = Engine(mcfg, mparams, ServeConfig(n_slots=2, max_len=48)).generate(
+        prompts, max_new_tokens=8)
+    assert out_a == out_b, "QP-removed serving diverged from the original"
+
+
+def test_weight_tables_all_archs():
+    """weight_table runs for every assigned arch and is self-consistent."""
+    from repro.configs import ASSIGNED_ARCHS
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        t = weight_table(cfg)
+        assert t["total"] > 0
+        assert 0 <= t["removed"] < t["total"]
+        assert abs((t["total"] - t["removed"]) - t["total_without_qp"]) == 0
+        if cfg.qp_removal_applicable and cfg.family != "hybrid":
+            assert t["speedup"] > 1.0, arch
+        if not cfg.has_attention:
+            assert t["removed"] == 0 and t["speedup"] == 1.0
+
+
+def test_moe_active_weight_speedup_extension():
+    """Beyond-paper: MoE decode reads active experts only — speedup of the
+    attention-side removal is larger relative to active bytes."""
+    from repro.core import active_weights_per_token
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    total_model = weight_table(cfg)["speedup"]
+    active_model = decode_speedup(cfg, active_only=True)
+    assert active_model > total_model > 1.0
+    assert active_weights_per_token(cfg) < weight_table(cfg)["total"]

@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis → change → measure → verdict.
+
+Runs a sequence of configurations for one (arch × shape) cell, records the
+three roofline terms + per-chip peak memory per step, and appends a
+markdown log to artifacts/hillclimb/<cell>.md.
+
+  PYTHONPATH=src python tools/hillclimb.py --cell qwen_train
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+
+def fmt(r):
+    rf = r["roofline"]
+    return (f"compute={rf['compute_s']:.3f}s memory={rf['memory_s']:.3f}s "
+            f"collective={rf['collective_s']:.3f}s "
+            f"peak={(r['memory']['peak_bytes'] or 0) / 1e9:.1f}GB "
+            f"args={(r['memory']['argument_bytes'] or 0) / 1e9:.1f}GB")
+
+
+CELLS = {
+    # (arch, shape, [(step_name, hypothesis, kwargs), ...])
+    "qwen_train": ("qwen2.5-32b", "train_4k", [
+        ("baseline", "paper-agnostic baseline: fp32 master params+Adam "
+         "(model-sharded only), fp32 logits unsharded over vocab", {}),
+        ("H1_shard_logits",
+         "fp32 (B,S,V) logits buffer ~40GB/chip dominates temp bytes; "
+         "constraining logits+loss to (dp, vocab-tp) should cut peak memory "
+         "by O(10GB) and memory term accordingly",
+         dict(shard_logits=True)),
+        ("H2_zero1",
+         "params+Adam fp32 are 24.6GB/chip (replicated over data axis). "
+         "ZeRO-1 shards mu/nu over dp=16: -15GB args; grad all-reduce "
+         "becomes reduce-scatter + small param all-gather: collective "
+         "bytes should drop ~40%",
+         dict(shard_logits=True, zero1=True)),
+        ("H3_bf16_params",
+         "bf16 param storage (fp32 Adam master kept): halves param bytes "
+         "read per step and halves gradient collective payloads",
+         dict(shard_logits=True, zero1=True,
+              cfg_overrides={"param_dtype": "bfloat16"})),
+        ("H4_seq_parallel",
+         "per-layer saved stream carries (64·16·4096·5120·2B ≈ 10.7GB) are "
+         "replicated over the model axis; SP-sharding them divides by 16",
+         dict(shard_logits=True, zero1=True, shard_stream=True,
+              cfg_overrides={"param_dtype": "bfloat16"})),
+        ("H5_grad_accum2",
+         "remaining peak 30.7GB > 16GB v5e: live activations scale with the "
+         "microbatch — 2 accumulation microbatches halve them (and let XLA "
+         "overlap microbatch i's grad reduce with i+1's compute)",
+         dict(shard_logits=True, zero1=True, shard_stream=True, grad_accum=2,
+              cfg_overrides={"param_dtype": "bfloat16"})),
+        ("H6_grad_accum4",
+         "one more halving: 4 microbatches should land under the 16GB "
+         "budget; compute/collective terms should stay ~flat",
+         dict(shard_logits=True, zero1=True, shard_stream=True, grad_accum=4,
+              cfg_overrides={"param_dtype": "bfloat16"})),
+    ]),
+    "mamba2_train": ("mamba2-2.7b", "train_4k", [
+        ("baseline", "SSD chunked scan, fp32 logits, fp32 params", {}),
+        ("H1_shard_logits",
+         "padded-vocab (50304) fp32 logits = 13GB/chip of the 15.3GB peak; "
+         "sharding over vocab-tp should collapse peak memory",
+         dict(shard_logits=True)),
+        ("H2_zero1",
+         "ZeRO-1 over dp: cuts fp32 Adam args ~2GB/chip and gradient "
+         "collective bytes",
+         dict(shard_logits=True, zero1=True)),
+        ("H5_chunk128",
+         "SSD intra-chunk buffers scale O(L·chunk); chunk 256→128 halves "
+         "the (L,L) kernel buffer with 2x more inter-chunk steps (cheap: "
+         "state is (P,N)=8k elements); expect temp bytes down, flops ~flat",
+         dict(shard_logits=True, zero1=True,
+              cfg_overrides={"ssm_chunk": 128})),
+        ("H6_seq_parallel",
+         "remaining peak = per-layer stream carries saved for backward "
+         "(64·B·S·d·2B ≈ 21GB replicated over the model axis). Sequence-"
+         "sharding the layer-boundary stream (SP) divides that by tp=16",
+         dict(shard_logits=True, zero1=True, shard_stream=True,
+              cfg_overrides={"ssm_chunk": 128})),
+        ("H7_noremat",
+         "with SP freeing ~14GB, activation rematerialization is no longer "
+         "needed: remat off should cut the compute term ~25% (no recompute) "
+         "at an acceptable peak increase",
+         dict(shard_logits=True, zero1=True, shard_stream=True, remat=False,
+              cfg_overrides={"ssm_chunk": 128})),
+        ("H7b_remat_dots",
+         "middle ground: keep matmul outputs (dots_saveable), recompute the "
+         "elementwise glue — should recover part of the 25% recompute "
+         "saving at a bounded peak increase (no SP: it hurt the SSD scan)",
+         dict(shard_logits=True, zero1=True, remat="dots",
+              cfg_overrides={"ssm_chunk": 128})),
+    ]),
+    "qwen_decode": ("qwen2.5-32b", "decode_32k", [
+        ("baseline", "fp32 serving weights, standard residual blocks", {}),
+        ("H7_bf16_weights",
+         "decode at batch 128 is weight-streaming bound: bf16 weights halve "
+         "the dominant memory term",
+         dict(cfg_overrides={"param_dtype": "bfloat16"})),
+        ("H8_paper_qp_removal",
+         "the paper's technique: skipless_merged removes Q+P = 10.2% of "
+         "weights -> weight-streaming bytes down ~10% on top of bf16 "
+         "(paper predicts 1.11x for qwen-32B)",
+         dict(block_style="skipless_merged",
+              cfg_overrides={"param_dtype": "bfloat16"})),
+        ("H8b_paper_faithful_fp32",
+         "paper-faithful comparison point: QP removal alone on fp32 "
+         "weights (isolates the paper's contribution from the bf16 lever)",
+         dict(block_style="skipless_merged")),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import roofline_terms, run_cell
+
+    arch, shape, steps = CELLS[args.cell]
+    os.makedirs("artifacts/hillclimb", exist_ok=True)
+    md_path = f"artifacts/hillclimb/{args.cell}.md"
+    json_path = f"artifacts/hillclimb/{args.cell}.json"
+    results = []
+    lines = [f"### Hillclimb: {arch} × {shape}\n"]
+    prev = None
+    for name, hypothesis, kw in steps:
+        rec = run_cell(arch, shape, **kw)
+        rec["roofline"] = roofline_terms(rec)
+        rec["step"] = name
+        results.append(rec)
+        line = f"* **{name}** — _{hypothesis}_\n  * result: {fmt(rec)}"
+        if prev is not None:
+            d = {k: rec["roofline"][k] - prev["roofline"][k]
+                 for k in ("compute_s", "memory_s", "collective_s")}
+            dm = ((rec["memory"]["peak_bytes"] or 0)
+                  - (prev["memory"]["peak_bytes"] or 0)) / 1e9
+            line += (f"\n  * delta vs prev: compute {d['compute_s']:+.3f}s, "
+                     f"memory {d['memory_s']:+.3f}s, "
+                     f"collective {d['collective_s']:+.3f}s, peak {dm:+.1f}GB")
+        lines.append(line)
+        print(f"[{name}] {fmt(rec)}", flush=True)
+        prev = rec
+    with open(md_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"wrote {md_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts."""
+import glob
+import json
+import os
+import sys
+
+ART = "artifacts/dryrun"
+
+
+def recs(mesh):
+    out = {}
+    for f in sorted(glob.glob(f"{ART}/*__{mesh}__default.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main():
+    single = recs("single")
+    multi = recs("multi")
+
+    print("### Dry-run compile matrix (both meshes)\n")
+    print("| arch | shape | 16×16 single-pod | 2×16×16 multi-pod | per-chip peak GB (single) |")
+    print("|---|---|---|---|---|")
+    keys = sorted(set(single) | set(multi))
+    for k in keys:
+        s, m = single.get(k), multi.get(k)
+
+        def st(r):
+            if r is None:
+                return "—"
+            if r.get("skipped"):
+                return "SKIP"
+            if "error" in r:
+                return "FAIL"
+            return f"✅ {r['timings_s']['compile']}s"
+
+        peak = ""
+        if s and not s.get("skipped") and "error" not in s:
+            peak = f"{(s['memory']['peak_bytes'] or 0) / 1e9:.1f}"
+        note = ""
+        if s and s.get("skipped"):
+            note = s["reason"].split(":")[0]
+        print(f"| {k[0]} | {k[1]} | {st(s)} | {st(m)} | {peak} {note} |")
+
+    print("\n### Roofline terms (single-pod 16×16, per chip, seconds/step)\n")
+    print("| arch | shape | compute_s | memory_s† | collective_s | dominant | "
+          "MFR | collectives seen |")
+    print("|---|---|---|---|---|---|---|---|")
+    for k in keys:
+        r = single.get(k)
+        if r is None or r.get("skipped") or "error" in r:
+            continue
+        rf = r["roofline"]
+        cc = r["collectives_raw"]["counts"]
+        seen = ",".join(f"{n.split('-')[0]}-{n.split('-')[1][:1]}:{c}" if "-" in n
+                        else f"{n}:{c}" for n, c in cc.items() if c)
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+              f"{rf['memory_s']:.2f} | {rf['collective_s']:.4f} | "
+              f"{rf['dominant']} | {r.get('model_flops_ratio', 0):.2f} | {seen} |")
+
+
+if __name__ == "__main__":
+    main()
