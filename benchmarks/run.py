@@ -12,14 +12,15 @@ import time
 
 def main() -> None:
     sys.path.insert(0, "src")
-    from benchmarks import (bench_decode_bandwidth, bench_equivalence,
-                            bench_kernels, bench_numerics, bench_roofline,
-                            bench_weight_table)
+    from benchmarks import (bench_decode_bandwidth, bench_decode_merged,
+                            bench_equivalence, bench_kernels, bench_numerics,
+                            bench_roofline, bench_weight_table)
 
     suites = [
         ("weight_table[paper_s3]", bench_weight_table),
         ("equivalence[paper_s4]", bench_equivalence),
         ("decode_bandwidth[paper_s3_ext]", bench_decode_bandwidth),
+        ("decode_merged[fastpath]", bench_decode_merged),
         ("numerics[merged_runtime]", bench_numerics),
         ("kernels", bench_kernels),
         ("roofline[dryrun]", bench_roofline),
@@ -41,6 +42,9 @@ def main() -> None:
             elif name.startswith("decode_bandwidth"):
                 m = next(r for r in rows if r["arch"] == "qwen2.5-32b")
                 derived = f"qwen_e2e_speedup={m['speedup_e2e']:.3f}"
+            elif name.startswith("decode_merged"):
+                m = next(r for r in rows if r["arch"] == "mistral-7b")
+                derived = f"mistral_bytes_saved={m['bytes_saved_frac']:.3f}"
             elif name.startswith("numerics"):
                 o = next(r for r in rows if r["init"] == "orthogonal"
                          and r["dtype"] == "float32")

@@ -117,7 +117,7 @@ def merge_skipless(params: Dict[str, Any], cfg: ModelConfig,
     Tinv = _inv(T)  # batched over the layer axis
 
     new_layers = _merge_layer_stack(layers, cfg, variant, T, bT, Tinv,
-                                    next_T=_shifted(T, fill_identity=True),
+                                    next_T=_shifted(T),
                                     next_bT=_shifted_bias(bT))
     out["layers"] = new_layers
 
@@ -141,7 +141,7 @@ def merge_skipless(params: Dict[str, Any], cfg: ModelConfig,
     return out, mcfg
 
 
-def _shifted(T: np.ndarray, fill_identity: bool) -> np.ndarray:
+def _shifted(T: np.ndarray) -> np.ndarray:
     """next_T[i] = T[i+1]; last gets identity (no next block)."""
     eye = np.eye(T.shape[-1], dtype=T.dtype)[None]
     return np.concatenate([_f64(T)[1:], eye], axis=0)

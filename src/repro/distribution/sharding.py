@@ -16,6 +16,16 @@ Rules are path-based over the parameter tree: ``_PARAM_RULES`` matches the
 TRAILING dims of each leaf by (module, param-name); leading stack axes
 (layers / groups) are never sharded (they are scanned over).
 
+Merged (Q/P-removed) parameter trees are covered by the same table: wq/wp
+simply don't exist, K* / V* keep the column (head) sharding of the K/V
+they were rewritten from, and the P fold leaves FFN/MoE input-matrix specs
+unchanged (same shapes).  The merged-only leaves — ``input_proj`` (audio
+front-end T_0), ``embed_bias`` / ``b_out`` (affine-merge biases) — get
+explicit rows below.  NOTE: with wq gone the activation side loses its TP
+head-sharding anchor; forward passes re-anchor via explicit
+with_sharding_constraint (see models.transformer) using the same
+``heads`` rule.
+
 Uneven shardings (e.g. 40 heads over 16 chips) are permitted — GSPMD pads —
 and flagged by ``check_divisibility`` so the roofline/perf pass can see the
 padding waste explicitly.
@@ -87,6 +97,11 @@ def _param_spec(path: Tuple[str, ...], ndim: int, rules: ShardingRules) -> P:
         ("moe", "w_gate"): (tp("experts"), None, None),
         ("moe", "w_up"): (tp("experts"), None, None),
         ("moe", "w_down"): (tp("experts"), None, None),
+        # merged-only leaves (Q/P-removed trees, core/merge.py)
+        ("", "input_proj"): (None, tp("heads")),  # audio T_0: columns = q heads
+        ("", "embed_bias"): (None,),  # stream-basis biases stay replicated
+        ("", "b_out"): (None,),
+        ("layers", "b_out"): (None,),
         ("ssm", "in_proj"): (tp("ffn"), None),  # row (d_model) sharded
         ("ssm", "out_proj"): (tp("ffn"), None),  # row (d_inner) sharded
         ("ssm", "conv_kernel"): (None, None),

@@ -1,0 +1,9 @@
+"""JAX-version compatibility shims shared by the kernel modules.
+
+Keep every cross-version rename in this one file so the rule is updated
+in exactly one place.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed CompilerParams -> TPUCompilerParams and back across JAX releases
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -9,6 +9,19 @@ buffer maintains — the kernel itself is layout-agnostic.
 
 The (G, bk) score matmul is small on the M dimension by nature of decode;
 the kernel keeps D and bk MXU-aligned which is where the FLOPs are.
+
+Two variants:
+  * ``decode_attention_bhsd`` — generic: q is a separately-projected
+    (B, Hkv, G, D) tensor, the cache arrives transposed to head-major
+    (B, Hkv, S, D).
+  * ``decode_attention_merged_bsd`` — the paper's merged (Q/P-removed)
+    serving fast path: there is NO q projection, the RoPE'd residual
+    stream (B, d_model) *is* the query (d_model = Hq·D for merged
+    configs, paper Fig 1b).  The kernel takes the stream reshaped
+    (bitcast, no copy) to (B, Hq, D) and reads K*/V* in the serving
+    cache's NATIVE (B, S, Hkv, D) layout — no per-step head-major
+    transpose of the whole cache — then writes the attention output
+    straight into the FFN-input basis (no P projection exists).
 """
 from __future__ import annotations
 
@@ -20,27 +33,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG = -1e30
 
 
-def _decode_kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                   nk: int):
-    ik = pl.program_id(2)
+def _online_softmax_block(ik, q, k, v, kpos, qpos, m_scr, l_scr, acc_scr,
+                          *, scale: float, window: int):
+    """Shared flash-decoding state update for one (G, bk) kv block.
 
+    ``q`` (G, D) and ``k``/``v`` (bk, D) are already sliced from the
+    variant-specific block layout; the m/l/acc scratch carries the
+    online-softmax state across the sequential kv-block axis.
+    """
     @pl.when(ik == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
-    k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+    qf = q.astype(jnp.float32) * scale  # (G, D)
+    s = jax.lax.dot_general(qf, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, bk)
 
-    kpos = kpos_ref[0]  # (bk,) int32
-    qpos = qpos_ref[0, 0]  # scalar int32
     ok = (kpos >= 0) & (kpos <= qpos)
     if window > 0:
         ok &= qpos - kpos < window
@@ -53,17 +68,29 @@ def _decode_kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
     alpha = jnp.exp(m_prev - m_next)
     p = jnp.where(mask, jnp.exp(s - m_next), 0.0)
 
-    v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
     acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
-        p, v, preferred_element_type=jnp.float32)
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
     l_scr[:, :1] = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
     m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
 
+
+def _finish_output(l_scr, acc_scr):
+    l = l_scr[:, :1]
+    l = jnp.where(l == 0.0, 1.0, l)
+    return acc_scr[...] / l
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   nk: int):
+    ik = pl.program_id(2)
+    _online_softmax_block(ik, q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
+                          kpos_ref[0], qpos_ref[0, 0], m_scr, l_scr, acc_scr,
+                          scale=scale, window=window)
+
     @pl.when(ik == nk - 1)
     def _finish():
-        l = l_scr[:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        o_ref[0, 0] = _finish_output(l_scr, acc_scr).astype(o_ref.dtype)
 
 
 def decode_attention_bhsd(
@@ -103,9 +130,80 @@ def decode_attention_bhsd(
             pltpu.VMEM((G, 128), jnp.float32),
             pltpu.VMEM((G, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
         name="decode_attention",
     )(q, k, v, kv_positions, q_position)
+
+
+def _decode_kernel_merged(u_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
+                          m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                          nk: int):
+    ik = pl.program_id(2)
+    # the stream block holds this kv head's G query heads contiguously;
+    # k/v blocks are sliced from the NATIVE (B, S, Hkv, D) cache layout
+    _online_softmax_block(ik, u_ref[0], k_ref[0, :, 0], v_ref[0, :, 0],
+                          kpos_ref[0], qpos_ref[0, 0], m_scr, l_scr, acc_scr,
+                          scale=scale, window=window)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = _finish_output(l_scr, acc_scr).astype(o_ref.dtype)
+
+
+def decode_attention_merged_bsd(
+    u: jnp.ndarray,  # (B, Hq, D) — RoPE'd residual stream viewed as heads
+    k: jnp.ndarray,  # (B, S, Hkv, D) — K* cache, NATIVE serving layout
+    v: jnp.ndarray,  # (B, S, Hkv, D) — V* cache, native layout
+    kv_positions: jnp.ndarray,  # (B, S) int32; -1 marks empty slots
+    q_position: jnp.ndarray,  # (B, 1) int32
+    *,
+    sliding_window: int = 0,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged-weight decode: stream-as-query, no q operand to project.
+
+    Grid and softmax state as in ``decode_attention_bhsd``; the blocking
+    differs so K*/V* stream from the cache without a head-major transpose
+    (the transpose would rewrite the whole cache every decoded token) and
+    the output lands as (B, Hq, D) — a bitcast of the (B, d_model)
+    FFN-input stream the merged block consumes next.
+    """
+    B, Hq, D = u.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    bk = min(block_k, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel_merged, scale=scale,
+                               window=sliding_window, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            # kv head h owns query heads [h*G, (h+1)*G) of the stream
+            pl.BlockSpec((1, G, D), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), u.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention_merged",
+    )(u, k, v, kv_positions, q_position)

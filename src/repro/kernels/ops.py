@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.decode_attention import decode_attention_bhsd
+from repro.kernels.decode_attention import (decode_attention_bhsd,
+                                            decode_attention_merged_bsd)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -77,6 +78,39 @@ def decode_attention(
         kv_positions.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
         sliding_window=sliding_window, block_k=bk, interpret=interpret)
     return out.reshape(B, Hq, D)
+
+
+@partial(jax.jit, static_argnames=("n_kv_heads", "sliding_window", "interpret",
+                                   "block_k"))
+def decode_attention_merged(
+    u: jnp.ndarray,  # (B, d_model) — RoPE'd residual stream = merged query
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D) — K*, native serving layout
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D) — V*, native layout
+    *,
+    kv_positions: jnp.ndarray,  # (B, S) int32, -1 empty
+    q_position: jnp.ndarray,  # (B,) int32
+    n_kv_heads: int,
+    sliding_window: int = 0,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) decode fast path -> (B, d_model) FFN-input stream.
+
+    No q projection exists in merged configs, so the stream is handed to
+    the kernel directly — the (B, Hq, D) view is a bitcast, and the cache
+    is consumed untransposed.
+    """
+    B, d = u.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    assert Hkv == n_kv_heads, (Hkv, n_kv_heads)
+    D = k_cache.shape[3]
+    assert d % D == 0 and (d // D) % Hkv == 0, (d, D, Hkv)
+    bk = _pick_block(S, block_k)
+    out = decode_attention_merged_bsd(
+        u.reshape(B, d // D, D), k_cache, v_cache,
+        kv_positions.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
+        sliding_window=sliding_window, block_k=bk, interpret=interpret)
+    return out.reshape(B, d)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

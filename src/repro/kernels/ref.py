@@ -63,6 +63,29 @@ def ref_decode_attention(
     return o.astype(q.dtype)
 
 
+def ref_decode_attention_merged(
+    u: jnp.ndarray,  # (B, d_model) — RoPE'd residual stream = merged query
+    k: jnp.ndarray,  # (B, S, Hkv, D) — native serving cache layout
+    v: jnp.ndarray,  # (B, S, Hkv, D)
+    kv_positions: jnp.ndarray,  # (B, S) int32, -1 empty
+    q_position: jnp.ndarray,  # (B, 1) int32
+    *,
+    n_kv_heads: int,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the merged decode kernel: reshape the stream to grouped
+    heads and defer to the generic decode oracle; output back in stream
+    (FFN-input) basis."""
+    B, d = u.shape
+    D = k.shape[3]
+    G = d // D // n_kv_heads
+    o = ref_decode_attention(
+        u.reshape(B, n_kv_heads, G, D), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), kv_positions, q_position,
+        sliding_window=sliding_window)
+    return o.reshape(B, d)
+
+
 def ref_ssd(
     x: jnp.ndarray,  # (B, S, H, P)
     dt: jnp.ndarray,  # (B, S, H) post-softplus

@@ -42,6 +42,22 @@ _SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|u32|s32|u16|s16|pred|u8|s8|c64)"
                        r"\[([0-9,]*)\]")
 
 
+def cost_dict(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a flat dict; newer versions (0.4.37 here) return a
+    list with one dict per executable module.  Sum the per-module entries
+    into one dict so callers can ``.get("flops")`` uniformly."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        merged: Dict[str, float] = {}
+        for c in cost:
+            for k, v in (c or {}).items():
+                merged[k] = merged.get(k, 0.0) + float(v)
+        return merged
+    return dict(cost or {})
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, Any]:
     """Sum operand bytes of every collective op in (post-SPMD) HLO text.
 
@@ -214,7 +230,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                       shard_qkv=shard_qkv)
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     hlo = compiled.as_text()
     coll_raw = collective_bytes(hlo)
     if save_hlo:
@@ -264,7 +280,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                   unroll=True, shard_logits=shard_logits,
                                   zero1=zero1, shard_stream=shard_stream,
                                   shard_qkv=shard_qkv)
-            cost_l = c.cost_analysis()
+            cost_l = cost_dict(c)
             coll_l = collective_bytes(c.as_text())
             pts.append({"flops": float(cost_l.get("flops", 0.0)),
                         "bytes": float(cost_l.get("bytes accessed", 0.0)),

@@ -102,7 +102,9 @@ def build_step(cfg: ModelConfig, kind: str, *, grad_accum: int = 1,
         return prefill, ("params", "batch")
     if kind == "decode":
         def serve_step(params, token, cache):
+            # qkv_sharding re-anchors TP head sharding for merged
+            # (Q/P-removed) styles, which have no wq matmul to anchor it
             return forward_decode(params, cfg, token, cache, impl=impl,
-                                  unroll=unroll)
+                                  unroll=unroll, qkv_sharding=qkv_sharding)
         return serve_step, ("params", "token", "cache")
     raise ValueError(kind)

@@ -131,6 +131,46 @@ def decode_attention_core(
     )
 
 
+def decode_attention_core_merged(
+    u: jnp.ndarray,  # (B, d_model) — RoPE'd residual stream (merged query)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D) — K*, native serving layout
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D) — V*
+    *,
+    kv_positions: jnp.ndarray,  # (B, S) int32; -1 marks empty slots
+    q_position: jnp.ndarray,  # (B,) int32
+    n_kv_heads: int,
+    sliding_window: int = 0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Merged (Q/P-removed, paper Fig 1b) decode attention.
+
+    In ``skipless_merged`` qp-variant blocks the residual stream *is* the
+    query basis (Q folded into the producers of u), and no P projection
+    exists — the attention output is already the FFN input.  So this core
+    takes the stream directly, skips any q projection, and returns the
+    (B, d_model) stream for the FFN.  Numerics are identical to
+    ``decode_attention_core_positions`` on the bitcast head view.
+    """
+    B, d = u.shape
+    D = k_cache.shape[3]
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.decode_attention_merged(
+            u, k_cache, v_cache, kv_positions=kv_positions,
+            q_position=q_position, n_kv_heads=n_kv_heads,
+            sliding_window=sliding_window,
+            interpret=(impl == "pallas_interpret"),
+        )
+
+    out = decode_attention_core_positions(
+        u.reshape(B, d // D, D), k_cache, v_cache,
+        kv_positions=kv_positions, q_position=q_position,
+        sliding_window=sliding_window, impl=impl)
+    return out.reshape(B, d)
+
+
 def decode_attention_core_positions(
     q: jnp.ndarray,  # (B, Hq, D)
     k_cache: jnp.ndarray,  # (B, S, Hkv, D)

@@ -639,28 +639,65 @@ def _prefill_ssm_states(params, cfg: ModelConfig, inputs, vision, impl,
 # decode: one token against the cache
 # ---------------------------------------------------------------------------
 
-def _attn_step(lp, cfg: ModelConfig, u1, k_layer, v_layer, kv_pos, length,
-               merged: bool, impl: str):
-    """u1 (B,1,d); k_layer/v_layer (B,Sc,Hkv,Dh). Returns (cat, new_k, new_v)."""
-    B = u1.shape[0]
-    q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, merged)
+def _rope_and_insert(cfg: ModelConfig, q, k_new, v_new, k_layer, v_layer,
+                     length):
+    """RoPE the step's q/k at position ``length`` and write the new k/v into
+    the ring-buffer slot (slot = length % Sc under sliding window).
+    Returns (q, k_layer, v_layer)."""
     pos = length[:, None]  # (B,1)
     q = apply_rope(q, pos, style=cfg.rope_style, theta=cfg.rope_theta,
                    fraction=cfg.rope_fraction)
     k_new = apply_rope(k_new, pos, style=cfg.rope_style, theta=cfg.rope_theta,
                        fraction=cfg.rope_fraction)
     Sc = k_layer.shape[1]
-    slot = (length % Sc).astype(jnp.int32)  # ring buffer under sliding window
+    slot = (length % Sc).astype(jnp.int32)
 
     def upd(cache, new, i):
         return jax.lax.dynamic_update_slice(cache, new, (i, 0, 0))
 
     k_layer = jax.vmap(upd)(k_layer, k_new.astype(k_layer.dtype), slot)
     v_layer = jax.vmap(upd)(v_layer, v_new.astype(v_layer.dtype), slot)
+    return q, k_layer, v_layer
 
+
+def _attn_step(lp, cfg: ModelConfig, u1, k_layer, v_layer, kv_pos, length,
+               merged: bool, impl: str):
+    """u1 (B,1,d); k_layer/v_layer (B,Sc,Hkv,Dh). Returns (cat, new_k, new_v)."""
+    B = u1.shape[0]
+    q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, merged)
+    q, k_layer, v_layer = _rope_and_insert(cfg, q, k_new, v_new,
+                                           k_layer, v_layer, length)
     out = attn_mod.decode_attention_core_positions(
         q[:, 0], k_layer, v_layer,
         kv_positions=kv_pos, q_position=length,
+        sliding_window=cfg.sliding_window, impl=impl)
+    return out.reshape(B, 1, cfg.attn_dim), k_layer, v_layer
+
+
+def _attn_step_merged(lp, cfg: ModelConfig, u1, k_layer, v_layer, kv_pos,
+                      length, impl: str, qkv_sharding=None):
+    """Merged (Q/P-removed) decode fast path — paper Fig 1b cashed in at
+    serve time.  The residual stream is the query basis, so the only
+    attention-side weights read per token are K*/V*: no d×d Q matmul, no
+    P matmul, and the attention output lands directly in the FFN-input
+    basis (the kernel also consumes the cache in its native layout).
+    Numerically identical to the generic ``_attn_step`` with variant
+    "qp"; it exists so serving never touches the eliminated projections.
+    """
+    B = u1.shape[0]
+    # variant "qp": _project_qkv returns the stream itself as q (identity)
+    q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, True)
+    if qkv_sharding is not None:
+        # merged styles lose the TP sharding anchor for q (no wq matmul to
+        # propagate head-sharding from) — same fix as _self_attention_seq
+        q = jax.lax.with_sharding_constraint(q, qkv_sharding)
+        k_new = jax.lax.with_sharding_constraint(k_new, qkv_sharding)
+        v_new = jax.lax.with_sharding_constraint(v_new, qkv_sharding)
+    q, k_layer, v_layer = _rope_and_insert(cfg, q, k_new, v_new,
+                                           k_layer, v_layer, length)
+    out = attn_mod.decode_attention_core_merged(
+        q.reshape(B, cfg.attn_dim), k_layer, v_layer,
+        kv_positions=kv_pos, q_position=length, n_kv_heads=cfg.n_kv_heads,
         sliding_window=cfg.sliding_window, impl=impl)
     return out.reshape(B, 1, cfg.attn_dim), k_layer, v_layer
 
@@ -704,6 +741,14 @@ def apply_block_step(p, cfg: ModelConfig, kind: str, u1, layer_cache, ctx):
             cat = _cross_attn_step(p["attn"], cfg, x, layer_cache["ck"],
                                    layer_cache["cv"], merged, impl)
             return cat if merged else _attn_out_proj(p["attn"], cat)
+        if merged and kind == "attn" and cfg.merged_variant == "qp":
+            # merged decode fast path: stream-as-query, no Q/P weight reads
+            cat, nk, nv = _attn_step_merged(
+                p["attn"], cfg, x, layer_cache["k"], layer_cache["v"],
+                ctx["kv_pos"], length, impl,
+                qkv_sharding=ctx.get("qkv_sharding"))
+            new_cache.update(k=nk, v=nv)
+            return cat
         cat, nk, nv = _attn_step(p["attn"], cfg, x, layer_cache["k"],
                                  layer_cache["v"], ctx["kv_pos"], length,
                                  merged, impl)
@@ -740,14 +785,24 @@ def apply_block_step(p, cfg: ModelConfig, kind: str, u1, layer_cache, ctx):
 
 
 def forward_decode(params, cfg: ModelConfig, token, cache: DecodeCache, *,
-                   impl: str = "xla", unroll: bool = False):
-    """token: (B,) int32 (or (B,d) frames). Returns (logits (B,V), new cache)."""
+                   impl: str = "xla", unroll: bool = False,
+                   qkv_sharding=None):
+    """token: (B,) int32 (or (B,d) frames). Returns (logits (B,V), new cache).
+
+    Dispatches per ``cfg.block_style``: merged (Q/P-removed) styles with
+    the "qp" variant take the merged fast path (``_attn_step_merged``) —
+    the per-token attention reads only K*/V* weights and the merged
+    ``b_out`` bias is applied in-stream after the FFN.  ``qkv_sharding``
+    re-anchors TP head sharding for merged styles (no wq matmul).
+    """
     B = token.shape[0]
-    cdt = dtype_of(cfg.dtype)
-    if token.dtype in (jnp.int32, jnp.int64):
-        h = apply_embedding(params["embed"], token[:, None], cdt)
-    else:
-        h = token[:, None, :].astype(cdt)
+    # embed through the same front-end as the seq path: skipless styles
+    # scale the embedding output, and merged trees fold Q_0 into the table
+    # plus optional input_proj / embed_bias — skipping any of these makes
+    # decode diverge from prefill
+    inputs = token[:, None] if token.dtype in (jnp.int32, jnp.int64) \
+        else token[:, None, :]
+    h = embed_inputs(params, cfg, inputs)
 
     plan = layer_plan(cfg)
     # mark the new token's slot as valid BEFORE attention so it attends to
@@ -757,7 +812,8 @@ def forward_decode(params, cfg: ModelConfig, token, cache: DecodeCache, *,
         Sc = kv_pos.shape[1]
         slot = (cache.length % Sc).astype(jnp.int32)
         kv_pos = jax.vmap(lambda pr, s, l: pr.at[s].set(l))(kv_pos, slot, cache.length)
-    ctx = {"length": cache.length, "kv_pos": kv_pos, "impl": impl}
+    ctx = {"length": cache.length, "kv_pos": kv_pos, "impl": impl,
+           "qkv_sharding": qkv_sharding}
 
     def layer_cache_slices(kind):
         if kind == "ssm":

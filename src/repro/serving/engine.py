@@ -13,6 +13,17 @@ Design (vLLM-style, TPU/JAX-native):
 
 The engine is mesh-aware: given a mesh it shards params/caches with the
 distribution-layer rules and jits with explicit shardings.
+
+Merged (Q/P-removed) models are first-class: for ``skipless_merged`` /
+``residual_qpfree`` configs with the "qp" variant, ``serve_step`` routes
+through the merged decode fast path (``models.transformer._attn_step_merged``
+-> ``kernels.decode_attention_merged``) — per-token attention reads only the
+K*/V* weights, the stream is the query, and the output lands directly in
+the FFN-input basis.  Prefill and slot insert are layout-identical to the
+unmerged case (the cache holds K*/V* in the same (L, B, Sc, Hkv, Dh)
+buffers), so continuous batching needs no merged-specific plumbing.  Under
+a mesh the engine re-anchors TP head sharding on q/k/v explicitly (merged
+layouts have no wq matmul to propagate it from).
 """
 from __future__ import annotations
 
@@ -56,6 +67,7 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, mesh=None,
                  impl: str = "xla"):
         assert cfg.causal, "serving requires a decoder"
+        cfg.validate_style()  # merged styles need a square Q basis
         self.cfg, self.sc, self.mesh = cfg, sc, mesh
         self.params = params
         self.impl = impl
@@ -80,8 +92,14 @@ class Engine:
                 lambda s: NamedSharding(mesh, s),
                 shd.evenly(_trim_cache_spec(shd.cache_pspecs(cfg, rules),
                                             self.cache), cshape, mesh))
+            qkv_sh = None
+            if self.merged_fast_path:
+                # K*/V*-only layout: re-anchor TP head sharding explicitly
+                qkv_sh = NamedSharding(
+                    mesh, P(rules.dp, None, rules.axis("heads"), None))
             self._decode = jax.jit(
-                lambda p, t, c: forward_decode(p, self.cfg, t, c, impl=impl),
+                lambda p, t, c: forward_decode(p, self.cfg, t, c, impl=impl,
+                                               qkv_sharding=qkv_sh),
                 donate_argnums=(2,),
                 in_shardings=(psh, NamedSharding(mesh, P()), csh),
                 out_shardings=(None, csh))
@@ -98,6 +116,28 @@ class Engine:
                     p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl))
 
         self._last_token = np.zeros((sc.n_slots,), np.int32)
+
+    # ------------------------------------------------------------------
+    @property
+    def merged_fast_path(self) -> bool:
+        """True when serve_step routes through the merged (Q/P-removed)
+        decode fast path: no Q or P weights exist, so per-token attention
+        streams only K*/V* from HBM."""
+        return (self.cfg.has_attention
+                and self.cfg.block_style in ("skipless_merged",
+                                             "residual_qpfree")
+                and self.cfg.merged_variant == "qp")
+
+    def compiled_decode(self):
+        """Lower + compile serve_step for inspection (no execution).
+
+        Used by benchmarks to read ``cost_analysis()`` / HLO of the exact
+        program the engine runs — e.g. HBM bytes/token with and without
+        the eliminated Q/P weight reads."""
+        pshape = jax.eval_shape(lambda: self.params)
+        tshape = jax.ShapeDtypeStruct((self.sc.n_slots,), jnp.int32)
+        cshape = jax.eval_shape(lambda: self.cache)
+        return self._decode.lower(pshape, tshape, cshape).compile()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request, vision: Optional[np.ndarray] = None) -> bool:

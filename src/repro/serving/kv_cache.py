@@ -5,6 +5,11 @@ these utilities insert a freshly-prefilled single-request cache into slot
 ``i`` and evict finished slots, using dynamic_update_slice so the engine's
 jitted update is in-place (donated) on device.
 
+Merged (Q/P-removed) models use the SAME cache layout: prefill writes
+K* = x·(Q⁻¹K) and V* = x·(Q⁻¹V) into the same (L, B, Sc, Hkv, Dh) buffers,
+and the merged decode kernel reads them untransposed (its blocking is
+native to this layout) — so slot insert/evict below is style-agnostic.
+
 Batch axis position by field:
   k/v            (L, B, Sc, Hkv, Dh)   axis 1
   kv_pos         (B, Sc)               axis 0

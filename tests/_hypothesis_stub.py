@@ -1,0 +1,37 @@
+"""Fallback for the optional ``hypothesis`` dev dependency.
+
+Tier-1 must collect and run without hypothesis installed (see
+requirements-dev.txt); test modules import this stub when the real package
+is missing, so only the property-based tests skip — everything else in the
+module still runs.
+"""
+import pytest
+
+
+def settings(**_kw):
+    return lambda f: f
+
+
+def given(*_a, **_kw):
+    def deco(f):
+        # replace the test with an argument-free skip stub: pytest must not
+        # try to resolve the @given parameters as fixtures
+        @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+        def stub():
+            pass
+
+        stub.__name__ = f.__name__
+        stub.__doc__ = f.__doc__
+        return stub
+
+    return deco
+
+
+class _Strategies:
+    """Accepts any strategy constructor call at module-import time."""
+
+    def __getattr__(self, _name):
+        return lambda *a, **kw: None
+
+
+st = _Strategies()

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -113,6 +117,56 @@ def test_decode_attention_ring_layout():
                                     qp[:, None], sliding_window=16
                                     ).reshape(B, Hq, D)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# merged (Q/P-removed) decode attention — stream-as-query, native cache layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,B,S,Hq,Hkv,D,win,fill", [
+    (jnp.float32, 2, 128, 4, 2, 64, 0, 64),     # GQA
+    (jnp.bfloat16, 2, 128, 4, 2, 64, 0, 64),
+    (jnp.float32, 2, 64, 8, 8, 32, 24, 40),     # MHA + sliding window
+    (jnp.bfloat16, 1, 128, 8, 1, 128, 0, 128),  # MQA, full cache
+])
+def test_decode_attention_merged(B, S, Hq, Hkv, D, win, fill, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    u = jax.random.normal(ks[0], (B, Hq * D), dtype)  # the residual stream
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    kv_pos = jnp.where(jnp.arange(S)[None, :] < fill,
+                       jnp.arange(S, dtype=jnp.int32)[None, :], -1)
+    kv_pos = jnp.broadcast_to(kv_pos, (B, S))
+    q_position = jnp.full((B,), fill - 1, jnp.int32)
+    out = ops.decode_attention_merged(
+        u, kc, vc, kv_positions=kv_pos, q_position=q_position,
+        n_kv_heads=Hkv, sliding_window=win, block_k=32, interpret=True)
+    want = ref.ref_decode_attention_merged(
+        u, kc, vc, kv_pos, q_position[:, None], n_kv_heads=Hkv,
+        sliding_window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_merged_matches_generic():
+    """Same query/cache -> merged (native-layout) and generic kernels agree."""
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    u = jax.random.normal(ks[0], (B, Hq * D))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D))
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    qp = jnp.full((B,), S - 1, jnp.int32)
+    merged = ops.decode_attention_merged(
+        u, kc, vc, kv_positions=kv_pos, q_position=qp, n_kv_heads=Hkv,
+        block_k=16, interpret=True)
+    generic = ops.decode_attention(
+        u.reshape(B, Hq, D), kc, vc, kv_positions=kv_pos, q_position=qp,
+        block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(merged),
+                               np.asarray(generic.reshape(B, Hq * D)),
+                               atol=3e-5)
 
 
 # ---------------------------------------------------------------------------

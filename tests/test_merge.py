@@ -8,7 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduce_config
 from repro.core import (condition_numbers, decode_speedup, merge_skipless,

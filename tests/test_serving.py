@@ -44,6 +44,24 @@ def test_slot_reuse_more_requests_than_slots():
     assert len(eng.free_slots) == 2 and not eng.active
 
 
+def test_engine_merged_fast_path_matches_oracle():
+    """Continuous batching over a QP-merged model: serve_step takes the
+    merged decode fast path and must stay token-exact vs the
+    full-sequence oracle on the merged weights."""
+    from repro.core import merge_skipless
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params["embed"]["table"] = params["embed"]["table"] * 50.0
+    mparams, mcfg = merge_skipless(params, cfg, "qp")
+    eng = Engine(mcfg, mparams, ServeConfig(n_slots=2, max_len=48))
+    assert eng.merged_fast_path
+    prompts = [np.arange(5) % cfg.vocab_size + i for i in range(3)]
+    outs = eng.generate(prompts, max_new_tokens=6)
+    for p, o in zip(prompts, outs):
+        assert o == _greedy_oracle(mparams, mcfg, p, 6), p[:3]
+
+
 def test_eos_terminates_early():
     cfg = reduce_config(get_config("llama3.2-1b"))
     params = init_params(jax.random.PRNGKey(0), cfg)

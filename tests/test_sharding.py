@@ -106,7 +106,8 @@ jfn = jax.jit(fn, in_shardings=(psh, osh, bsh), out_shardings=(psh, osh, None),
               donate_argnums=(0, 1))
 lowered = jfn.lower(pshape, oshape, ispec)
 compiled = lowered.compile()
-cost = compiled.cost_analysis()
+from repro.launch.dryrun import cost_dict  # list-vs-dict cost_analysis compat
+cost = cost_dict(compiled)
 print(json.dumps({{"ok": True, "flops": float(cost.get("flops", -1))}}))
 """
 
@@ -130,8 +131,8 @@ def test_collective_bytes_parser():
   ROOT %t = (f32[2]{0}) tuple(f32[2]{0} %z)
 """
     r = collective_bytes(hlo)
+    # the fake ROOT tuple op must not be counted as a collective
     assert r["counts"]["all-reduce"] == 1
     assert r["counts"]["all-gather"] == 1
     assert r["per_op_bytes"]["all-reduce"] == 128 * 256 * 4
     assert r["per_op_bytes"]["all-gather"] == 64 * 32 * 2
-"""fake tuple op must not be counted"""

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.configs import get_config, reduce_config
 from repro.training import (AdamW, ByteCorpus, DataConfig, StragglerMonitor,

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verify — the single command CHANGES.md / ROADMAP.md reference:
+#
+#   tools/check.sh [extra pytest args]
+#
+# Installs the optional dev deps best-effort (offline containers still run:
+# property-based tests skip via tests/_hypothesis_stub.py) and runs the
+# full suite with src/ on PYTHONPATH.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt 2>/dev/null ||
+    echo "[check] dev-dep install failed (offline?) — property tests will skip"
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
