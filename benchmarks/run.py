@@ -14,13 +14,15 @@ def main() -> None:
     sys.path.insert(0, "src")
     from benchmarks import (bench_decode_bandwidth, bench_decode_merged,
                             bench_equivalence, bench_kernels, bench_numerics,
-                            bench_roofline, bench_weight_table)
+                            bench_paged_serving, bench_roofline,
+                            bench_weight_table)
 
     suites = [
         ("weight_table[paper_s3]", bench_weight_table),
         ("equivalence[paper_s4]", bench_equivalence),
         ("decode_bandwidth[paper_s3_ext]", bench_decode_bandwidth),
         ("decode_merged[fastpath]", bench_decode_merged),
+        ("paged_serving[subsystem]", bench_paged_serving),
         ("numerics[merged_runtime]", bench_numerics),
         ("kernels", bench_kernels),
         ("roofline[dryrun]", bench_roofline),
@@ -45,6 +47,13 @@ def main() -> None:
             elif name.startswith("decode_merged"):
                 m = next(r for r in rows if r["arch"] == "mistral-7b")
                 derived = f"mistral_bytes_saved={m['bytes_saved_frac']:.3f}"
+            elif name.startswith("paged_serving"):
+                dn = next(r for r in rows if r["weights"] == "merged_qp"
+                          and r["cache"] == "dense")
+                pg = next(r for r in rows if r["weights"] == "merged_qp"
+                          and r["cache"] == "paged")
+                derived = (f"streams_paged_vs_dense="
+                           f"{pg['peak_streams']}v{dn['peak_streams']}")
             elif name.startswith("numerics"):
                 o = next(r for r in rows if r["init"] == "orthogonal"
                          and r["dtype"] == "float32")

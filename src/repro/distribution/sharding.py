@@ -197,6 +197,27 @@ def cache_pspecs(cfg: ModelConfig, rules: ShardingRules):
     )
 
 
+def paged_cache_pspecs(cfg: ModelConfig, rules: ShardingRules):
+    """PartitionSpecs for a PagedDecodeCache (serving block pool).
+
+    The pool's PHYSICAL-BLOCK axis shards over the model axis — the paged
+    analogue of the dense cache's sequence split (flash-decoding split-K:
+    each chip scores the pages it owns and XLA combines softmax stats) —
+    because kv-head counts (8, 5, 2, …) rarely divide a 16-way TP axis
+    while pool sizes are free to.  Block tables and lengths are tiny
+    per-slot int32 vectors: batch-sharded like the dense bookkeeping.
+    """
+    from repro.models.transformer import PagedDecodeCache
+
+    dp, tp = rules.dp, rules.axis("heads")
+    pool = P(None, tp, None, None, None)
+    return PagedDecodeCache(
+        k=pool, v=pool,
+        block_tables=P(dp, None),
+        length=P(dp),
+    )
+
+
 def logits_pspec(rules: ShardingRules, seq_dim: bool = True) -> P:
     if seq_dim:
         return P(rules.dp, None, rules.axis("vocab"))

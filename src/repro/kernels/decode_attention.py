@@ -22,6 +22,18 @@ Two variants:
     cache's NATIVE (B, S, Hkv, D) layout — no per-step head-major
     transpose of the whole cache — then writes the attention output
     straight into the FFN-input basis (no P projection exists).
+
+Paged variants (``decode_attention_paged_bhsd`` /
+``decode_attention_paged_merged_bsd``): the cache is a POOL of physical
+pages (n_blocks, block_size, Hkv, D) shared by all slots, and each slot
+owns a per-request block table (B, MB) of physical page ids (-1 =
+unmapped).  The sequential kv axis of the grid walks LOGICAL blocks; the
+block table is a scalar-prefetch operand so the k/v BlockSpec index_maps
+gather the mapped physical page (clamped to page 0 when unmapped — the
+in-kernel mask zeroes those scores).  kv positions are not stored: logical
+block j covers positions [j·bs, (j+1)·bs), so the kernel derives them from
+the grid index and the online-softmax update is shared with the dense
+variants unchanged.
 """
 from __future__ import annotations
 
@@ -207,3 +219,156 @@ def decode_attention_merged_bsd(
         interpret=interpret,
         name="decode_attention_merged",
     )(u, k, v, kv_positions, q_position)
+
+
+# ---------------------------------------------------------------------------
+# paged variants: block-table gather over a physical page pool
+# ---------------------------------------------------------------------------
+
+def _paged_kpos(block_id, j, bs):
+    """Positions covered by logical block ``j`` (-1 everywhere if unmapped).
+
+    2D iota then rank-reduce: TPU vector units have no 1D iota."""
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    return jnp.where(block_id >= 0, kpos, -1)
+
+
+def _decode_kernel_paged(bt_ref, q_ref, k_ref, v_ref, qpos_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                         bs: int, nb: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    kpos = _paged_kpos(bt_ref[b, j], j, bs)
+    _online_softmax_block(j, q_ref[0, 0], k_ref[0, :, 0], v_ref[0, :, 0],
+                          kpos, qpos_ref[0, 0], m_scr, l_scr, acc_scr,
+                          scale=scale, window=window)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0, 0] = _finish_output(l_scr, acc_scr).astype(o_ref.dtype)
+
+
+def decode_attention_paged_bhsd(
+    q: jnp.ndarray,  # (B, Hkv, G, D) — grouped query heads
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — physical page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D)
+    block_tables: jnp.ndarray,  # (B, MB) int32 physical page ids; -1 unmapped
+    q_position: jnp.ndarray,  # (B, 1) int32
+    *,
+    sliding_window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Generic paged decode: like ``decode_attention_bhsd`` but the kv-block
+    axis walks the slot's block table and gathers physical pages.  The pool
+    keeps the serving cache's native (…, bs, Hkv, D) page layout — pages are
+    written once at append time and never transposed."""
+    B, Hkv, G, D = q.shape
+    NB, bs = k_pool.shape[0], k_pool.shape[1]
+    MB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel_paged, scale=scale,
+                               window=sliding_window, bs=bs, nb=MB)
+
+    def page(b, h, j, bt):  # physical page for logical block j of slot b
+        return (jnp.maximum(bt[b, j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), page),
+            pl.BlockSpec((1, bs, 1, D), page),
+            pl.BlockSpec((1, 1), lambda b, h, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention_paged",
+    )(block_tables.astype(jnp.int32), q, k_pool, v_pool, q_position)
+
+
+def _decode_kernel_paged_merged(bt_ref, u_ref, k_ref, v_ref, qpos_ref, o_ref,
+                                m_scr, l_scr, acc_scr, *, scale: float,
+                                window: int, bs: int, nb: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    kpos = _paged_kpos(bt_ref[b, j], j, bs)
+    _online_softmax_block(j, u_ref[0], k_ref[0, :, 0], v_ref[0, :, 0],
+                          kpos, qpos_ref[0, 0], m_scr, l_scr, acc_scr,
+                          scale=scale, window=window)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0] = _finish_output(l_scr, acc_scr).astype(o_ref.dtype)
+
+
+def decode_attention_paged_merged_bsd(
+    u: jnp.ndarray,  # (B, Hq, D) — RoPE'd residual stream viewed as heads
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — K* page pool, native layout
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — V* page pool
+    block_tables: jnp.ndarray,  # (B, MB) int32 physical page ids; -1 unmapped
+    q_position: jnp.ndarray,  # (B, 1) int32
+    *,
+    sliding_window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) paged decode: stream-as-query over a page pool.
+
+    Combines the paper's serving fast path (no Q projection to read, output
+    straight into the FFN-input basis) with vLLM-style paging — per token
+    the only HBM traffic besides the stream is K*/V* weight reads and the
+    slot's mapped pages."""
+    B, Hq, D = u.shape
+    NB, bs, Hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    MB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel_paged_merged, scale=scale,
+                               window=sliding_window, bs=bs, nb=MB)
+
+    def page(b, h, j, bt):
+        return (jnp.maximum(bt[b, j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, MB),
+        in_specs=[
+            # kv head h owns query heads [h*G, (h+1)*G) of the stream
+            pl.BlockSpec((1, G, D), lambda b, h, j, bt: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), page),
+            pl.BlockSpec((1, bs, 1, D), page),
+            pl.BlockSpec((1, 1), lambda b, h, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, h, j, bt: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), u.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention_paged_merged",
+    )(block_tables.astype(jnp.int32), u, k_pool, v_pool, q_position)

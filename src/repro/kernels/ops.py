@@ -16,7 +16,9 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.decode_attention import (decode_attention_bhsd,
-                                            decode_attention_merged_bsd)
+                                            decode_attention_merged_bsd,
+                                            decode_attention_paged_bhsd,
+                                            decode_attention_paged_merged_bsd)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -139,3 +141,50 @@ def ssd_scan(
     if D is not None:
         y = y + D[None, None, :, None].astype(jnp.float32) * x.astype(jnp.float32)
     return y.astype(x.dtype), fin
+
+
+@partial(jax.jit, static_argnames=("sliding_window", "interpret"))
+def decode_attention_paged(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — physical page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D)
+    *,
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    sliding_window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Generic decode attention over a paged KV pool (block-table gather)."""
+    B, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    out = decode_attention_paged_bhsd(
+        q.reshape(B, Hkv, G, D), k_pool, v_pool,
+        block_tables.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
+        sliding_window=sliding_window, interpret=interpret)
+    return out.reshape(B, Hq, D)
+
+
+@partial(jax.jit, static_argnames=("n_kv_heads", "sliding_window",
+                                   "interpret"))
+def decode_attention_paged_merged(
+    u: jnp.ndarray,  # (B, d_model) — RoPE'd residual stream = merged query
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — K* page pool, native layout
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — V* page pool
+    *,
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    n_kv_heads: int,
+    sliding_window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) decode fast path over a paged KV pool."""
+    B, d = u.shape
+    Hkv, D = k_pool.shape[2], k_pool.shape[3]
+    assert Hkv == n_kv_heads, (Hkv, n_kv_heads)
+    assert d % D == 0 and (d // D) % Hkv == 0, (d, D, Hkv)
+    out = decode_attention_paged_merged_bsd(
+        u.reshape(B, d // D, D), k_pool, v_pool,
+        block_tables.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
+        sliding_window=sliding_window, interpret=interpret)
+    return out.reshape(B, d)

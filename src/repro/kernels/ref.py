@@ -114,3 +114,71 @@ def ref_ssd(
     state0 = jnp.zeros((B, H, P, N), jnp.float32)
     fin, ys = jax.lax.scan(step, state0, xs)
     return ys.transpose(1, 0, 2, 3), fin
+
+
+# ---------------------------------------------------------------------------
+# paged decode oracles (block-table gather over a physical page pool)
+# ---------------------------------------------------------------------------
+
+def ref_paged_gather(
+    pool: jnp.ndarray,  # (NB, bs, Hkv, D) physical page pool
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+) -> jnp.ndarray:
+    """Densify a slot's logical view: -> (B, MB*bs, Hkv, D).
+
+    Unmapped blocks gather page 0; callers must mask them via
+    ``ref_paged_positions`` (-1 there)."""
+    B, MB = block_tables.shape
+    bs = pool.shape[1]
+    k = pool[jnp.maximum(block_tables, 0)]  # (B, MB, bs, Hkv, D)
+    return k.reshape(B, MB * bs, *pool.shape[2:])
+
+
+def ref_paged_positions(block_tables: jnp.ndarray, block_size: int
+                        ) -> jnp.ndarray:
+    """kv positions of the densified view: logical block j covers
+    [j*bs, (j+1)*bs); unmapped blocks are -1 (empty-slot convention)."""
+    B, MB = block_tables.shape
+    pos = jnp.arange(MB * block_size, dtype=jnp.int32)[None, :]
+    mapped = jnp.repeat(block_tables >= 0, block_size, axis=1)
+    return jnp.where(mapped, pos, -1)
+
+
+def ref_decode_attention_paged(
+    q: jnp.ndarray,  # (B, Hkv, G, D)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D)
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D)
+    block_tables: jnp.ndarray,  # (B, MB) int32, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    *,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the paged decode kernel: gather the slot's pages into a
+    dense (B, S, Hkv, D) view and defer to the dense decode oracle."""
+    bs = k_pool.shape[1]
+    k = ref_paged_gather(k_pool, block_tables).transpose(0, 2, 1, 3)
+    v = ref_paged_gather(v_pool, block_tables).transpose(0, 2, 1, 3)
+    kv_pos = ref_paged_positions(block_tables, bs)
+    return ref_decode_attention(q, k, v, kv_pos, q_position[:, None],
+                                sliding_window=sliding_window)
+
+
+def ref_decode_attention_paged_merged(
+    u: jnp.ndarray,  # (B, d_model) — RoPE'd residual stream = merged query
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D)
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D)
+    block_tables: jnp.ndarray,  # (B, MB) int32, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    *,
+    n_kv_heads: int,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the merged paged kernel: stream reshaped to grouped heads,
+    pages densified, output back in the stream (FFN-input) basis."""
+    B, d = u.shape
+    D = k_pool.shape[3]
+    G = d // D // n_kv_heads
+    o = ref_decode_attention_paged(
+        u.reshape(B, n_kv_heads, G, D), k_pool, v_pool, block_tables,
+        q_position, sliding_window=sliding_window)
+    return o.reshape(B, d)

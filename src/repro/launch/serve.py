@@ -6,6 +6,11 @@
 With ``--merged-from-skipless`` the launcher builds a skipless model, runs
 the paper's QP-removal merge, and serves the merged weights — reporting the
 weight/bandwidth savings next to the generated tokens.
+
+``--cache paged`` serves through the block-pool KV cache (admission by
+pages instead of a worst-case slot cap; see serving.paged_kv_cache) —
+``--slots`` then sizes the page pool in dense-slot equivalents while every
+request gets its own batch row.
 """
 from __future__ import annotations
 
@@ -24,6 +29,8 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--cache", default="dense", choices=("dense", "paged"))
+    ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -52,9 +59,17 @@ def main(argv=None):
         print(f"QP removal: {n0:,d} -> {n1:,d} params "
               f"({100 * (n0 - n1) / n0:.1f}% removed)", flush=True)
 
-    eng = Engine(cfg, params, ServeConfig(
-        n_slots=args.slots, max_len=args.max_len,
-        temperature=args.temperature, seed=args.seed))
+    if args.cache == "paged":
+        sc = ServeConfig(
+            n_slots=args.requests, max_len=args.max_len, cache_kind="paged",
+            block_size=args.block_size,
+            n_blocks=args.slots * args.max_len // args.block_size,
+            temperature=args.temperature, seed=args.seed)
+    else:
+        sc = ServeConfig(
+            n_slots=args.slots, max_len=args.max_len,
+            temperature=args.temperature, seed=args.seed)
+    eng = Engine(cfg, params, sc)
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, cfg.vocab_size, size=(args.prompt_len,))
                for _ in range(args.requests)]
@@ -64,6 +79,13 @@ def main(argv=None):
     total_tokens = sum(len(o) for o in outs)
     print(f"served {args.requests} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)", flush=True)
+    if args.cache == "paged":
+        a = eng.pm.allocator
+        print(f"  paged pool: {a.n_blocks} pages, peak used {a.peak_used}, "
+              f"peak streams {eng.stats['peak_active']}, "
+              f"shared {a.n_shared_hits}, cow {a.n_cow}, "
+              f"deferred {eng.stats['n_deferred']}, "
+              f"preempted {eng.stats['n_preempted']}", flush=True)
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:12]}{'…' if len(o) > 12 else ''}")
 

@@ -205,3 +205,91 @@ def decode_attention_core_positions(
     probs = jax.nn.softmax(scores + bias[:, None, None, :], axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(v_cache.dtype), v_cache)
     return out.reshape(B, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# paged decode cores (block-table gather over a physical page pool)
+# ---------------------------------------------------------------------------
+
+def paged_kv_positions(block_tables: jnp.ndarray, block_size: int
+                       ) -> jnp.ndarray:
+    """kv positions of a slot's densified page view: logical block j covers
+    [j*bs, (j+1)*bs); unmapped (-1) blocks stay -1 (empty-slot mask)."""
+    B, MB = block_tables.shape
+    pos = jnp.arange(MB * block_size, dtype=jnp.int32)[None, :]
+    mapped = jnp.repeat(block_tables >= 0, block_size, axis=1)
+    return jnp.broadcast_to(jnp.where(mapped, pos, -1), (B, MB * block_size))
+
+
+def _paged_gather(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """(NB, bs, Hkv, D) pool + (B, MB) tables -> (B, MB*bs, Hkv, D) view."""
+    B, MB = block_tables.shape
+    g = pool[jnp.maximum(block_tables, 0)]  # (B, MB, bs, Hkv, D)
+    return g.reshape(B, MB * pool.shape[1], *pool.shape[2:])
+
+
+def decode_attention_core_paged(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — physical page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D)
+    *,
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    sliding_window: int = 0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """One-token attention against a paged KV pool -> (B, Hq, D).
+
+    The pallas path hands the pool and table straight to the paged kernel
+    (pages are gathered block-by-block inside the grid); the XLA path
+    densifies the slot's logical view first and defers to the dense core.
+    """
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.decode_attention_paged(
+            q, k_pool, v_pool, block_tables=block_tables,
+            q_position=q_position, sliding_window=sliding_window,
+            interpret=(impl == "pallas_interpret"))
+
+    bs = k_pool.shape[1]
+    return decode_attention_core_positions(
+        q, _paged_gather(k_pool, block_tables),
+        _paged_gather(v_pool, block_tables),
+        kv_positions=paged_kv_positions(block_tables, bs),
+        q_position=q_position, sliding_window=sliding_window, impl=impl)
+
+
+def decode_attention_core_paged_merged(
+    u: jnp.ndarray,  # (B, d_model) — RoPE'd residual stream (merged query)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — K* page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) — V* page pool
+    *,
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    n_kv_heads: int,
+    sliding_window: int = 0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) decode attention over a paged KV pool.
+
+    Same contract as ``decode_attention_core_merged`` — the stream is the
+    query and the output stays in the FFN-input basis — with the cache
+    behind a block table instead of a dense per-slot buffer.
+    """
+    B, d = u.shape
+    D = k_pool.shape[3]
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.decode_attention_paged_merged(
+            u, k_pool, v_pool, block_tables=block_tables,
+            q_position=q_position, n_kv_heads=n_kv_heads,
+            sliding_window=sliding_window,
+            interpret=(impl == "pallas_interpret"))
+
+    out = decode_attention_core_paged(
+        u.reshape(B, d // D, D), k_pool, v_pool, block_tables=block_tables,
+        q_position=q_position, sliding_window=sliding_window, impl=impl)
+    return out.reshape(B, d)

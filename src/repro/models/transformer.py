@@ -548,23 +548,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> DecodeCache:
 
 def forward_prefill(params, cfg: ModelConfig, inputs, *, cache_len: int,
                     vision=None, impl: str = "xla", unroll: bool = False,
-                    qkv_sharding=None):
-    """Returns (last_token_logits (B,V), DecodeCache)."""
+                    qkv_sharding=None, true_len=None, full_cache: bool = False):
+    """Returns (last_token_logits (B,V), DecodeCache).
+
+    ``true_len`` (B,) int32 supports bucketed prompts: ``inputs`` may be
+    RIGHT-padded to a bucket length, and causality guarantees positions
+    < true_len are unaffected by the padding — the returned logits are
+    gathered at ``true_len - 1`` and the cache marks padded positions
+    empty (kv_pos = -1) with ``length = true_len``, so decode overwrites
+    them in order.  ``None`` means the whole sequence is real.
+
+    ``full_cache`` keeps the cache ``cache_len`` long even for
+    sliding-window configs (whose dense serving cache is a window-sized
+    ring buffer): the paged serving layer stores absolute positions and
+    masks the window in the kernel, so it needs every prompt position.
+    """
     B, S = inputs.shape[0], inputs.shape[1]
     logits, aux, kvs = forward_seq(params, cfg, inputs, vision=vision,
                                    impl=impl, collect_kv=True, unroll=unroll,
                                    qkv_sharding=qkv_sharding)
-    cache = init_cache(cfg, B, cache_len)
+    cache_cfg = cfg.with_(sliding_window=0) if full_cache else cfg
+    cache = init_cache(cache_cfg, B, cache_len)
     Sc = cache.k.shape[2] if cache.k is not None else 0
 
     def place(kv_stacked):
-        # kv_stacked: (L, B, S, Hkv, Dh) -> keep the last Sc positions
+        # kv_stacked: (L, B, S, Hkv, Dh) -> keep the last Sc positions,
+        # ROLLED into ring phase: decode writes position p at slot p % Sc,
+        # so position S-Sc+i must land at index (S-Sc+i) % Sc — without the
+        # roll, decode after a longer-than-window prompt overwrites live
+        # in-window entries instead of the expired ones.
         if S >= Sc:
-            return kv_stacked[:, :, S - Sc:, :, :]
+            kept = kv_stacked[:, :, S - Sc:, :, :]
+            shift = (S - Sc) % Sc
+            return jnp.roll(kept, shift, axis=2) if shift else kept
         pad = [(0, 0), (0, 0), (0, Sc - S), (0, 0), (0, 0)]
         return jnp.pad(kv_stacked, pad)
 
-    new = cache._replace(length=jnp.full((B,), S, jnp.int32))
+    if true_len is None:
+        last_logits = logits[:, -1, :]
+        length = jnp.full((B,), S, jnp.int32)
+    else:
+        true_len = jnp.asarray(true_len, jnp.int32)
+        last_logits = jnp.take_along_axis(
+            logits, (true_len - 1)[:, None, None], axis=1)[:, 0, :]
+        length = true_len
+    new = cache._replace(length=length)
     plan = layer_plan(cfg)
     if plan["kind"] == "vlm":
         kv_self, kv_cross = kvs  # ((ng, spg, B,S,H,D)×2, (ng, B,nv,H,D)×2)
@@ -579,14 +607,20 @@ def forward_prefill(params, cfg: ModelConfig, inputs, *, cache_len: int,
         new = new._replace(k=place(ks), v=place(vs))
     if new.kv_pos is not None:
         pos = jnp.arange(Sc, dtype=jnp.int32)[None, :] + max(S - Sc, 0)
-        valid = pos < S
-        new = new._replace(kv_pos=jnp.where(valid, pos, -1).astype(jnp.int32) *
-                           jnp.ones((B, 1), jnp.int32))
+        valid = pos < (S if true_len is None else true_len[:, None])
+        kvp = jnp.where(valid, pos, -1).astype(jnp.int32) * \
+            jnp.ones((B, 1), jnp.int32)
+        if S >= Sc and (S - Sc) % Sc:  # match place()'s ring phase
+            kvp = jnp.roll(kvp, (S - Sc) % Sc, axis=1)
+        new = new._replace(kv_pos=kvp)
     if cfg.ssm_state:
-        # re-run mamba path collecting final states (cheap relative to attn)
+        # re-run mamba path collecting final states (cheap relative to attn).
+        # NOTE: SSM state is not position-masked, so bucketed (padded)
+        # prompts are unsupported here — the engine disables bucketing for
+        # ssm/hybrid families.
         ssm = _prefill_ssm_states(params, cfg, inputs, vision, impl, unroll)
         new = new._replace(ssm=ssm)
-    return logits[:, -1, :], new
+    return last_logits, new
 
 
 def _prefill_ssm_states(params, cfg: ModelConfig, inputs, vision, impl,
@@ -737,21 +771,30 @@ def apply_block_step(p, cfg: ModelConfig, kind: str, u1, layer_cache, ctx):
         return out, new_cache
 
     def mixer_fn(x):
+        paged = ctx.get("paged", False)
         if kind == "cross":
             cat = _cross_attn_step(p["attn"], cfg, x, layer_cache["ck"],
                                    layer_cache["cv"], merged, impl)
             return cat if merged else _attn_out_proj(p["attn"], cat)
         if merged and kind == "attn" and cfg.merged_variant == "qp":
             # merged decode fast path: stream-as-query, no Q/P weight reads
-            cat, nk, nv = _attn_step_merged(
+            step = _attn_step_paged_merged if paged else _attn_step_merged
+            extra = {"block_tables": ctx["block_tables"]} if paged else \
+                {"kv_pos": ctx["kv_pos"]}
+            cat, nk, nv = step(
                 p["attn"], cfg, x, layer_cache["k"], layer_cache["v"],
-                ctx["kv_pos"], length, impl,
-                qkv_sharding=ctx.get("qkv_sharding"))
+                length=length, impl=impl,
+                qkv_sharding=ctx.get("qkv_sharding"), **extra)
             new_cache.update(k=nk, v=nv)
             return cat
-        cat, nk, nv = _attn_step(p["attn"], cfg, x, layer_cache["k"],
-                                 layer_cache["v"], ctx["kv_pos"], length,
-                                 merged, impl)
+        if paged:
+            cat, nk, nv = _attn_step_paged(
+                p["attn"], cfg, x, layer_cache["k"], layer_cache["v"],
+                ctx["block_tables"], length, merged, impl)
+        else:
+            cat, nk, nv = _attn_step(p["attn"], cfg, x, layer_cache["k"],
+                                     layer_cache["v"], ctx["kv_pos"], length,
+                                     merged, impl)
         new_cache.update(k=nk, v=nv)
         if kind == "hybrid":
             st = m2.SSMState(ssm=layer_cache["ssm"], conv=layer_cache["conv"])
@@ -881,3 +924,152 @@ def forward_decode(params, cfg: ModelConfig, token, cache: DecodeCache, *,
         new_cache = new_cache._replace(kv_pos=kv_pos)
     new_cache = new_cache._replace(length=cache.length + 1)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode: block-table cache (pool of physical pages) — serving layer
+# allocates/frees pages host-side (serving.paged_kv_cache), this module only
+# consumes the device-side view
+# ---------------------------------------------------------------------------
+
+class PagedDecodeCache(NamedTuple):
+    """Device view of the paged KV cache (attention-only stacks).
+
+    ``k``/``v`` are pools of physical pages shared by every serving slot;
+    ``block_tables[b, j]`` maps slot b's logical block j to a physical page
+    (-1 = unmapped).  Page content beyond a slot's ``length`` may be stale
+    (freed/reused pages are not scrubbed) — the causal mask hides it, and
+    decode always writes position ``length`` before attending.
+    """
+    k: jnp.ndarray  # (L, n_blocks, block_size, Hkv, Dh) — physical pages
+    v: jnp.ndarray
+    block_tables: jnp.ndarray  # (B, MB) int32 page ids, -1 unmapped
+    length: jnp.ndarray  # (B,) int32 — tokens so far (= next position)
+
+
+def paged_cache_spec(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     n_slots: int, max_len: int):
+    """Shapes for an empty paged cache (init and jit input specs)."""
+    plan = layer_plan(cfg)
+    if plan["kind"] != "attn":
+        raise ValueError(
+            f"paged KV cache supports attention-only stacks, not "
+            f"{plan['kind']!r} (family {cfg.family!r})")
+    cdt = dtype_of(cfg.dtype)
+    mb = -(-max_len // block_size)
+    pool = ((plan["n"], n_blocks, block_size, cfg.n_kv_heads, cfg.d_head), cdt)
+    return {"k": pool, "v": pool,
+            "block_tables": ((n_slots, mb), jnp.int32),
+            "length": ((n_slots,), jnp.int32)}
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     n_slots: int, max_len: int) -> PagedDecodeCache:
+    spec = paged_cache_spec(cfg, n_blocks, block_size, n_slots, max_len)
+    return PagedDecodeCache(
+        k=jnp.zeros(*spec["k"]), v=jnp.zeros(*spec["v"]),
+        block_tables=jnp.full(spec["block_tables"][0], -1, jnp.int32),
+        length=jnp.zeros(*spec["length"]))
+
+
+def _rope_and_insert_paged(cfg: ModelConfig, q, k_new, v_new, k_pool, v_pool,
+                           block_tables, length):
+    """RoPE the step's q/k at position ``length`` and scatter the new k/v
+    into each slot's mapped page (page = table[length // bs], offset =
+    length % bs).  Unmapped slots (idle batch rows) drop the write."""
+    pos = length[:, None]  # (B,1)
+    q = apply_rope(q, pos, style=cfg.rope_style, theta=cfg.rope_theta,
+                   fraction=cfg.rope_fraction)
+    k_new = apply_rope(k_new, pos, style=cfg.rope_style, theta=cfg.rope_theta,
+                       fraction=cfg.rope_fraction)
+    NB, bs = k_pool.shape[0], k_pool.shape[1]
+    MB = block_tables.shape[1]
+    lb = jnp.minimum((length // bs).astype(jnp.int32), MB - 1)
+    off = (length % bs).astype(jnp.int32)
+    blk = jnp.take_along_axis(block_tables, lb[:, None], axis=1)[:, 0]
+    safe = jnp.where(blk >= 0, blk, NB)  # NB is out of range -> dropped
+    k_pool = k_pool.at[safe, off].set(k_new[:, 0].astype(k_pool.dtype),
+                                      mode="drop")
+    v_pool = v_pool.at[safe, off].set(v_new[:, 0].astype(v_pool.dtype),
+                                      mode="drop")
+    return q, k_pool, v_pool
+
+
+def _attn_step_paged(lp, cfg: ModelConfig, u1, k_pool, v_pool, block_tables,
+                     length, merged: bool, impl: str):
+    """Generic decode step vs a paged pool.  u1 (B,1,d); k_pool/v_pool
+    (NB,bs,Hkv,Dh).  Returns (cat, new_k_pool, new_v_pool)."""
+    B = u1.shape[0]
+    q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, merged)
+    q, k_pool, v_pool = _rope_and_insert_paged(cfg, q, k_new, v_new,
+                                               k_pool, v_pool, block_tables,
+                                               length)
+    out = attn_mod.decode_attention_core_paged(
+        q[:, 0], k_pool, v_pool, block_tables=block_tables,
+        q_position=length, sliding_window=cfg.sliding_window, impl=impl)
+    return out.reshape(B, 1, cfg.attn_dim), k_pool, v_pool
+
+
+def _attn_step_paged_merged(lp, cfg: ModelConfig, u1, k_pool, v_pool, *,
+                            block_tables, length, impl: str,
+                            qkv_sharding=None):
+    """Merged (Q/P-removed) decode fast path vs a paged pool: per token the
+    attention-side HBM traffic is K*/V* weights plus the slot's mapped
+    pages — no Q/P weight reads AND no dense worst-case-length cache."""
+    B = u1.shape[0]
+    # variant "qp": _project_qkv returns the stream itself as q (identity)
+    q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, True)
+    if qkv_sharding is not None:
+        # merged styles lose the TP sharding anchor for q (no wq matmul to
+        # propagate head-sharding from) — same fix as _self_attention_seq
+        q = jax.lax.with_sharding_constraint(q, qkv_sharding)
+        k_new = jax.lax.with_sharding_constraint(k_new, qkv_sharding)
+        v_new = jax.lax.with_sharding_constraint(v_new, qkv_sharding)
+    q, k_pool, v_pool = _rope_and_insert_paged(cfg, q, k_new, v_new,
+                                               k_pool, v_pool, block_tables,
+                                               length)
+    out = attn_mod.decode_attention_core_paged_merged(
+        q.reshape(B, cfg.attn_dim), k_pool, v_pool,
+        block_tables=block_tables, q_position=length,
+        n_kv_heads=cfg.n_kv_heads, sliding_window=cfg.sliding_window,
+        impl=impl)
+    return out.reshape(B, 1, cfg.attn_dim), k_pool, v_pool
+
+
+def forward_decode_paged(params, cfg: ModelConfig, token,
+                         cache: PagedDecodeCache, *, impl: str = "xla",
+                         unroll: bool = False, qkv_sharding=None):
+    """One decode step against the paged cache.  token (B,) int32; returns
+    (logits (B,V), new cache).
+
+    Mirrors ``forward_decode`` (same embed front-end, same merged-variant
+    dispatch — "qp" configs stream only K*/V* weights per token) with the
+    per-layer cache slice being a page pool + shared block tables instead
+    of a dense per-slot buffer.  Attention-only stacks (no ssm/vlm state
+    is paged).
+    """
+    plan = layer_plan(cfg)
+    assert plan["kind"] == "attn", (
+        "paged decode supports attention-only stacks; got " + plan["kind"])
+    inputs = token[:, None] if token.dtype in (jnp.int32, jnp.int64) \
+        else token[:, None, :]
+    h = embed_inputs(params, cfg, inputs)
+
+    ctx = {"length": cache.length, "block_tables": cache.block_tables,
+           "paged": True, "impl": impl, "qkv_sharding": qkv_sharding}
+
+    def f(h, xs):
+        lp, lc = xs
+        out, nc = apply_block_step(lp, cfg, "attn", h, lc, ctx)
+        return out, nc
+
+    h, ncs = jax.lax.scan(f, h, (params["layers"],
+                                 {"k": cache.k, "v": cache.v}),
+                          unroll=True if unroll else 1)
+
+    if "final_norm" in params:
+        h = apply_rmsnorm(params["final_norm"], h)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = apply_unembedding(table, h)[:, 0, :]
+    return logits, cache._replace(k=ncs["k"], v=ncs["v"],
+                                  length=cache.length + 1)

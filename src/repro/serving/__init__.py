@@ -1,4 +1,13 @@
+"""Serving layer: continuous-batching engine over two cache backends.
+
+``kv_cache``       — dense slot cache ops (worst-case length per slot).
+``paged_kv_cache`` — block-pool cache: free-list page allocator, per-slot
+                     block tables, prefix sharing with copy-on-write.
+``engine``         — prefill/decode driver; ``ServeConfig.cache_kind``
+                     selects the backend ("dense" | "paged").
+"""
 from repro.serving.engine import Engine, Request, ServeConfig
 from repro.serving import kv_cache
+from repro.serving import paged_kv_cache
 
-__all__ = ["Engine", "Request", "ServeConfig", "kv_cache"]
+__all__ = ["Engine", "Request", "ServeConfig", "kv_cache", "paged_kv_cache"]

@@ -1,15 +1,33 @@
 """Serving engine: prefill + batched decode with continuous batching.
 
 Design (vLLM-style, TPU/JAX-native):
-  * a fixed number of serving SLOTS share one batched DecodeCache; the
-    decode step advances every active slot in a single jitted call
-    (``serve_step`` — the function the decode_* dry-run cells lower);
-  * new requests are prefilled (batch-1) and inserted into free slots with
-    dynamic_update_slice (``kv_cache.insert_request``); finished slots are
-    invalidated and reused — no reallocation, no recompilation;
-  * per-slot lengths live in the cache (`length`, `kv_pos`), so mixed
-    progress is handled by the attention masks, not by padding logic;
-  * sampling: greedy / temperature / top-k, per-slot PRNG streams.
+  * a fixed number of serving SLOTS share one batched cache; the decode
+    step advances every active slot in a single jitted call (``serve_step``
+    — the function the decode_* dry-run cells lower);
+  * TWO cache kinds (``ServeConfig.cache_kind``):
+      - "dense": every slot owns a worst-case (max_len) stretch of one
+        batched DecodeCache.  New requests prefill batch-1 and insert with
+        dynamic_update_slice (``kv_cache.insert_request``); finished slots
+        are invalidated in place (``kv_cache.clear_slot``, jitted+donated)
+        and reused — no reallocation, no recompilation.
+      - "paged": slots map variable numbers of fixed-size physical pages
+        out of a shared block pool (``paged_kv_cache``), with free-list
+        allocation, prefix sharing (identical prompt prefixes reference
+        the same pages, copy-on-write on append) and ADMISSION CONTROL:
+        ``submit`` defers a request while the pool is exhausted instead of
+        capping concurrency at a worst-case slot count, and ``step``
+        preempts the youngest request (resubmitted later, stream intact)
+        if appends outrun the pool.  At equal HBM the pool sustains
+        strictly more concurrent streams on mixed-length traffic — which
+        is what amortizes the merged fast path's K*/V*-only weight reads.
+  * prompt lengths are BUCKETED (padded to the next power of two, exact
+    logits/cache via ``forward_prefill(true_len=…)``) so a realistic
+    traffic mix compiles O(log max_len) prefill programs, not one per
+    distinct prompt length;
+  * sampling: greedy / temperature / top-k with PER-SLOT PRNG streams —
+    each request's key is derived from (engine seed, submission index) and
+    advances only with that request's samples, so sampled continuations
+    are reproducible regardless of co-scheduled traffic.
 
 The engine is mesh-aware: given a mesh it shards params/caches with the
 distribution-layer rules and jits with explicit shardings.
@@ -17,20 +35,22 @@ distribution-layer rules and jits with explicit shardings.
 Merged (Q/P-removed) models are first-class: for ``skipless_merged`` /
 ``residual_qpfree`` configs with the "qp" variant, ``serve_step`` routes
 through the merged decode fast path (``models.transformer._attn_step_merged``
--> ``kernels.decode_attention_merged``) — per-token attention reads only the
-K*/V* weights, the stream is the query, and the output lands directly in
-the FFN-input basis.  Prefill and slot insert are layout-identical to the
-unmerged case (the cache holds K*/V* in the same (L, B, Sc, Hkv, Dh)
-buffers), so continuous batching needs no merged-specific plumbing.  Under
-a mesh the engine re-anchors TP head sharding on q/k/v explicitly (merged
-layouts have no wq matmul to propagate it from).
+or ``_attn_step_paged_merged`` -> ``kernels.decode_attention_merged`` /
+``decode_attention_paged_merged``) — per-token attention reads only the
+K*/V* weights, the stream is the query, and the output lands in the
+FFN-input basis.  The kp/vp merged variants (MHA-only, paper Fig 1c/d)
+serve through the generic path: ``_project_qkv`` treats the eliminated
+projection as identity, so they decode token-identically to their
+unmerged source model without fast-path plumbing.  Under a mesh the
+engine re-anchors TP head sharding on q/k/v explicitly (merged layouts
+have no wq matmul to propagate it from).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,9 +59,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.distribution import sharding as shd
-from repro.models import forward_decode, forward_prefill, init_cache
-from repro.models.transformer import DecodeCache
+from repro.models import (forward_decode, forward_decode_paged,
+                          forward_prefill, init_cache, layer_plan)
+from repro.models.transformer import DecodeCache, PagedDecodeCache
 from repro.serving import kv_cache as kvc
+from repro.serving import paged_kv_cache as pkv
 
 
 @dataclasses.dataclass
@@ -52,6 +74,10 @@ class ServeConfig:
     top_k: int = 0
     eos_token: int = -1  # -1 => run to max_new_tokens
     seed: int = 0
+    cache_kind: str = "dense"  # "dense" | "paged"
+    block_size: int = 16  # paged: tokens per physical page
+    n_blocks: int = 0  # paged pool size; 0 => dense-equivalent HBM
+    bucket_prompts: bool = True  # pad prompts to power-of-two buckets
 
 
 @dataclasses.dataclass
@@ -59,70 +85,121 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 32
     out_tokens: Optional[List[int]] = None
-    slot: int = -1
+    slot: int = -1  # >=0 active; -1 idle/finished; -2 preempted
     remaining: int = 0
+    rid: int = -1  # submission index (per-request PRNG stream id)
+    key_state: Optional[np.ndarray] = None  # advanced PRNG key (preemption)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, mesh=None,
                  impl: str = "xla"):
         assert cfg.causal, "serving requires a decoder"
+        assert sc.cache_kind in ("dense", "paged"), sc.cache_kind
         cfg.validate_style()  # merged styles need a square Q basis
         self.cfg, self.sc, self.mesh = cfg, sc, mesh
         self.params = params
         self.impl = impl
-        self.cache = init_cache(cfg, sc.n_slots, sc.max_len)
+        self.paged = sc.cache_kind == "paged"
         self.free_slots = list(range(sc.n_slots))
         self.active: Dict[int, Request] = {}
+        self.preempted: List[Request] = []
         self.key = jax.random.PRNGKey(sc.seed)
+        self._slot_keys = jnp.zeros((sc.n_slots, 2), jnp.uint32)
+        self._rid = 0
+        self.stats = {"peak_active": 0, "n_preempted": 0, "n_deferred": 0}
+        # bucketing needs positions to be paddable: causal attention masks
+        # padded tails, but SSM prefill state is not position-masked, and a
+        # dense sliding-window cache is a window-sized ring that would drop
+        # real positions when the padded tail pushes them out (the paged
+        # cache stores absolute positions, so it buckets window configs too)
+        self._bucketing = (sc.bucket_prompts and cfg.has_attention
+                           and not cfg.ssm_state
+                           and (self.paged or not cfg.sliding_window))
 
-        prefill = partial(forward_prefill, cfg=cfg, cache_len=sc.max_len,
-                          impl=impl)
-        decode = partial(forward_decode, cfg=cfg, impl=impl)
+        if self.paged:
+            n_blocks = sc.n_blocks or sc.n_slots * (sc.max_len // sc.block_size)
+            self.pm = pkv.PagedCacheManager(
+                cfg, n_slots=sc.n_slots, max_len=sc.max_len,
+                block_size=sc.block_size, n_blocks=n_blocks)
+            self.cache = None  # device view lives in self.pm
+        else:
+            self.cache = init_cache(cfg, sc.n_slots, sc.max_len)
 
         if mesh is not None:
-            rules = shd.make_rules(mesh, batch=sc.n_slots)
-            pshape = jax.eval_shape(lambda: params)
-            psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                               shd.evenly(shd.param_pspecs(pshape, rules),
-                                          pshape, mesh))
-            self.params = jax.device_put(params, psh)
-            cshape = jax.eval_shape(lambda: self.cache)
-            csh = jax.tree.map(
-                lambda s: NamedSharding(mesh, s),
-                shd.evenly(_trim_cache_spec(shd.cache_pspecs(cfg, rules),
-                                            self.cache), cshape, mesh))
-            qkv_sh = None
-            if self.merged_fast_path:
-                # K*/V*-only layout: re-anchor TP head sharding explicitly
-                qkv_sh = NamedSharding(
-                    mesh, P(rules.dp, None, rules.axis("heads"), None))
+            self._build_steps_mesh(mesh)
+        else:
+            self._build_steps()
+
+        self._last_token = np.zeros((sc.n_slots,), np.int32)
+        if sc.temperature > 0:
+            self._sample_rows = jax.jit(partial(
+                _sample_rows, temperature=sc.temperature, top_k=sc.top_k,
+                vocab_size=cfg.vocab_size))
+
+    # ------------------------------------------------------------------
+    def _build_steps(self):
+        sc, impl = self.sc, self.impl
+        if self.paged:
             self._decode = jax.jit(
-                lambda p, t, c: forward_decode(p, self.cfg, t, c, impl=impl,
-                                               qkv_sharding=qkv_sh),
-                donate_argnums=(2,),
-                in_shardings=(psh, NamedSharding(mesh, P()), csh),
-                out_shardings=(None, csh))
-            self._prefill = jax.jit(
-                lambda p, tk, vs: forward_prefill(
-                    p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl),
-                in_shardings=(psh, None, None))
+                lambda p, t, c: forward_decode_paged(p, self.cfg, t, c,
+                                                     impl=impl),
+                donate_argnums=(2,))
         else:
             self._decode = jax.jit(
                 lambda p, t, c: forward_decode(p, self.cfg, t, c, impl=impl),
                 donate_argnums=(2,))
-            self._prefill = jax.jit(
-                lambda p, tk, vs: forward_prefill(
-                    p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl))
+        self._prefill = jax.jit(
+            lambda p, tk, vs, tl: forward_prefill(
+                p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl,
+                true_len=tl, full_cache=self.paged))
 
-        self._last_token = np.zeros((sc.n_slots,), np.int32)
+    def _build_steps_mesh(self, mesh):
+        sc, impl = self.sc, self.impl
+        rules = shd.make_rules(mesh, batch=sc.n_slots)
+        pshape = jax.eval_shape(lambda: self.params)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           shd.evenly(shd.param_pspecs(pshape, rules),
+                                      pshape, mesh))
+        self.params = jax.device_put(self.params, psh)
+        qkv_sh = None
+        if self.merged_fast_path:
+            # K*/V*-only layout: re-anchor TP head sharding explicitly
+            qkv_sh = NamedSharding(
+                mesh, P(rules.dp, None, rules.axis("heads"), None))
+        if self.paged:
+            cshape = jax.eval_shape(self.pm.device_cache)
+            csh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                shd.evenly(shd.paged_cache_pspecs(self.cfg, rules),
+                           cshape, mesh))
+            fwd = lambda p, t, c: forward_decode_paged(
+                p, self.cfg, t, c, impl=impl, qkv_sharding=qkv_sh)
+        else:
+            cshape = jax.eval_shape(lambda: self.cache)
+            csh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                shd.evenly(_trim_cache_spec(shd.cache_pspecs(self.cfg, rules),
+                                            self.cache), cshape, mesh))
+            fwd = lambda p, t, c: forward_decode(
+                p, self.cfg, t, c, impl=impl, qkv_sharding=qkv_sh)
+        self._decode = jax.jit(
+            fwd, donate_argnums=(2,),
+            in_shardings=(psh, NamedSharding(mesh, P()), csh),
+            out_shardings=(None, csh))
+        self._prefill = jax.jit(
+            lambda p, tk, vs, tl: forward_prefill(
+                p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl,
+                true_len=tl, full_cache=self.paged),
+            in_shardings=(psh, None, None, None))
 
     # ------------------------------------------------------------------
     @property
     def merged_fast_path(self) -> bool:
         """True when serve_step routes through the merged (Q/P-removed)
         decode fast path: no Q or P weights exist, so per-token attention
-        streams only K*/V* from HBM."""
+        streams only K*/V* from HBM.  kp/vp merged variants return False —
+        they serve through the generic path (still token-exact)."""
         return (self.cfg.has_attention
                 and self.cfg.block_style in ("skipless_merged",
                                              "residual_qpfree")
@@ -133,38 +210,120 @@ class Engine:
 
         Used by benchmarks to read ``cost_analysis()`` / HLO of the exact
         program the engine runs — e.g. HBM bytes/token with and without
-        the eliminated Q/P weight reads."""
+        the eliminated Q/P weight reads, or the dense-vs-paged cache
+        traffic."""
         pshape = jax.eval_shape(lambda: self.params)
         tshape = jax.ShapeDtypeStruct((self.sc.n_slots,), jnp.int32)
-        cshape = jax.eval_shape(lambda: self.cache)
+        if self.paged:
+            cshape = jax.eval_shape(self.pm.device_cache)
+        else:
+            cshape = jax.eval_shape(lambda: self.cache)
         return self._decode.lower(pshape, tshape, cshape).compile()
 
     # ------------------------------------------------------------------
+    def _bucket_pad(self, toks: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Right-pad to the next power-of-two bucket (>= 8) so the prefill
+        jit compiles O(log max_len) programs; true length is passed to
+        ``forward_prefill`` so logits and cache are exact."""
+        n = len(toks)
+        if not self._bucketing or n >= self.sc.max_len:
+            return toks, n
+        b = 8
+        while b < n:
+            b *= 2
+        b = min(b, self.sc.max_len)
+        if b == n:
+            return toks, n
+        return np.concatenate([toks, np.zeros((b - n,), np.int32)]), n
+
     def submit(self, req: Request, vision: Optional[np.ndarray] = None) -> bool:
-        """Prefill a request into a free slot. Returns False if saturated."""
+        """Prefill a request into a free slot.  Returns False when no slot
+        is free or (paged) the block pool can't admit the prompt — the
+        caller retries after other requests finish (admission control).
+
+        A request with ``out_tokens`` already populated is a RESUME
+        (preempted earlier): its generated tokens re-prefill with the
+        prompt and decoding continues where it left off.
+        """
         if not self.free_slots:
             return False
-        slot = self.free_slots.pop(0)
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        # fail FAST on a request that cannot finish: decode would run past
+        # max_len mid-serve (paged: off the block table; dense non-window:
+        # silently wrapping the cache over live positions).  Dense sliding-
+        # window rings legitimately outlive max_len — the window masks.
+        if self.paged or not self.cfg.sliding_window:
+            if len(req.prompt) + req.max_new_tokens > self.sc.max_len:
+                raise ValueError(
+                    f"prompt ({len(req.prompt)}) + max_new_tokens "
+                    f"({req.max_new_tokens}) exceeds max_len "
+                    f"({self.sc.max_len})")
+        resume = bool(req.out_tokens)
+        toks = np.asarray(req.prompt, np.int32)
+        if resume and len(req.out_tokens) > 1:
+            toks = np.concatenate(
+                [toks, np.asarray(req.out_tokens[:-1], np.int32)])
+        slot = self.free_slots[0]
+        n_shared = 0
+        if self.paged:
+            admitted = self.pm.admit(slot, toks)
+            if admitted is None:
+                self.stats["n_deferred"] += 1
+                return False
+            n_shared = admitted
+        self.free_slots.pop(0)
+
+        padded, n = self._bucket_pad(toks)
+        tl = jnp.full((1,), n, jnp.int32)
         vs = None if vision is None else jnp.asarray(vision)[None]
-        logits, one_cache = self._prefill(self.params, toks, vs)
-        self.cache = kvc.insert_request(self.cache, one_cache,
-                                        jnp.int32(slot))
-        tok = self._sample(logits)[0]
+        logits, one_cache = self._prefill(
+            self.params, jnp.asarray(padded, jnp.int32)[None], vs, tl)
+        if self.paged:
+            self.pm.insert_prefill(slot, one_cache.k[:, 0], one_cache.v[:, 0],
+                                   n, n_shared)
+        else:
+            self.cache = kvc.insert_request(self.cache, one_cache,
+                                            jnp.int32(slot))
+
+        if req.rid < 0:
+            req.rid = self._rid
+            self._rid += 1
+        # per-request PRNG stream: key = f(engine seed, submission index);
+        # a preempted request resumes from its ADVANCED key, not the start
+        # of its stream — replayed draws would make the continuation depend
+        # on whether preemption happened
+        self._slot_keys = self._slot_keys.at[slot].set(
+            jnp.asarray(req.key_state) if req.key_state is not None
+            else jax.random.fold_in(self.key, req.rid))
         req.slot = slot
-        req.out_tokens = [int(tok)]
-        req.remaining = req.max_new_tokens - 1
+        if resume:
+            tok = req.out_tokens[-1]
+        else:
+            tok = int(self._sample(logits, [slot])[0])
+            req.out_tokens = [tok]
+            req.remaining = req.max_new_tokens - 1
         self.active[slot] = req
         self._last_token[slot] = int(tok)
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        len(self.active))
         return True
 
     def step(self) -> Dict[int, int]:
         """One batched decode step for all active slots; returns slot->token."""
         if not self.active:
             return {}
+        if self.paged:
+            self._make_appendable()
+            if not self.active:
+                return {}
         tokens = jnp.asarray(self._last_token, jnp.int32)
-        logits, self.cache = self._decode(self.params, tokens, self.cache)
-        next_tokens = np.asarray(self._sample(logits))
+        if self.paged:
+            logits, new_cache = self._decode(self.params, tokens,
+                                             self.pm.device_cache())
+            self.pm.update_pools(new_cache)
+        else:
+            logits, self.cache = self._decode(self.params, tokens, self.cache)
+        next_tokens = np.asarray(self._sample(
+            logits, np.arange(self.sc.n_slots)))
         emitted: Dict[int, int] = {}
         for slot, req in list(self.active.items()):
             tok = int(next_tokens[slot])
@@ -172,12 +331,42 @@ class Engine:
             req.remaining -= 1
             self._last_token[slot] = tok
             emitted[slot] = tok
+            if self.paged:
+                self.pm.advance(slot)
             done = req.remaining <= 0 or tok == self.sc.eos_token
             if done:
-                self.cache = kvc.clear_slot(self.cache, jnp.int32(slot))
+                if self.paged:
+                    self.pm.release(slot)
+                else:
+                    self.cache = kvc.clear_slot(self.cache, jnp.int32(slot))
+                req.slot = -1
                 del self.active[slot]
                 self.free_slots.append(slot)
         return emitted
+
+    def _make_appendable(self):
+        """Guarantee every active slot can write its next token's page,
+        preempting the youngest request(s) when the pool is exhausted."""
+        while True:
+            blocked = [s for s in sorted(self.active)
+                       if not self.pm.ensure_appendable(s)]
+            if not blocked:
+                return
+            if len(self.active) == 1:
+                raise RuntimeError(
+                    "paged pool too small for a single request; raise "
+                    "ServeConfig.n_blocks")
+            victim = max(self.active, key=lambda s: self.active[s].rid)
+            self._preempt(victim)
+
+    def _preempt(self, slot: int):
+        req = self.active.pop(slot)
+        self.pm.release(slot)
+        self.free_slots.append(slot)
+        req.slot = -2
+        req.key_state = np.asarray(self._slot_keys[slot])  # resume in place
+        self.preempted.append(req)
+        self.stats["n_preempted"] += 1
 
     def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int = 32,
                  vision: Optional[Sequence[np.ndarray]] = None) -> List[List[int]]:
@@ -190,34 +379,65 @@ class Engine:
         inflight: List[Request] = []
         vis = list(vision) if vision is not None else [None] * len(pending)
         vqueue = list(vis)
-        while queue or self.active:
-            while queue and self.free_slots:
-                r = queue.pop(0)
-                v = vqueue.pop(0)
-                self.submit(r, vision=v)
-                inflight.append(r)
+        while queue or self.active or self.preempted:
+            while self.free_slots:
+                if self.preempted:  # resumes have progress: highest priority
+                    if not self.submit(self.preempted[0]):
+                        break
+                    self.preempted.pop(0)
+                elif queue:
+                    if not self.submit(queue[0], vision=vqueue[0]):
+                        break
+                    inflight.append(queue.pop(0))
+                    vqueue.pop(0)
+                else:
+                    break
+            if not self.active:
+                if queue or self.preempted:
+                    raise RuntimeError(
+                        "serving stalled: pool cannot admit any pending "
+                        "request (raise n_blocks or max_len)")
+                break
             self.step()
             for r in list(inflight):
-                if r.slot not in self.active:
+                if r.slot == -1:  # finished (not preempted, not active)
                     results[order[id(r)]] = r.out_tokens
                     inflight.remove(r)
         return results  # type: ignore
 
     # ------------------------------------------------------------------
-    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
-        sc = self.sc
-        if logits.shape[-1] > self.cfg.vocab_size:  # mask padded vocab ids
-            pad_mask = jnp.arange(logits.shape[-1]) < self.cfg.vocab_size
-            logits = jnp.where(pad_mask, logits, -1e30)
-        if sc.temperature <= 0.0:
+    def _sample(self, logits: jnp.ndarray, slots) -> jnp.ndarray:
+        """Sample one token per row of ``logits``; ``slots`` names the slot
+        each row belongs to so temperature sampling draws from that slot's
+        private PRNG stream."""
+        if self.sc.temperature <= 0.0:
+            if logits.shape[-1] > self.cfg.vocab_size:  # mask padded ids
+                pad_mask = jnp.arange(logits.shape[-1]) < self.cfg.vocab_size
+                logits = jnp.where(pad_mask, logits, -1e30)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        scaled = logits / sc.temperature
-        if sc.top_k > 0:
-            vals, _ = jax.lax.top_k(scaled, sc.top_k)
-            kth = vals[..., -1:]
-            scaled = jnp.where(scaled < kth, -1e30, scaled)
-        return jax.random.categorical(sub, scaled).astype(jnp.int32)
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+        toks, new_keys = self._sample_rows(logits, self._slot_keys[sl])
+        self._slot_keys = self._slot_keys.at[sl].set(new_keys)
+        return toks
+
+
+def _sample_rows(logits: jnp.ndarray, keys: jnp.ndarray, *,
+                 temperature: float, top_k: int, vocab_size: int):
+    """Temperature/top-k sampling, one private PRNG key per row.
+
+    Returns (tokens, advanced keys) — each row's key advances only when
+    that row samples, so a request's continuation is a pure function of
+    (params, prompt, engine seed, submission index)."""
+    if logits.shape[-1] > vocab_size:  # mask padded vocab ids
+        pad_mask = jnp.arange(logits.shape[-1]) < vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    scaled = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(scaled, top_k)
+        scaled = jnp.where(scaled < vals[..., -1:], -1e30, scaled)
+    split = jax.vmap(jax.random.split)(keys)  # (R, 2, 2)
+    toks = jax.vmap(jax.random.categorical)(split[:, 1], scaled)
+    return toks.astype(jnp.int32), split[:, 0]
 
 
 def _trim_cache_spec(spec_cache: DecodeCache, like: DecodeCache) -> DecodeCache:

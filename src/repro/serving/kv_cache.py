@@ -1,4 +1,12 @@
-"""Slot operations over the batched DecodeCache (continuous batching).
+"""DENSE-cache slot operations over the batched DecodeCache.
+
+This is the worst-case-length serving backend: every slot owns a fixed
+``max_len`` stretch of one batched cache, so inserts/evicts are O(1)
+dynamic slices but concurrency is capped at ``HBM / (L · max_len · Hkv ·
+Dh)`` slots regardless of actual sequence lengths.  The alternative is
+``paged_kv_cache`` (``ServeConfig.cache_kind="paged"``): block-pool pages
+mapped on demand, which trades the simple slot arithmetic for strictly
+more concurrent streams per HBM byte on mixed-length traffic.
 
 The cache produced by ``models.init_cache`` is batched over serving slots;
 these utilities insert a freshly-prefilled single-request cache into slot
@@ -58,8 +66,13 @@ def insert_request(cache: DecodeCache, one: DecodeCache, slot: jnp.ndarray
     return DecodeCache(**upd)
 
 
+@partial(jax.jit, donate_argnums=(0,))
 def clear_slot(cache: DecodeCache, slot: jnp.ndarray) -> DecodeCache:
     """Mark a slot idle: zero its length and invalidate kv positions.
+
+    Jitted with the cache DONATED so the two ``.at[].set()`` updates write
+    in place: undonated they would copy the full multi-MB cache per
+    finished request, on the hot serving loop.
 
     SSM state need not be cleared here: inserting the next request
     overwrites the slot's state wholesale (insert_request writes every

@@ -1,0 +1,308 @@
+"""Paged KV cache: a block pool + free-list allocator + per-slot block tables.
+
+vLLM-style serving memory for the merged decode fast path.  The dense
+DecodeCache sizes every slot for the WORST-CASE sequence, so slot count —
+and with it the batch that amortizes the per-token K*/V* weight stream —
+is capped by ``HBM / (L · max_len · Hkv · Dh)``.  Here physical memory is
+a pool of fixed (block_size, Hkv, Dh) pages per layer and each request
+maps only the pages its sequence actually occupies, so the same HBM
+sustains strictly more concurrent streams on any realistic (mixed-length)
+traffic.
+
+Division of labor:
+  * DEVICE — the page pools (``PagedDecodeCache.k/v``) plus two jitted,
+    donated ops: ``scatter_prefill_blocks`` (write a prefilled request's
+    pages) and ``copy_block`` (copy-on-write).  Per-token appends are
+    inside the jitted decode step (models.transformer), also via
+    dynamic-slice scatter — nothing here reallocates or recompiles.
+  * HOST — ``BlockAllocator`` (free list + per-page refcounts) and
+    ``PagedCacheManager`` (block tables, admission, prefix sharing,
+    copy-on-write policy, eviction).  Tables/lengths are tiny int32
+    arrays shipped to the device each step.
+
+Prefix sharing: requests with identical prompt prefixes map the same
+physical pages.  Full prompt blocks are registered under the token prefix
+they contain and are immutable once written (appends land in later
+blocks), so sharing them is always exact.  The trailing PARTIAL prompt
+block is registered under the entire prompt; its content may later be
+extended by the owner's decoded tokens, which is safe because (a) a
+sharer's causal mask hides positions beyond its own length, and (b) any
+append into a page with refcount > 1 first copies it (copy-on-write), and
+decode always writes position ``length`` before attending to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (PagedDecodeCache, init_paged_cache,
+                                      layer_plan)
+
+
+# ---------------------------------------------------------------------------
+# jitted device ops (donated: update in place, no pool-sized copies)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def scatter_prefill_blocks(k_pool, v_pool, k_blocks, v_blocks, block_ids):
+    """Write a prefilled request's pages into the pool.
+
+    k_blocks/v_blocks: (L, nb, bs, Hkv, Dh) — the request's kv reshaped to
+    pages; block_ids: (nb,) int32 physical destinations.  One compiled
+    program per distinct nb (bounded by prompt-length bucketing).
+    """
+    k_pool = k_pool.at[:, block_ids].set(k_blocks.astype(k_pool.dtype))
+    v_pool = v_pool.at[:, block_ids].set(v_blocks.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def copy_block(k_pool, v_pool, src, dst):
+    """Copy-on-write: duplicate physical page ``src`` into ``dst``."""
+    k_pool = k_pool.at[:, dst].set(k_pool[:, src])
+    v_pool = v_pool.at[:, dst].set(v_pool[:, src])
+    return k_pool, v_pool
+
+
+# ---------------------------------------------------------------------------
+# host-side free-list allocator
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Free list + refcounts over ``n_blocks`` physical pages.
+
+    Refcount > 1 means the page is prefix-shared; writers must
+    copy-on-write (the manager enforces this, the allocator only counts).
+    """
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks))
+        self.ref = np.zeros((n_blocks,), np.int32)
+        # observability: the benchmark and tests read these
+        self.peak_used = 0
+        self.n_cow = 0
+        self.n_shared_hits = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages (refcount 1 each); None if the pool is exhausted."""
+        if n > len(self._free):
+            return None
+        ids, self._free = self._free[:n], self._free[n:]
+        for i in ids:
+            self.ref[i] = 1
+        self.peak_used = max(self.peak_used, self.n_used)
+        return ids
+
+    def fork(self, ids: List[int]) -> None:
+        """Share pages with another request (refcount += 1)."""
+        for i in ids:
+            assert self.ref[i] > 0, f"fork of free page {i}"
+            self.ref[i] += 1
+        self.n_shared_hits += len(ids)
+
+    def release(self, ids: List[int]) -> List[int]:
+        """Drop one reference per page; returns the pages that became free."""
+        freed = []
+        for i in ids:
+            assert self.ref[i] > 0, f"release of free page {i}"
+            self.ref[i] -= 1
+            if self.ref[i] == 0:
+                self._free.append(i)
+                freed.append(i)
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# manager: tables + admission + prefix sharing + copy-on-write
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SlotInfo:
+    blocks: List[int]  # physical pages, logical order
+
+
+class PagedCacheManager:
+    """Owns the device pools and every host-side paging decision.
+
+    The engine calls, per request lifecycle:
+      ``admit(slot, tokens)``      admission control + prefix sharing
+      ``insert_prefill(...)``      write the unshared tail pages
+      ``ensure_appendable(slot)``  map/CoW the page ``length`` falls in
+      ``advance(slot)`` / ``release(slot)``
+    and per decode step ``device_cache()`` / ``update_pools(new_cache)``.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_slots: int, max_len: int,
+                 block_size: int, n_blocks: int):
+        assert layer_plan(cfg)["kind"] == "attn", (
+            "paged serving supports attention-only stacks")
+        assert max_len % block_size == 0, (max_len, block_size)
+        self.cfg = cfg
+        self.bs = block_size
+        self.max_blocks = -(-max_len // block_size)  # table width
+        self.n_slots = n_slots
+        cache = init_paged_cache(cfg, n_blocks, block_size, n_slots, max_len)
+        self.k, self.v = cache.k, cache.v
+        self.tables = np.full((n_slots, self.max_blocks), -1, np.int32)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self.allocator = BlockAllocator(n_blocks)
+        self._slots: Dict[int, _SlotInfo] = {}
+        # prefix registry: token prefix -> physical page holding its tail
+        # block; _block_keys is the reverse map for cleanup on free.
+        self._registry: Dict[Tuple[int, ...], int] = {}
+        self._block_keys: Dict[int, List[Tuple[int, ...]]] = {}
+
+    # -- device view ----------------------------------------------------
+
+    def device_cache(self) -> PagedDecodeCache:
+        return PagedDecodeCache(
+            k=self.k, v=self.v,
+            block_tables=jnp.asarray(self.tables),
+            length=jnp.asarray(self.lengths))
+
+    def update_pools(self, new: PagedDecodeCache) -> None:
+        self.k, self.v = new.k, new.v
+
+    @property
+    def pool_bytes(self) -> int:
+        return int(self.k.size + self.v.size) * self.k.dtype.itemsize
+
+    # -- prefix sharing --------------------------------------------------
+
+    def _match_prefix(self, tokens: np.ndarray) -> List[int]:
+        """Longest chain of already-resident pages covering a prefix of
+        ``tokens``: full blocks by content chain, plus the trailing partial
+        block on an exact whole-prompt match."""
+        toks = tuple(int(t) for t in tokens)
+        ids: List[int] = []
+        for i in range(len(toks) // self.bs):
+            bid = self._registry.get(toks[: (i + 1) * self.bs])
+            if bid is None:
+                return ids
+            ids.append(bid)
+        if len(toks) % self.bs:
+            bid = self._registry.get(toks)
+            if bid is not None:
+                ids.append(bid)
+        return ids
+
+    def _register(self, tokens: np.ndarray, blocks: List[int],
+                  first_new: int) -> None:
+        toks = tuple(int(t) for t in tokens)
+        nb_full = len(toks) // self.bs
+        for i in range(first_new, len(blocks)):
+            key = toks[: (i + 1) * self.bs] if i < nb_full else toks
+            if key not in self._registry:
+                self._registry[key] = blocks[i]
+                self._block_keys.setdefault(blocks[i], []).append(key)
+
+    def _drop_registry(self, bid: int) -> None:
+        for key in self._block_keys.pop(bid, []):
+            if self._registry.get(key) == bid:
+                del self._registry[key]
+
+    # -- request lifecycle ----------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.bs)
+
+    def admit(self, slot: int, tokens: np.ndarray) -> Optional[int]:
+        """Try to map ``tokens`` into ``slot``.  Returns the number of
+        prefix-SHARED pages (the engine skips writing those), or None when
+        the prompt doesn't fit / the pool is exhausted (admission control —
+        the caller retries after other requests finish)."""
+        nb = self.blocks_for(len(tokens))
+        if nb > self.max_blocks:
+            raise ValueError(
+                f"prompt of {len(tokens)} tokens exceeds max_len "
+                f"({self.max_blocks * self.bs})")
+        shared = self._match_prefix(tokens)
+        fresh = self.allocator.alloc(nb - len(shared))
+        if fresh is None:
+            return None
+        self.allocator.fork(shared)
+        blocks = shared + fresh
+        self._slots[slot] = _SlotInfo(blocks=blocks)
+        self.tables[slot, :] = -1
+        self.tables[slot, :nb] = blocks
+        self.lengths[slot] = len(tokens)
+        self._register(tokens, blocks, len(shared))
+        return len(shared)
+
+    def insert_prefill(self, slot: int, k_one: jnp.ndarray, v_one: jnp.ndarray,
+                       n_tokens: int, n_shared: int) -> None:
+        """Scatter the UNSHARED tail of a prefilled request into its pages.
+
+        k_one/v_one: (L, Sc, Hkv, Dh) from the batch-1 prefill cache (Sc >=
+        n_tokens; positions beyond n_tokens may hold bucket padding — they
+        land in-page past ``length`` where the causal mask hides them).
+        """
+        nb = self.blocks_for(n_tokens)
+        if nb == n_shared:
+            return  # fully shared — nothing to write
+        ids = self._slots[slot].blocks[n_shared:nb]
+        lo, hi = n_shared * self.bs, nb * self.bs
+        L = k_one.shape[0]
+        kb = k_one[:, lo:hi].reshape(L, nb - n_shared, self.bs,
+                                     *k_one.shape[2:])
+        vb = v_one[:, lo:hi].reshape(L, nb - n_shared, self.bs,
+                                     *v_one.shape[2:])
+        self.k, self.v = scatter_prefill_blocks(
+            self.k, self.v, kb, vb, jnp.asarray(ids, jnp.int32))
+
+    def ensure_appendable(self, slot: int) -> bool:
+        """Make the page that position ``lengths[slot]`` falls into safely
+        writable: map it if unmapped, copy-on-write if prefix-shared.
+        Returns False when the pool is exhausted (caller preempts)."""
+        info = self._slots[slot]
+        li = int(self.lengths[slot]) // self.bs
+        if li >= self.max_blocks:
+            raise ValueError(f"slot {slot} hit max_len; request too long")
+        if li >= len(info.blocks):
+            fresh = self.allocator.alloc(1)
+            if fresh is None:
+                return False
+            info.blocks.append(fresh[0])
+            self.tables[slot, li] = fresh[0]
+            return True
+        bid = info.blocks[li]
+        if self.allocator.ref[bid] > 1:  # shared page: copy before writing
+            fresh = self.allocator.alloc(1)
+            if fresh is None:
+                return False
+            self.k, self.v = copy_block(self.k, self.v,
+                                        jnp.int32(bid), jnp.int32(fresh[0]))
+            self.allocator.release([bid])
+            info.blocks[li] = fresh[0]
+            self.tables[slot, li] = fresh[0]
+            self.allocator.n_cow += 1
+        return True
+
+    def advance(self, slot: int) -> None:
+        self.lengths[slot] += 1
+
+    def release(self, slot: int) -> None:
+        """Return a finished/preempted request's pages (shared pages stay
+        resident for their other holders)."""
+        info = self._slots.pop(slot, None)
+        if info is None:
+            return
+        for bid in self.allocator.release(info.blocks):
+            self._drop_registry(bid)
+        self.tables[slot, :] = -1
+        self.lengths[slot] = 0

@@ -1,0 +1,294 @@
+"""Paged KV-cache subsystem: kernels vs oracles, allocator/prefix-sharing
+semantics, and the paged engine's greedy token-equality with the dense
+engine and the full-sequence oracle (mixed-length MHA+GQA workloads,
+xla and pallas routes, prefix sharing with copy-on-write, admission
+control and preemption)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.kernels import ops, ref
+from repro.models import forward_seq, init_params
+from repro.serving import Engine, ServeConfig
+from repro.serving.paged_kv_cache import BlockAllocator, PagedCacheManager
+
+
+# ---------------------------------------------------------------------------
+# kernels vs oracles
+# ---------------------------------------------------------------------------
+
+def _rand_tables(rng, B, MB, NB, bs, lens):
+    """Distinct physical pages per slot covering each slot's current
+    position (qpos = lens[b]), rest unmapped."""
+    bt = np.full((B, MB), -1, np.int32)
+    perm = rng.permutation(NB)
+    ptr = 0
+    for b, L in enumerate(lens):
+        for j in range((L + bs) // bs):  # covers position L inclusive
+            bt[b, j] = perm[ptr]
+            ptr += 1
+    return jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("dtype,B,Hq,Hkv,D,NB,bs,MB,win", [
+    (jnp.float32, 3, 4, 2, 64, 16, 16, 4, 0),
+    (jnp.bfloat16, 3, 4, 2, 64, 16, 16, 4, 0),
+    (jnp.float32, 2, 8, 1, 32, 12, 8, 4, 0),   # MQA
+    (jnp.float32, 2, 4, 4, 16, 14, 8, 6, 11),  # MHA + sliding window
+])
+def test_paged_decode_kernel_matches_ref(dtype, B, Hq, Hkv, D, NB, bs, MB, win):
+    rng = np.random.RandomState(0)
+    G = Hq // Hkv
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    kp = jax.random.normal(ks[1], (NB, bs, Hkv, D), dtype)
+    vp = jax.random.normal(ks[2], (NB, bs, Hkv, D), dtype)
+    lens = [int(x) for x in rng.randint(1, MB * bs - 1, size=B)]
+    bt = _rand_tables(rng, B, MB, NB, bs, lens)
+    qpos = jnp.asarray(lens, jnp.int32)
+    out = ops.decode_attention_paged(q, kp, vp, block_tables=bt,
+                                     q_position=qpos, sliding_window=win,
+                                     interpret=True)
+    want = ref.ref_decode_attention_paged(
+        q.reshape(B, Hkv, G, D), kp, vp, bt, qpos,
+        sliding_window=win).reshape(B, Hq, D)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype,B,Hq,Hkv,D,NB,bs,MB,win", [
+    (jnp.float32, 3, 4, 2, 64, 16, 16, 4, 0),
+    (jnp.bfloat16, 2, 4, 1, 32, 12, 8, 4, 0),  # MQA
+    (jnp.float32, 2, 4, 4, 16, 14, 8, 6, 11),  # MHA + sliding window
+])
+def test_paged_merged_kernel_matches_ref(dtype, B, Hq, Hkv, D, NB, bs, MB, win):
+    rng = np.random.RandomState(1)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    u = jax.random.normal(ks[0], (B, Hq * D), dtype)
+    kp = jax.random.normal(ks[1], (NB, bs, Hkv, D), dtype)
+    vp = jax.random.normal(ks[2], (NB, bs, Hkv, D), dtype)
+    lens = [int(x) for x in rng.randint(1, MB * bs - 1, size=B)]
+    bt = _rand_tables(rng, B, MB, NB, bs, lens)
+    qpos = jnp.asarray(lens, jnp.int32)
+    out = ops.decode_attention_paged_merged(
+        u, kp, vp, block_tables=bt, q_position=qpos, n_kv_heads=Hkv,
+        sliding_window=win, interpret=True)
+    want = ref.ref_decode_attention_paged_merged(
+        u, kp, vp, bt, qpos, n_kv_heads=Hkv, sliding_window=win)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_paged_ref_matches_dense_ref():
+    """The paged oracle itself is just a gather in front of the dense
+    oracle: densify manually and cross-check."""
+    rng = np.random.RandomState(2)
+    B, Hq, Hkv, D, NB, bs, MB = 2, 4, 2, 16, 10, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, Hq // Hkv, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (NB, bs, Hkv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (NB, bs, Hkv, D), jnp.float32)
+    lens = [7, 13]
+    bt = _rand_tables(rng, B, MB, NB, bs, lens)
+    qpos = jnp.asarray(lens, jnp.int32)
+    got = ref.ref_decode_attention_paged(q, kp, vp, bt, qpos)
+    k = ref.ref_paged_gather(kp, bt).transpose(0, 2, 1, 3)
+    v = ref.ref_paged_gather(vp, bt).transpose(0, 2, 1, 3)
+    kv_pos = ref.ref_paged_positions(bt, bs)
+    want = ref.ref_decode_attention(q, k, v, kv_pos, qpos[:, None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# allocator / manager semantics
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_refcounts_and_exhaustion():
+    a = BlockAllocator(4)
+    ids = a.alloc(3)
+    assert ids is not None and a.n_free == 1
+    assert a.alloc(2) is None, "over-allocation must fail, not wrap"
+    a.fork(ids[:2])  # share two pages
+    assert a.release(ids) == [ids[2]]  # shared pages stay resident
+    assert a.n_free == 2
+    assert sorted(a.release(ids[:2])) == sorted(ids[:2])
+    assert a.n_free == 4
+
+
+def test_manager_prefix_sharing_and_release():
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    m = PagedCacheManager(cfg, n_slots=3, max_len=32, block_size=8,
+                          n_blocks=8)
+    toks = np.arange(20) % cfg.vocab_size  # 2 full pages + 1 partial
+    assert m.admit(0, toks) == 0  # nothing to share yet
+    assert m.allocator.n_used == 3
+    assert m.admit(1, toks) == 3  # full chain + exact-prompt partial
+    assert m.allocator.n_used == 3, "identical prompt must map 0 new pages"
+    # both slots append -> each copy-on-writes the shared partial page
+    assert m.ensure_appendable(0) and m.ensure_appendable(1)
+    assert m.allocator.n_cow >= 1
+    assert m.tables[0, 2] != m.tables[1, 2], "partial page must diverge"
+    assert (m.tables[0, :2] == m.tables[1, :2]).all(), "full pages stay shared"
+    m.release(0)
+    m.release(1)
+    assert m.allocator.n_used == 0, "all pages must return to the free list"
+    assert m._registry == {} and m._block_keys == {}
+
+
+def test_manager_admission_control():
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    m = PagedCacheManager(cfg, n_slots=4, max_len=32, block_size=8,
+                          n_blocks=4)
+    assert m.admit(0, np.arange(17)) == 0  # 3 pages
+    assert m.admit(1, np.arange(50, 60)) is None  # needs 2, 1 free: defer
+    assert m.admit(2, np.arange(70, 75)) == 0  # 1 page fits
+    with pytest.raises(ValueError):
+        m.admit(3, np.arange(40))  # longer than max_len
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end: paged == dense == oracle
+# ---------------------------------------------------------------------------
+
+def _greedy_oracle(params, cfg, prompt, n):
+    toks = list(prompt)
+    out = []
+    for _ in range(n):
+        lg, _, _ = forward_seq(params, cfg, jnp.asarray(toks, jnp.int32)[None])
+        t = int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))
+        out.append(t)
+        toks.append(t)
+    return out
+
+
+def _mixed_prompts(vocab, n=5):
+    rng = np.random.RandomState(3)
+    return [rng.randint(0, vocab, size=(int(s),)).astype(np.int32)
+            for s in rng.randint(3, 20, size=n)]
+
+
+@pytest.mark.parametrize("n_kv,impl", [
+    (4, "xla"), (2, "xla"),  # MHA and GQA
+    (2, "pallas_interpret"),
+])
+def test_paged_engine_matches_dense_and_oracle(n_kv, impl):
+    """Mixed-length workload through more requests than the paged pool can
+    hold at once: every greedy stream must match both the dense engine and
+    the full-sequence oracle."""
+    cfg = reduce_config(get_config("mistral-7b")).with_(n_kv_heads=n_kv)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _mixed_prompts(cfg.vocab_size)
+    dense = Engine(cfg, params, ServeConfig(n_slots=3, max_len=64), impl=impl)
+    paged = Engine(cfg, params,
+                   ServeConfig(n_slots=4, max_len=64, cache_kind="paged",
+                               block_size=8, n_blocks=16), impl=impl)
+    out_d = dense.generate(prompts, max_new_tokens=6)
+    out_p = paged.generate(prompts, max_new_tokens=6)
+    assert out_p == out_d
+    for p, o in zip(prompts, out_p):
+        assert o == _greedy_oracle(params, cfg, p, 6), p[:3]
+    assert paged.pm.allocator.n_used == 0, "drained engine must free pool"
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_paged_engine_merged_fast_path(impl):
+    """QP-merged model through the paged engine: merged fast path + block
+    tables must stay token-exact vs the merged full-sequence oracle."""
+    from repro.core import merge_skipless
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params["embed"]["table"] = params["embed"]["table"] * 50.0
+    mparams, mcfg = merge_skipless(params, cfg, "qp")
+    eng = Engine(mcfg, mparams,
+                 ServeConfig(n_slots=3, max_len=64, cache_kind="paged",
+                             block_size=8), impl=impl)
+    assert eng.merged_fast_path
+    prompts = _mixed_prompts(cfg.vocab_size, n=3)
+    outs = eng.generate(prompts, max_new_tokens=6)
+    for p, o in zip(prompts, outs):
+        assert o == _greedy_oracle(mparams, mcfg, p, 6), p[:3]
+
+
+def test_paged_prefix_sharing_cow_token_exact():
+    """Two concurrent requests with the same prompt share its pages
+    (including the partial tail page, diverging via copy-on-write when
+    they decode) and still emit the oracle's exact stream."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    shared = np.arange(21) % cfg.vocab_size  # 2 full pages + 1 partial
+    other = np.arange(7) + 3
+    eng = Engine(cfg, params,
+                 ServeConfig(n_slots=4, max_len=64, cache_kind="paged",
+                             block_size=8))
+    outs = eng.generate([shared, shared, other], max_new_tokens=6)
+    w = _greedy_oracle(params, cfg, shared, 6)
+    assert outs[0] == w and outs[1] == w
+    assert outs[2] == _greedy_oracle(params, cfg, other, 6)
+    assert eng.pm.allocator.n_shared_hits >= 3, "prompt pages must be shared"
+    assert eng.pm.allocator.n_cow >= 1, "append into shared tail must CoW"
+
+
+def test_paged_admission_and_preemption_token_exact():
+    """Pool far smaller than the workload: requests defer (admission
+    control) and get preempted mid-decode, then resume — streams must
+    stay token-identical to the oracle throughout."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [np.arange(8) + i for i in range(3)]
+    eng = Engine(cfg, params,
+                 ServeConfig(n_slots=3, max_len=64, cache_kind="paged",
+                             block_size=8, n_blocks=7))
+    outs = eng.generate(prompts, max_new_tokens=20)
+    assert eng.stats["n_preempted"] > 0, "workload sized to force preemption"
+    for p, o in zip(prompts, outs):
+        assert o == _greedy_oracle(params, cfg, p, 20)
+
+
+def test_paged_rejects_stateful_families():
+    cfg = reduce_config(get_config("mamba2-2.7b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(AssertionError):
+        Engine(cfg, params, ServeConfig(n_slots=2, max_len=32,
+                                        cache_kind="paged", block_size=8))
+
+
+def test_submit_rejects_requests_that_cannot_finish():
+    """prompt + max_new_tokens > max_len must fail fast at submit, not
+    crash mid-decode when the request walks off its block table (which
+    would discard every co-scheduled stream)."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    for kind in ("dense", "paged"):
+        eng = Engine(cfg, params, ServeConfig(n_slots=2, max_len=32,
+                                              cache_kind=kind, block_size=8))
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.generate([np.arange(30) % cfg.vocab_size], max_new_tokens=8)
+
+
+def test_preemption_preserves_sampling_stream():
+    """A preempted+resumed request must continue its PRNG stream where it
+    stopped — replaying draws from the start would make sampled output
+    depend on co-scheduled traffic (which preemption is a function of)."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [np.arange(8), np.arange(8) + 50]  # target submits last
+    roomy = Engine(cfg, params,
+                   ServeConfig(n_slots=2, max_len=64, temperature=1.0,
+                               seed=5, cache_kind="paged", block_size=8,
+                               n_blocks=16))
+    out_roomy = roomy.generate(prompts, max_new_tokens=20)
+    assert roomy.stats["n_preempted"] == 0
+    tight = Engine(cfg, params,
+                   ServeConfig(n_slots=2, max_len=64, temperature=1.0,
+                               seed=5, cache_kind="paged", block_size=8,
+                               n_blocks=5))
+    out_tight = tight.generate(prompts, max_new_tokens=20)
+    assert tight.stats["n_preempted"] > 0, "pool sized to force preemption"
+    assert out_tight == out_roomy

@@ -83,3 +83,74 @@ def test_temperature_sampling_masks_padded_vocab():
                         max_new_tokens=20)
     for o in outs:
         assert all(t < 100 for t in o), "sampled a padded vocab id"
+
+
+@pytest.mark.parametrize("variant", ["kp", "vp"])
+@pytest.mark.parametrize("cache_kind", ["dense", "paged"])
+def test_kp_vp_merged_variants_serve_generic_path(variant, cache_kind):
+    """kp/vp merged variants (MHA-only, paper Fig 1c/d) have no fast-path
+    route — the engine must report merged_fast_path=False and decode them
+    through the generic path token-identically to the UNMERGED oracle, in
+    both cache kinds (so the paged engine can't silently misroute them)."""
+    from repro.core import merge_skipless
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        n_kv_heads=4)  # MHA: kv_dim == d_model, required for kp/vp
+    assert cfg.kp_vp_removal_applicable
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params["embed"]["table"] = params["embed"]["table"] * 50.0
+    mparams, mcfg = merge_skipless(params, cfg, variant)
+    sc = ServeConfig(n_slots=2, max_len=48, cache_kind=cache_kind,
+                     block_size=8)
+    eng = Engine(mcfg, mparams, sc)
+    assert not eng.merged_fast_path, "kp/vp must take the generic path"
+    prompts = [np.arange(5) % cfg.vocab_size + i for i in range(3)]
+    outs = eng.generate(prompts, max_new_tokens=6)
+    for p, o in zip(prompts, outs):
+        assert o == _greedy_oracle(params, cfg, p, 6), (variant, p[:3])
+
+
+def test_per_slot_prng_streams_traffic_independent():
+    """A request's sampled continuation is a function of (params, prompt,
+    seed, submission index) — NOT of co-scheduled traffic.  The engine
+    docstring promised per-slot PRNG streams; a shared key would make the
+    busy run diverge from the solo run."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sc = dict(n_slots=3, max_len=64, temperature=1.0, seed=11)
+    p0 = np.arange(5)
+    solo = Engine(cfg, params, ServeConfig(**sc)).generate(
+        [p0], max_new_tokens=8)[0]
+    busy = Engine(cfg, params, ServeConfig(**sc)).generate(
+        [p0, np.arange(6) + 2, np.arange(4) + 9, np.arange(7) + 1],
+        max_new_tokens=8)[0]
+    assert solo == busy, "sampling must not depend on co-scheduled traffic"
+
+
+def test_prompt_bucketing_exact_and_few_compiles():
+    """Distinct prompt lengths share power-of-two prefill buckets: outputs
+    stay oracle-exact while the prefill jit compiles O(log max_len)
+    programs instead of one per length."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, ServeConfig(n_slots=2, max_len=64))
+    assert eng._bucketing
+    prompts = [np.arange(n) % cfg.vocab_size for n in (3, 5, 6, 7, 9, 11, 13)]
+    outs = eng.generate(prompts, max_new_tokens=4)
+    for p, o in zip(prompts, outs):
+        assert o == _greedy_oracle(params, cfg, p, 4), len(p)
+    # lengths 3..13 -> buckets {8, 16}: two compiled prefill programs
+    assert eng._prefill._cache_size() <= 2, eng._prefill._cache_size()
+
+
+def test_dense_serving_prompt_longer_than_window():
+    """Ring-phase regression: a prompt longer than the sliding window must
+    prefill the ring so decode overwrites EXPIRED positions (slot = pos %
+    window), not live ones."""
+    cfg = reduce_config(get_config("mistral-7b"))  # sliding_window 16
+    assert 0 < cfg.sliding_window < 25
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(25) % cfg.vocab_size
+    eng = Engine(cfg, params, ServeConfig(n_slots=2, max_len=64))
+    out = eng.generate([prompt], max_new_tokens=8)[0]
+    assert out == _greedy_oracle(params, cfg, prompt, 8)

@@ -136,3 +136,34 @@ def test_collective_bytes_parser():
     assert r["counts"]["all-gather"] == 1
     assert r["per_op_bytes"]["all-reduce"] == 128 * 256 * 4
     assert r["per_op_bytes"]["all-gather"] == 64 * 32 * 2
+
+
+def test_paged_cache_pspecs_structure():
+    """Paged pool specs: block axis TP-split (flash-split-K over pages),
+    per-slot bookkeeping batch-sharded, and `evenly` keeps the block-axis
+    split whenever the pool size divides the mesh."""
+    from repro.models import paged_cache_spec
+    from repro.models.transformer import PagedDecodeCache
+
+    cfg = reduce_config(get_config("mistral-7b"))
+    rules = shd.ShardingRules(dp=("data",), tp="model")
+    specs = shd.paged_cache_pspecs(cfg, rules)
+    assert isinstance(specs, PagedDecodeCache)
+    assert specs.k == P(None, "model", None, None, None)
+    assert specs.v == specs.k
+    assert specs.block_tables == P(("data",), None)
+    assert specs.length == P(("data",))
+
+    spec = paged_cache_spec(cfg, n_blocks=16, block_size=8, n_slots=4,
+                            max_len=32)
+    assert spec["k"][0][1] == 16 and spec["k"][0][2] == 8
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+
+    leaves = PagedDecodeCache(*[Leaf(spec[f][0])
+                                for f in PagedDecodeCache._fields])
+    kept = shd.evenly(specs, leaves, mesh)
+    assert kept.k == specs.k, "1-way mesh must not downgrade the pool spec"

@@ -12,4 +12,12 @@ cd "$(dirname "$0")/.."
 python -m pip install -q -r requirements-dev.txt 2>/dev/null ||
     echo "[check] dev-dep install failed (offline?) — property tests will skip"
 
+# the dep install is best-effort, the test runner is NOT: a missing pytest
+# must fail the check loudly, not "succeed" by running nothing
+python -c "import pytest" 2>/dev/null || {
+    echo "[check] FATAL: pytest is not installed and the best-effort" >&2
+    echo "[check] install could not provide it — tier-1 did NOT run" >&2
+    exit 1
+}
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
