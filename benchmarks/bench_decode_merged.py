@@ -28,14 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-jax.devices()  # init the backend BEFORE importing launch.dryrun below:
-# its import-time XLA_FLAGS mutation must not change this process's devices
-
 from repro.configs import get_config, reduce_config
 from repro.core import active_weights_per_token, merge_skipless
+from repro.core.analysis import cost_dict
 from repro.launch import steps as steps_lib
-from repro.launch.dryrun import cost_dict
-from repro.models import forward_decode, forward_prefill, init_params
+from repro.models import forward_prefill, forward_step, init_params
 
 
 def _measured_tok_s(arch: str, n_new: int = 24):
@@ -54,7 +51,7 @@ def _measured_tok_s(arch: str, n_new: int = 24):
     def make_step(step_cfg):
         @jax.jit
         def greedy_step(pp, t, cc):
-            logits, cc = forward_decode(pp, step_cfg, t, cc)
+            logits, cc = forward_step(pp, step_cfg, t, cc)
             return jnp.argmax(logits[:, :step_cfg.vocab_size], axis=-1), cc
         return greedy_step
 

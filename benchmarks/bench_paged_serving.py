@@ -1,4 +1,4 @@
-"""Paged vs dense serving at EQUAL HBM: concurrent streams and tokens/s.
+"""Paged vs dense serving at EQUAL HBM: streams, tokens/s, prefill traffic.
 
 The dense DecodeCache sizes every slot for the worst case, so at a fixed
 cache-HBM budget the slot count is ``budget / (L · max_len · Hkv · Dh)``
@@ -11,11 +11,21 @@ Grid (reduced Mistral shape, the paper's GQA example):
   cache   ∈ {dense, paged}   — same cache HBM budget on both sides
   weights ∈ {skipless, merged(qp)}  — generic vs merged decode route
 
-reporting measured tokens/s, peak concurrent streams, and the pool
-telemetry (prefix-shared pages, copy-on-writes, deferrals).  Greedy
-streams are asserted identical across all four cells (the merge is exact
-and paging is layout, not math).  CPU timings are illustrative; the
-stream-count ratio is the TPU-relevant part.
+reporting measured tokens/s, per-request TTFT (from Engine.generate's
+RequestResults), peak concurrent streams, and the pool telemetry
+(prefix-shared pages, copy-on-writes, deferrals).  Greedy streams are
+asserted identical across all four cells (the merge is exact and paging
+is layout, not math).  CPU timings are illustrative; the stream-count
+ratio and the HLO byte counts are the TPU-relevant parts.
+
+A second section measures the PREFILL path per prompt bucket:
+``cost_analysis`` bytes of the compiled prefill program, paged
+direct-to-page (``forward_prefill(pages=…)`` — prompt KV lands straight
+in the mapped blocks) vs the LEGACY paged path it replaced (dense
+worst-case-``max_len`` intermediate cache + post-prefill page scatter)
+vs the dense engine's prefill.  Direct-to-page must move strictly fewer
+bytes than the legacy path — the intermediate buffer and the second
+scatter pass are simply not in the program.
 
   PYTHONPATH=src python -m benchmarks.bench_paged_serving
 """
@@ -28,8 +38,10 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.core import merge_skipless
-from repro.models import init_params
-from repro.serving import Engine, ServeConfig
+from repro.core.analysis import cost_dict
+from repro.models import forward_prefill, init_params
+from repro.serving import Engine, PagedCacheAdapter, ServeConfig
+from repro.serving.paged_kv_cache import scatter_prefill_blocks
 
 # equal cache-HBM budget: dense gets DENSE_SLOTS worst-case slots, paged
 # gets the same bytes as a pool (DENSE_SLOTS·max_len / block_size pages)
@@ -50,35 +62,69 @@ def _workload(vocab: int):
     return prompts
 
 
-def _serve(cfg, params, cache_kind: str):
+def _make_engine(cfg, params, cache_kind: str) -> Engine:
     n_blocks = DENSE_SLOTS * MAX_LEN // BLOCK
     if cache_kind == "paged":
         # same bytes, but slots are just batch rows: admission is by pages
-        sc = ServeConfig(n_slots=N_REQ, max_len=MAX_LEN, cache_kind="paged",
-                         block_size=BLOCK, n_blocks=n_blocks)
+        sc = ServeConfig(n_slots=N_REQ, max_len=MAX_LEN)
+        cache = PagedCacheAdapter(block_size=BLOCK, n_blocks=n_blocks)
     else:
         sc = ServeConfig(n_slots=DENSE_SLOTS, max_len=MAX_LEN)
-    eng = Engine(cfg, params, sc)
+        cache = "dense"
+    return Engine(cfg, params, sc, cache=cache)
+
+
+def _serve(cfg, params, cache_kind: str):
+    eng = _make_engine(cfg, params, cache_kind)
     prompts = _workload(cfg.vocab_size)
     eng.generate(prompts[:1], max_new_tokens=2)  # warm the jit caches
-    eng2 = Engine(cfg, params, sc)
+    eng2 = _make_engine(cfg, params, cache_kind)
     t0 = time.perf_counter()
     outs = eng2.generate(prompts, max_new_tokens=MAX_NEW)
     dt = time.perf_counter() - t0
     n_tok = sum(len(o) for o in outs)
     row = dict(cache=cache_kind, tok_s=n_tok / dt,
+               ttft_ms=1e3 * float(np.mean([o.ttft_s for o in outs])),
                peak_streams=eng2.stats["peak_active"],
                deferred=eng2.stats["n_deferred"],
-               preempted=eng2.stats["n_preempted"])
+               preempted=eng2.stats["n_preempted"],
+               cache_bytes=eng2.kv.cache_bytes)
     if cache_kind == "paged":
-        row.update(cache_bytes=eng2.pm.pool_bytes,
-                   shared_pages=eng2.pm.allocator.n_shared_hits,
+        row.update(shared_pages=eng2.pm.allocator.n_shared_hits,
                    cow=eng2.pm.allocator.n_cow,
                    peak_pages=eng2.pm.allocator.peak_used)
-    else:
-        row.update(cache_bytes=int(eng2.cache.k.size + eng2.cache.v.size)
-                   * eng2.cache.k.dtype.itemsize)
     return row, outs
+
+
+def _prefill_traffic(dense: Engine, paged: Engine, bucket: int):
+    """``cost_analysis`` bytes of the compiled prefill program for one
+    prompt bucket: dense engine, paged direct-to-page, and the legacy
+    paged path (dense ``max_len`` intermediate + page scatter) that
+    direct-to-page deleted."""
+    cfg, params = dense.cfg, dense.params
+    b_dense = cost_dict(dense.compiled_prefill(bucket)).get("bytes accessed", 0.0)
+    b_paged = cost_dict(paged.compiled_prefill(bucket)).get("bytes accessed", 0.0)
+
+    # the legacy before-path, lowered exactly as PR 2's engine ran it:
+    # (1) dense prefill into a full max_len cache, (2) scatter its pages
+    pshape = jax.eval_shape(lambda: params)
+    tk = jax.ShapeDtypeStruct((1, bucket), jax.numpy.int32)
+    tl = jax.ShapeDtypeStruct((1,), jax.numpy.int32)
+    legacy_pf = jax.jit(lambda p, t, l: forward_prefill(
+        p, cfg, t, cache_len=MAX_LEN, true_len=l, full_cache=True))
+    b_legacy = cost_dict(
+        legacy_pf.lower(pshape, tk, tl).compile()).get("bytes accessed", 0.0)
+    nb = -(-bucket // BLOCK)
+    pool = jax.eval_shape(lambda: paged.pm.k)
+    blocks = jax.ShapeDtypeStruct(
+        (pool.shape[0], nb, BLOCK, *pool.shape[3:]), pool.dtype)
+    ids = jax.ShapeDtypeStruct((nb,), jax.numpy.int32)
+    b_legacy += cost_dict(
+        jax.jit(scatter_prefill_blocks).lower(
+            pool, pool, blocks, blocks, ids).compile()
+    ).get("bytes accessed", 0.0)
+    return dict(bucket=bucket, dense_bytes=b_dense, paged_bytes=b_paged,
+                paged_legacy_bytes=b_legacy)
 
 
 def run():
@@ -115,21 +161,39 @@ def run():
         assert p["peak_streams"] > d["peak_streams"], (
             "paged pool must sustain more concurrent streams than the dense "
             f"cache at equal HBM: {p['peak_streams']} vs {d['peak_streams']}")
-    return rows
+
+    dense_eng = _make_engine(base, params, "dense")
+    paged_eng = _make_engine(base, params, "paged")
+    prefill = [_prefill_traffic(dense_eng, paged_eng, b) for b in (8, 16)]
+    for pr in prefill:
+        assert pr["paged_bytes"] < pr["paged_legacy_bytes"], (
+            "direct-to-page prefill must move strictly fewer bytes than "
+            "the legacy dense-intermediate + scatter path", pr)
+    return rows, prefill
 
 
 def main():
-    rows = run()
+    rows, prefill = run()
     print(f"{N_REQ} requests, prompts 4..28 tok, +{MAX_NEW} new; equal "
           f"cache HBM ({rows[0]['cache_bytes']/1e6:.2f} MB)")
-    hdr = ("weights", "cache", "peak_streams", "tok_s", "deferred",
-           "preempted", "shared_pages", "cow")
+    hdr = ("weights", "cache", "peak_streams", "tok_s", "ttft_ms",
+           "deferred", "preempted", "shared_pages", "cow")
     print(" ".join(f"{h:>12}" for h in hdr))
     for r in rows:
         print(" ".join(
             f"{r.get(h, '-'):>12.1f}" if isinstance(r.get(h), float)
             else f"{str(r.get(h, '-')):>12}" for h in hdr))
     print("all four greedy streams token-identical; paged > dense streams OK")
+    print("\nprefill traffic per prompt bucket (cost_analysis bytes of the "
+          "compiled prefill program):")
+    for pr in prefill:
+        saved = 1.0 - pr["paged_bytes"] / pr["paged_legacy_bytes"]
+        print(f"  bucket {pr['bucket']:>3}: dense {pr['dense_bytes']/1e6:.2f} "
+              f"MB | paged direct-to-page {pr['paged_bytes']/1e6:.2f} MB | "
+              f"legacy paged (max_len intermediate + scatter) "
+              f"{pr['paged_legacy_bytes']/1e6:.2f} MB "
+              f"({100 * saved:.1f}% fewer bytes direct)")
+    print("direct-to-page < legacy paged prefill bytes OK")
 
 
 if __name__ == "__main__":

@@ -48,12 +48,16 @@ def main() -> None:
                 m = next(r for r in rows if r["arch"] == "mistral-7b")
                 derived = f"mistral_bytes_saved={m['bytes_saved_frac']:.3f}"
             elif name.startswith("paged_serving"):
+                rows, prefill = rows  # run() -> (serve rows, prefill rows)
                 dn = next(r for r in rows if r["weights"] == "merged_qp"
                           and r["cache"] == "dense")
                 pg = next(r for r in rows if r["weights"] == "merged_qp"
                           and r["cache"] == "paged")
+                pf = prefill[-1]
+                saved = 1.0 - pf["paged_bytes"] / pf["paged_legacy_bytes"]
                 derived = (f"streams_paged_vs_dense="
-                           f"{pg['peak_streams']}v{dn['peak_streams']}")
+                           f"{pg['peak_streams']}v{dn['peak_streams']}"
+                           f";prefill_bytes_saved={saved:.3f}")
             elif name.startswith("numerics"):
                 o = next(r for r in rows if r["init"] == "orthogonal"
                          and r["dtype"] == "float32")

@@ -24,7 +24,7 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core import decode_ms_per_token, merge_skipless, weight_table
 from repro.models import count_params, init_params
-from repro.serving import Engine, ServeConfig
+from repro.serving import Engine, PagedCacheAdapter, ServeConfig
 
 
 def main():
@@ -46,13 +46,15 @@ def main():
 
     if args.cache == "paged":
         # slots are just batch rows; the POOL (sized like `--slots` dense
-        # slots) is what admission control spends
-        sc = ServeConfig(n_slots=args.requests, max_len=128,
-                         cache_kind="paged", block_size=16,
-                         n_blocks=args.slots * 128 // 16)
+        # slots) is what admission control spends — prefill writes prompt
+        # KV direct-to-page (no worst-case intermediate buffer)
+        sc = ServeConfig(n_slots=args.requests, max_len=128)
+        cache = PagedCacheAdapter(block_size=16,
+                                  n_blocks=args.slots * 128 // 16)
     else:
         sc = ServeConfig(n_slots=args.slots, max_len=128)
-    eng = Engine(mcfg, mparams, sc)
+        cache = "dense"
+    eng = Engine(mcfg, mparams, sc, cache=cache)
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, size=(rng.randint(6, 24),))
                for _ in range(args.requests)]
@@ -60,9 +62,11 @@ def main():
     outs = eng.generate(prompts, max_new_tokens=args.max_new)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
+    ttfts = [o.ttft_s for o in outs]
     print(f"{args.requests} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s on CPU), "
-          f"peak streams {eng.stats['peak_active']}")
+          f"peak streams {eng.stats['peak_active']}, "
+          f"TTFT mean {np.mean(ttfts):.3f}s")
     if args.cache == "paged":
         a = eng.pm.allocator
         print(f"  pool: {a.n_blocks} pages, peak used {a.peak_used}, "

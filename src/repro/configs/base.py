@@ -23,8 +23,8 @@ per-config via ``block_style``:
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
 
 BLOCK_STYLES = ("standard", "skipless", "skipless_merged", "residual_qpfree")
 FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")

@@ -18,7 +18,6 @@ beyond the paper for MoE (only routed experts are read per token).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict
 
 from repro.configs.base import ModelConfig
@@ -125,3 +124,21 @@ def decode_ms_per_token(n_weights: int, bytes_per_weight: int = 2,
                         hbm_gbps: float = 819.0, chips: int = 1) -> float:
     """Lower-bound ms/token when weight streaming saturates HBM (v5e)."""
     return n_weights * bytes_per_weight / (hbm_gbps * 1e9 * chips) * 1e3
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    """Normalize a jitted ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a flat dict; newer versions (0.4.37 here) return a
+    list with one dict per executable module.  Sum the per-module entries
+    into one dict so callers can ``.get("flops")`` uniformly.  Lives here
+    (not in launch.dryrun) because importing dryrun has side effects —
+    its XLA_FLAGS mutation forces a 512-device host platform."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        merged: Dict[str, float] = {}
+        for c in cost:
+            for k, v in (c or {}).items():
+                merged[k] = merged.get(k, 0.0) + float(v)
+        return merged
+    return dict(cost or {})

@@ -36,8 +36,7 @@ instead, so one d×d matrix of savings is forgone for block 0 only.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -33,7 +33,7 @@ padding waste explicitly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -216,6 +216,28 @@ def paged_cache_pspecs(cfg: ModelConfig, rules: ShardingRules):
         block_tables=P(dp, None),
         length=P(dp),
     )
+
+
+def serving_cache_pspecs(cfg: ModelConfig, rules: ShardingRules, cache_like):
+    """PartitionSpecs for whichever serving cache is in use, TRIMMED to the
+    fields that actually exist.
+
+    ``cache_like`` is the cache pytree (arrays or ShapeDtypeStructs) the
+    engine will pass to the jitted step: a ``PagedDecodeCache`` maps to the
+    block-pool specs; a ``DecodeCache`` maps to the dense specs with the
+    spec entries for absent (None) fields dropped — pjit rejects specs for
+    missing subtrees, and which fields exist depends on the family (ssm
+    state, vlm cross-kv, …).  This is the single home for that trim logic
+    (the engine used to re-derive it per call site).
+    """
+    from repro.models.transformer import DecodeCache, PagedDecodeCache
+
+    if isinstance(cache_like, PagedDecodeCache):
+        return paged_cache_pspecs(cfg, rules)
+    spec = cache_pspecs(cfg, rules)
+    return DecodeCache(*[
+        None if getattr(cache_like, f) is None else getattr(spec, f)
+        for f in DecodeCache._fields])
 
 
 def logits_pspec(rules: ShardingRules, seq_dim: bool = True) -> P:

@@ -188,3 +188,31 @@ def decode_attention_paged_merged(
         block_tables.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
         sliding_window=sliding_window, interpret=interpret)
     return out.reshape(B, d)
+
+
+# ---------------------------------------------------------------------------
+# decode-kernel table: the kernel-layer face of the serving backend registry
+# ---------------------------------------------------------------------------
+
+# keyed like models.backends (minus the impl axis — every wrapper here IS the
+# pallas route; ``interpret=True`` is the CPU-validation mode of the same
+# kernel).  models.attention's cores fetch their pallas path here, so "which
+# (cache layout × projection style) combos have a fused kernel" is read off
+# one table instead of four call sites.
+DECODE_KERNELS = {
+    ("dense", "generic"): decode_attention,
+    ("dense", "merged"): decode_attention_merged,
+    ("paged", "generic"): decode_attention_paged,
+    ("paged", "merged"): decode_attention_paged_merged,
+}
+
+
+def decode_kernel(cache_kind: str, style: str):
+    """Pallas decode kernel wrapper for one (cache_kind, style) combo;
+    unknown combos raise KeyError naming the registered ones."""
+    try:
+        return DECODE_KERNELS[(cache_kind, style)]
+    except KeyError:
+        raise KeyError(
+            f"no Pallas decode kernel for (cache_kind={cache_kind!r}, "
+            f"style={style!r}); available: {sorted(DECODE_KERNELS)}") from None

@@ -5,7 +5,7 @@ kernel tests sweep shapes/dtypes and assert_allclose against these.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

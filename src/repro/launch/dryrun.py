@@ -42,20 +42,10 @@ _SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|u32|s32|u16|s16|pred|u8|s8|c64)"
                        r"\[([0-9,]*)\]")
 
 
-def cost_dict(compiled) -> Dict[str, float]:
-    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
-
-    Older JAX returns a flat dict; newer versions (0.4.37 here) return a
-    list with one dict per executable module.  Sum the per-module entries
-    into one dict so callers can ``.get("flops")`` uniformly."""
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):
-        merged: Dict[str, float] = {}
-        for c in cost:
-            for k, v in (c or {}).items():
-                merged[k] = merged.get(k, 0.0) + float(v)
-        return merged
-    return dict(cost or {})
+# re-exported for existing callers; the implementation lives in
+# core.analysis so benchmarks can use it WITHOUT importing this module
+# (whose import mutates XLA_FLAGS to fake 512 host devices)
+from repro.core.analysis import cost_dict  # noqa: F401,E402
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, Any]:
@@ -157,7 +147,7 @@ def _lower_compile(cfg, shape, mesh, rules, *, grad_accum, remat, unroll,
         args = (pshape, ispecs)
     else:  # decode
         cache_shape = ispecs["cache"]
-        cpspec = shd.evenly(_trim_cache(shd.cache_pspecs(cfg, rules), cache_shape),
+        cpspec = shd.evenly(shd.serving_cache_pspecs(cfg, rules, cache_shape),
                             cache_shape, mesh)
         csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cpspec)
         tsh = NamedSharding(mesh, P(rules.dp))
@@ -321,11 +311,7 @@ def _model_flops(cfg, shape) -> float:
     MoE uses active params; attention-free/ssm uses total params. The
     paper-style N excludes the unembedding read... we use matmul params
     (embedding excluded, unembedding included as a matmul)."""
-    from repro.core.analysis import active_weights_per_token
-
-    t = None
     # matmul params ~= total - input embedding (gather, not matmul)
-    n_total = None
     from repro.core.analysis import weight_table
     wt = weight_table(cfg)
     n_matmul = wt["total"] - cfg.d_model * cfg.vocab_size  # minus input embed
@@ -336,15 +322,6 @@ def _model_flops(cfg, shape) -> float:
     tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
     mult = 6.0 if shape.kind == "train" else 2.0
     return mult * n_matmul * tokens
-
-
-def _trim_cache(spec_cache, like_cache):
-    from repro.models.transformer import DecodeCache
-    vals = []
-    for f in DecodeCache._fields:
-        vals.append(None if getattr(like_cache, f) is None
-                    else getattr(spec_cache, f))
-    return DecodeCache(*vals)
 
 
 # ---------------------------------------------------------------------------

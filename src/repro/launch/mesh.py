@@ -7,7 +7,6 @@ set XLA_FLAGS before the first jax call, and smoke tests must see 1 device.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):

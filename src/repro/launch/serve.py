@@ -7,10 +7,13 @@ With ``--merged-from-skipless`` the launcher builds a skipless model, runs
 the paper's QP-removal merge, and serves the merged weights — reporting the
 weight/bandwidth savings next to the generated tokens.
 
-``--cache paged`` serves through the block-pool KV cache (admission by
-pages instead of a worst-case slot cap; see serving.paged_kv_cache) —
-``--slots`` then sizes the page pool in dense-slot equivalents while every
-request gets its own batch row.
+``--cache paged`` serves through the block-pool KV cache adapter
+(``serving.PagedCacheAdapter``: admission by pages instead of a worst-case
+slot cap, direct-to-page prefill) — ``--slots`` then sizes the page pool in
+dense-slot equivalents while every request gets its own batch row.
+
+Per-request serving stats (prompt_len, time-to-first-token, decode tok/s)
+come straight from ``Engine.generate``'s RequestResults.
 """
 from __future__ import annotations
 
@@ -40,7 +43,7 @@ def main(argv=None):
     from repro.configs import get_config, reduce_config
     from repro.core import merge_skipless
     from repro.models import count_params, init_params
-    from repro.serving import Engine, ServeConfig
+    from repro.serving import Engine, PagedCacheAdapter, ServeConfig
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -60,16 +63,16 @@ def main(argv=None):
               f"({100 * (n0 - n1) / n0:.1f}% removed)", flush=True)
 
     if args.cache == "paged":
-        sc = ServeConfig(
-            n_slots=args.requests, max_len=args.max_len, cache_kind="paged",
+        sc = ServeConfig(n_slots=args.requests, max_len=args.max_len,
+                         temperature=args.temperature, seed=args.seed)
+        cache = PagedCacheAdapter(
             block_size=args.block_size,
-            n_blocks=args.slots * args.max_len // args.block_size,
-            temperature=args.temperature, seed=args.seed)
+            n_blocks=args.slots * args.max_len // args.block_size)
     else:
-        sc = ServeConfig(
-            n_slots=args.slots, max_len=args.max_len,
-            temperature=args.temperature, seed=args.seed)
-    eng = Engine(cfg, params, sc)
+        sc = ServeConfig(n_slots=args.slots, max_len=args.max_len,
+                         temperature=args.temperature, seed=args.seed)
+        cache = "dense"
+    eng = Engine(cfg, params, sc, cache=cache)
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, cfg.vocab_size, size=(args.prompt_len,))
                for _ in range(args.requests)]
@@ -77,8 +80,11 @@ def main(argv=None):
     outs = eng.generate(prompts, max_new_tokens=args.max_new)
     dt = time.time() - t0
     total_tokens = sum(len(o) for o in outs)
+    ttfts = [o.ttft_s for o in outs]
     print(f"served {args.requests} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)", flush=True)
+          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s); "
+          f"TTFT mean {np.mean(ttfts):.3f}s / max {np.max(ttfts):.3f}s",
+          flush=True)
     if args.cache == "paged":
         a = eng.pm.allocator
         print(f"  paged pool: {a.n_blocks} pages, peak used {a.peak_used}, "
@@ -87,7 +93,8 @@ def main(argv=None):
               f"deferred {eng.stats['n_deferred']}, "
               f"preempted {eng.stats['n_preempted']}", flush=True)
     for i, o in enumerate(outs[:4]):
-        print(f"  req{i}: {o[:12]}{'…' if len(o) > 12 else ''}")
+        print(f"  req{i}: {list(o[:12])}{'…' if len(o) > 12 else ''} "
+              f"(ttft {o.ttft_s:.3f}s, {o.decode_tok_s:.1f} tok/s decode)")
 
 
 if __name__ == "__main__":

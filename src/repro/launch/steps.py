@@ -7,22 +7,19 @@ and ``build_step(cfg, kind)`` returns the function the cell lowers:
   train    -> full train_step (fwd + bwd + AdamW update, donated)
   prefill  -> forward_prefill (logits + filled DecodeCache); encoder archs
               lower the plain encode forward (no cache exists)
-  decode   -> forward_decode (one token against the cache) == serve_step
+  decode   -> forward_step (one token against the cache) == serve_step
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeSpec
-from repro.models import (forward_decode, forward_prefill, forward_seq,
+from repro.models import (forward_prefill, forward_seq, forward_step,
                           init_cache, init_params)
-from repro.models.transformer import DecodeCache
 from repro.training.optimizer import make_optimizer
 from repro.training.train_loop import make_train_step
 
@@ -104,7 +101,7 @@ def build_step(cfg: ModelConfig, kind: str, *, grad_accum: int = 1,
         def serve_step(params, token, cache):
             # qkv_sharding re-anchors TP head sharding for merged
             # (Q/P-removed) styles, which have no wq matmul to anchor it
-            return forward_decode(params, cfg, token, cache, impl=impl,
-                                  unroll=unroll, qkv_sharding=qkv_sharding)
+            return forward_step(params, cfg, token, cache, impl=impl,
+                                unroll=unroll, qkv_sharding=qkv_sharding)
         return serve_step, ("params", "token", "cache")
     raise ValueError(kind)

@@ -11,7 +11,6 @@ XLA_FLAGS=--xla_force_host_platform_device_count=4).
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def main(argv=None):

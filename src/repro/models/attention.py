@@ -12,12 +12,15 @@ Three implementations:
   * ``impl="pallas"`` — TPU Pallas flash-attention kernel (kernels/).
   * ``impl="pallas_interpret"`` — same kernel, interpret mode (CPU tests).
 
+Decode cores fetch their Pallas route from ``kernels.ops.DECODE_KERNELS``,
+keyed (cache_kind, style) like the serving backend registry
+(``models.backends``) — one table says which combos have fused kernels.
+
 GQA is computed grouped (q reshaped to (…, n_kv, group, d)) — KV heads are
 never materialized repeated.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -157,7 +160,7 @@ def decode_attention_core_merged(
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
-        return kops.decode_attention_merged(
+        return kops.decode_kernel("dense", "merged")(
             u, k_cache, v_cache, kv_positions=kv_positions,
             q_position=q_position, n_kv_heads=n_kv_heads,
             sliding_window=sliding_window,
@@ -189,7 +192,7 @@ def decode_attention_core_positions(
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
-        return kops.decode_attention(
+        return kops.decode_kernel("dense", "generic")(
             q, k_cache, v_cache, kv_positions=kv_positions,
             q_position=q_position, sliding_window=sliding_window,
             interpret=(impl == "pallas_interpret"),
@@ -247,7 +250,7 @@ def decode_attention_core_paged(
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
-        return kops.decode_attention_paged(
+        return kops.decode_kernel("paged", "generic")(
             q, k_pool, v_pool, block_tables=block_tables,
             q_position=q_position, sliding_window=sliding_window,
             interpret=(impl == "pallas_interpret"))
@@ -283,7 +286,7 @@ def decode_attention_core_paged_merged(
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
-        return kops.decode_attention_paged_merged(
+        return kops.decode_kernel("paged", "merged")(
             u, k_pool, v_pool, block_tables=block_tables,
             q_position=q_position, n_kv_heads=n_kv_heads,
             sliding_window=sliding_window,

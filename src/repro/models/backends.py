@@ -1,0 +1,104 @@
+"""AttentionBackend registry: the seam between the model and its KV cache.
+
+The paper's point is that Q/P-free (KV-weights-only) attention is a *layout
+choice*, not a fork of the model code — but a serving stack accumulates
+variants along three independent axes:
+
+  cache_kind  how per-token KV is stored: "dense" (per-slot ring buffer,
+              ``DecodeCache``) or "paged" (block-pool pages behind a block
+              table, ``PagedDecodeCache``)
+  style       which projections the per-token step reads: "generic"
+              (projects q/k/v as the config dictates, covering unmerged
+              models AND the kp/vp merged variants whose eliminated
+              projection is an identity inside ``_project_qkv``) or
+              "merged" (the qp fast path: the residual stream IS the
+              query, no Q or P weights exist to read)
+  impl        "xla" | "pallas" | "pallas_interpret"
+
+Rather than one hand-wired entry point per combination (PR 1–2 grew four
+``_attn_step*`` functions plus a ``forward_decode``/``forward_decode_paged``
+pair), every combination is a registered :class:`AttentionBackend` and the
+single ``models.transformer.forward_step`` looks its per-layer step up here.
+
+Registering a new backend (e.g. a quantized-cache kind or a fused step for
+a new merged variant) is::
+
+    from repro.models import backends
+
+    def my_step(lp, cfg, u1, k_store, v_store, ctx):
+        # u1 (B,1,d) stream; k_store/v_store in the cache kind's layout;
+        # ctx carries "length", "impl", "qkv_sharding" and the cache
+        # kind's addressing ("kv_pos" dense / "block_tables" paged).
+        ...
+        return cat, new_k_store, new_v_store
+
+    backends.register_backend("mykind", "generic", my_step)
+
+Steps take ``impl`` from ``ctx`` so one function usually serves every impl
+key; ``register_backend`` registers all three impls by default.  Lookups of
+unregistered combinations fail loudly with the list of registered keys —
+there is no silent fallback path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+CACHE_KINDS = ("dense", "paged")
+STYLES = ("generic", "merged")
+IMPLS = ("xla", "pallas", "pallas_interpret")
+
+# step(lp, cfg, u1, k_store, v_store, ctx) -> (cat, new_k_store, new_v_store)
+StepFn = Callable[..., Tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBackend:
+    """One registered (cache_kind, style, impl) decode-attention route.
+
+    ``fast_path`` is True when the per-token step reads no Q or P weights
+    (the paper's merged qp layout cashed in at serve time); the engine
+    surfaces it as ``Engine.merged_fast_path``.
+    """
+    cache_kind: str
+    style: str
+    impl: str
+    step: StepFn
+    fast_path: bool = False
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        return (self.cache_kind, self.style, self.impl)
+
+
+_REGISTRY: Dict[Tuple[str, str, str], AttentionBackend] = {}
+
+
+def register_backend(cache_kind: str, style: str, step: StepFn, *,
+                     impls: Tuple[str, ...] = IMPLS,
+                     fast_path: bool = False) -> None:
+    """Register ``step`` under (cache_kind, style) for each impl in
+    ``impls``.  Re-registration overwrites (latest wins), so downstream
+    code can swap in a tuned backend without forking the model."""
+    for impl in impls:
+        _REGISTRY[(cache_kind, style, impl)] = AttentionBackend(
+            cache_kind=cache_kind, style=style, impl=impl, step=step,
+            fast_path=fast_path)
+
+
+def get_backend(cache_kind: str, style: str, impl: str) -> AttentionBackend:
+    """Look up the backend for one combo; unknown combos raise KeyError
+    naming the offending key and every registered one (no silent
+    fallback)."""
+    key = (cache_kind, style, impl)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"no AttentionBackend registered for (cache_kind={cache_kind!r}, "
+            f"style={style!r}, impl={impl!r}); registered combos: "
+            f"{registered_backends()}") from None
+
+
+def registered_backends() -> List[Tuple[str, str, str]]:
+    return sorted(_REGISTRY)

@@ -7,8 +7,6 @@ pure pytrees keep the lowered HLO fully under our control).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,13 +18,21 @@ choice). The VLM interleave (cross-attn every Nth layer) scans over
 
 Modes:
   forward_train / forward_encode : full-sequence, returns logits (+aux)
-  forward_prefill                : full-sequence, fills a DecodeCache
-  forward_decode                 : one token vs DecodeCache (serve_step body)
+  forward_prefill                : full-sequence, fills a DecodeCache — or,
+                                   with ``pages=``, writes prompt KV
+                                   straight into mapped paged-pool blocks
+  forward_step                   : one token vs either serving cache
+                                   (serve_step body); the per-layer
+                                   attention route is looked up in the
+                                   ``models.backends`` registry keyed on
+                                   (cache_kind, style, impl)
+
+``forward_decode`` / ``forward_decode_paged`` remain as deprecated shims
+over ``forward_step``.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
+import warnings
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -32,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
+from repro.models import backends
 from repro.models import ffn as ffn_mod
 from repro.models import mamba2 as m2
 from repro.models import moe as moe_mod
@@ -490,19 +499,26 @@ class DecodeCache(NamedTuple):
     cross_v: Optional[jnp.ndarray]
 
 
+def n_attn_layers(cfg: ModelConfig) -> int:
+    """Number of self-attention layers holding per-token KV (the leading
+    cache axis of both serving cache kinds)."""
+    plan = layer_plan(cfg)
+    if plan["kind"] in ("attn", "hybrid"):
+        return plan["n"]
+    if plan["kind"] == "vlm":
+        return plan["n_groups"] * plan["self_per_group"]
+    return 0
+
+
 def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
     """Shapes for an empty cache (used by init and by input_specs)."""
     plan = layer_plan(cfg)
     cdt = dtype_of(cfg.dtype)
     Sc = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     spec: Dict[str, Any] = {}
-    n_attn_layers = 0
-    if plan["kind"] in ("attn", "hybrid"):
-        n_attn_layers = plan["n"]
-    elif plan["kind"] == "vlm":
-        n_attn_layers = plan["n_groups"] * plan["self_per_group"]
-    if n_attn_layers:
-        spec["k"] = ((n_attn_layers, batch, Sc, cfg.n_kv_heads, cfg.d_head), cdt)
+    n_attn = n_attn_layers(cfg)
+    if n_attn:
+        spec["k"] = ((n_attn, batch, Sc, cfg.n_kv_heads, cfg.d_head), cdt)
         spec["v"] = spec["k"]
         spec["kv_pos"] = ((batch, Sc), jnp.int32)
     spec["length"] = ((batch,), jnp.int32)
@@ -546,27 +562,80 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> DecodeCache:
 # prefill: full-sequence forward that also fills the cache
 # ---------------------------------------------------------------------------
 
-def forward_prefill(params, cfg: ModelConfig, inputs, *, cache_len: int,
+def _last_logits_and_length(logits, true_len, B, S):
+    """Gather the last REAL position's logits (bucketed prompts are
+    right-padded; causality keeps positions < true_len exact)."""
+    if true_len is None:
+        return logits[:, -1, :], jnp.full((B,), S, jnp.int32)
+    true_len = jnp.asarray(true_len, jnp.int32)
+    last = jnp.take_along_axis(
+        logits, (true_len - 1)[:, None, None], axis=1)[:, 0, :]
+    return last, true_len
+
+
+def forward_prefill(params, cfg: ModelConfig, inputs, *, cache_len: int = 0,
                     vision=None, impl: str = "xla", unroll: bool = False,
-                    qkv_sharding=None, true_len=None, full_cache: bool = False):
-    """Returns (last_token_logits (B,V), DecodeCache).
+                    qkv_sharding=None, true_len=None, full_cache: bool = False,
+                    pages=None):
+    """Cache-aware prefill.
+
+    Dense (default): returns (last_token_logits (B,V), DecodeCache of
+    ``cache_len`` positions).
+
+    Paged (``pages=(k_pool, v_pool, block_ids)``): writes the prompt's KV
+    DIRECTLY into the mapped physical blocks of the pool — no worst-case
+    ``cache_len`` intermediate cache and no post-prefill scatter pass —
+    and returns (last_token_logits (B,V), (k_pool, v_pool)).  ``k_pool``/
+    ``v_pool`` are (L, NB, bs, Hkv, Dh) page pools; ``block_ids`` is
+    (ceil(S/bs),) int32 mapping this request's logical block j to its
+    physical page, with -1 for blocks that must NOT be written (prefix-
+    shared pages already holding the prefix — possibly extended by another
+    live request's decoded tokens — and bucket-padding blocks past the
+    prompt).  The sliding window never trims paged prompt KV: the paged
+    cache stores absolute positions and masks the window in the kernel.
 
     ``true_len`` (B,) int32 supports bucketed prompts: ``inputs`` may be
     RIGHT-padded to a bucket length, and causality guarantees positions
     < true_len are unaffected by the padding — the returned logits are
     gathered at ``true_len - 1`` and the cache marks padded positions
-    empty (kv_pos = -1) with ``length = true_len``, so decode overwrites
-    them in order.  ``None`` means the whole sequence is real.
+    empty (dense: kv_pos = -1; paged: in-page positions past ``length``,
+    hidden by the causal mask) with ``length = true_len``, so decode
+    overwrites them in order.  ``None`` means the whole sequence is real.
 
-    ``full_cache`` keeps the cache ``cache_len`` long even for
+    ``full_cache`` (dense) keeps the cache ``cache_len`` long even for
     sliding-window configs (whose dense serving cache is a window-sized
-    ring buffer): the paged serving layer stores absolute positions and
-    masks the window in the kernel, so it needs every prompt position.
+    ring buffer), for callers that need every prompt position.
     """
     B, S = inputs.shape[0], inputs.shape[1]
     logits, aux, kvs = forward_seq(params, cfg, inputs, vision=vision,
                                    impl=impl, collect_kv=True, unroll=unroll,
                                    qkv_sharding=qkv_sharding)
+
+    if pages is not None:
+        assert layer_plan(cfg)["kind"] == "attn", (
+            "paged prefill supports attention-only stacks")
+        assert B == 1, "paged prefill inserts one request at a time"
+        k_pool, v_pool, block_ids = pages
+        last_logits, length = _last_logits_and_length(logits, true_len, B, S)
+        ks, vs = kvs  # (L, 1, S, Hkv, Dh)
+        L, bs, NB = k_pool.shape[0], k_pool.shape[2], k_pool.shape[1]
+        nbk = block_ids.shape[0]
+        pad = nbk * bs - S
+        assert pad >= 0, (S, nbk, bs)
+        if pad:
+            ks = jnp.pad(ks, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+            vs = jnp.pad(vs, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+        kb = ks[:, 0].reshape(L, nbk, bs, *ks.shape[3:])
+        vb = vs[:, 0].reshape(L, nbk, bs, *vs.shape[3:])
+        # unmapped/-1 destinations are clamped out of range and DROPPED:
+        # shared-prefix pages (owned content, maybe another request's
+        # decoded tail) and bucket-padding blocks are never touched
+        safe = jnp.where(block_ids >= 0, block_ids, NB).astype(jnp.int32)
+        k_pool = k_pool.at[:, safe].set(kb.astype(k_pool.dtype), mode="drop")
+        v_pool = v_pool.at[:, safe].set(vb.astype(v_pool.dtype), mode="drop")
+        return last_logits, (k_pool, v_pool)
+
+    assert cache_len > 0, "dense prefill needs cache_len"
     cache_cfg = cfg.with_(sliding_window=0) if full_cache else cfg
     cache = init_cache(cache_cfg, B, cache_len)
     Sc = cache.k.shape[2] if cache.k is not None else 0
@@ -584,14 +653,9 @@ def forward_prefill(params, cfg: ModelConfig, inputs, *, cache_len: int,
         pad = [(0, 0), (0, 0), (0, Sc - S), (0, 0), (0, 0)]
         return jnp.pad(kv_stacked, pad)
 
-    if true_len is None:
-        last_logits = logits[:, -1, :]
-        length = jnp.full((B,), S, jnp.int32)
-    else:
-        true_len = jnp.asarray(true_len, jnp.int32)
-        last_logits = jnp.take_along_axis(
-            logits, (true_len - 1)[:, None, None], axis=1)[:, 0, :]
-        length = true_len
+    last_logits, length = _last_logits_and_length(logits, true_len, B, S)
+    if true_len is not None:
+        true_len = length  # normalized int32 view for the kv_pos mask below
     new = cache._replace(length=length)
     plan = layer_plan(cfg)
     if plan["kind"] == "vlm":
@@ -635,7 +699,6 @@ def _prefill_ssm_states(params, cfg: ModelConfig, inputs, vision, impl,
     B, S = inputs.shape[0], inputs.shape[1]
     h = embed_inputs(params, cfg, inputs)
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-    ctx = {"positions": positions, "vision": vision, "impl": impl}
 
     def f(carry, lp):
         h = carry
@@ -694,45 +757,57 @@ def _rope_and_insert(cfg: ModelConfig, q, k_new, v_new, k_layer, v_layer,
     return q, k_layer, v_layer
 
 
-def _attn_step(lp, cfg: ModelConfig, u1, k_layer, v_layer, kv_pos, length,
-               merged: bool, impl: str):
-    """u1 (B,1,d); k_layer/v_layer (B,Sc,Hkv,Dh). Returns (cat, new_k, new_v)."""
-    B = u1.shape[0]
+def _attn_step_dense(lp, cfg: ModelConfig, u1, k_layer, v_layer, ctx):
+    """Registered backend ("dense", "generic"): projects q/k/v as the
+    config dictates (kp/vp merged variants pass through — their eliminated
+    projection is an identity inside ``_project_qkv``).
+
+    u1 (B,1,d); k_layer/v_layer (B,Sc,Hkv,Dh). Returns (cat, new_k, new_v).
+    """
+    B, length = u1.shape[0], ctx["length"]
+    merged = _is_merged(cfg.block_style)
     q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, merged)
     q, k_layer, v_layer = _rope_and_insert(cfg, q, k_new, v_new,
                                            k_layer, v_layer, length)
     out = attn_mod.decode_attention_core_positions(
         q[:, 0], k_layer, v_layer,
-        kv_positions=kv_pos, q_position=length,
-        sliding_window=cfg.sliding_window, impl=impl)
+        kv_positions=ctx["kv_pos"], q_position=length,
+        sliding_window=cfg.sliding_window, impl=ctx["impl"])
     return out.reshape(B, 1, cfg.attn_dim), k_layer, v_layer
 
 
-def _attn_step_merged(lp, cfg: ModelConfig, u1, k_layer, v_layer, kv_pos,
-                      length, impl: str, qkv_sharding=None):
-    """Merged (Q/P-removed) decode fast path — paper Fig 1b cashed in at
-    serve time.  The residual stream is the query basis, so the only
-    attention-side weights read per token are K*/V*: no d×d Q matmul, no
-    P matmul, and the attention output lands directly in the FFN-input
-    basis (the kernel also consumes the cache in its native layout).
-    Numerically identical to the generic ``_attn_step`` with variant
-    "qp"; it exists so serving never touches the eliminated projections.
+def _qkv_reanchor(ctx, q, k_new, v_new):
+    """Merged styles lose the TP sharding anchor for q (no wq matmul to
+    propagate head-sharding from) — same fix as ``_self_attention_seq``."""
+    sh = ctx.get("qkv_sharding")
+    if sh is None:
+        return q, k_new, v_new
+    return (jax.lax.with_sharding_constraint(q, sh),
+            jax.lax.with_sharding_constraint(k_new, sh),
+            jax.lax.with_sharding_constraint(v_new, sh))
+
+
+def _attn_step_dense_merged(lp, cfg: ModelConfig, u1, k_layer, v_layer, ctx):
+    """Registered backend ("dense", "merged"): the Q/P-removed decode fast
+    path — paper Fig 1b cashed in at serve time.  The residual stream is
+    the query basis, so the only attention-side weights read per token are
+    K*/V*: no d×d Q matmul, no P matmul, and the attention output lands
+    directly in the FFN-input basis (the kernel also consumes the cache
+    in its native layout).  Numerically identical to the generic backend
+    with variant "qp"; it exists so serving never touches the eliminated
+    projections.
     """
-    B = u1.shape[0]
+    B, length = u1.shape[0], ctx["length"]
     # variant "qp": _project_qkv returns the stream itself as q (identity)
     q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, True)
-    if qkv_sharding is not None:
-        # merged styles lose the TP sharding anchor for q (no wq matmul to
-        # propagate head-sharding from) — same fix as _self_attention_seq
-        q = jax.lax.with_sharding_constraint(q, qkv_sharding)
-        k_new = jax.lax.with_sharding_constraint(k_new, qkv_sharding)
-        v_new = jax.lax.with_sharding_constraint(v_new, qkv_sharding)
+    q, k_new, v_new = _qkv_reanchor(ctx, q, k_new, v_new)
     q, k_layer, v_layer = _rope_and_insert(cfg, q, k_new, v_new,
                                            k_layer, v_layer, length)
     out = attn_mod.decode_attention_core_merged(
         q.reshape(B, cfg.attn_dim), k_layer, v_layer,
-        kv_positions=kv_pos, q_position=length, n_kv_heads=cfg.n_kv_heads,
-        sliding_window=cfg.sliding_window, impl=impl)
+        kv_positions=ctx["kv_pos"], q_position=length,
+        n_kv_heads=cfg.n_kv_heads,
+        sliding_window=cfg.sliding_window, impl=ctx["impl"])
     return out.reshape(B, 1, cfg.attn_dim), k_layer, v_layer
 
 
@@ -759,7 +834,6 @@ def apply_block_step(p, cfg: ModelConfig, kind: str, u1, layer_cache, ctx):
     style = cfg.block_style
     merged = _is_merged(style)
     impl = ctx.get("impl", "xla")
-    length = ctx["length"]
     new_cache = dict(layer_cache)
 
     if kind == "ssm":
@@ -771,30 +845,14 @@ def apply_block_step(p, cfg: ModelConfig, kind: str, u1, layer_cache, ctx):
         return out, new_cache
 
     def mixer_fn(x):
-        paged = ctx.get("paged", False)
         if kind == "cross":
             cat = _cross_attn_step(p["attn"], cfg, x, layer_cache["ck"],
                                    layer_cache["cv"], merged, impl)
             return cat if merged else _attn_out_proj(p["attn"], cat)
-        if merged and kind == "attn" and cfg.merged_variant == "qp":
-            # merged decode fast path: stream-as-query, no Q/P weight reads
-            step = _attn_step_paged_merged if paged else _attn_step_merged
-            extra = {"block_tables": ctx["block_tables"]} if paged else \
-                {"kv_pos": ctx["kv_pos"]}
-            cat, nk, nv = step(
-                p["attn"], cfg, x, layer_cache["k"], layer_cache["v"],
-                length=length, impl=impl,
-                qkv_sharding=ctx.get("qkv_sharding"), **extra)
-            new_cache.update(k=nk, v=nv)
-            return cat
-        if paged:
-            cat, nk, nv = _attn_step_paged(
-                p["attn"], cfg, x, layer_cache["k"], layer_cache["v"],
-                ctx["block_tables"], length, merged, impl)
-        else:
-            cat, nk, nv = _attn_step(p["attn"], cfg, x, layer_cache["k"],
-                                     layer_cache["v"], ctx["kv_pos"], length,
-                                     merged, impl)
+        # the registry seam: the per-layer attention route (cache layout ×
+        # projection style × impl) was resolved once by forward_step
+        cat, nk, nv = ctx["backend"].step(
+            p["attn"], cfg, x, layer_cache["k"], layer_cache["v"], ctx)
         new_cache.update(k=nk, v=nv)
         if kind == "hybrid":
             st = m2.SSMState(ssm=layer_cache["ssm"], conv=layer_cache["conv"])
@@ -827,18 +885,52 @@ def apply_block_step(p, cfg: ModelConfig, kind: str, u1, layer_cache, ctx):
     return out, new_cache
 
 
-def forward_decode(params, cfg: ModelConfig, token, cache: DecodeCache, *,
-                   impl: str = "xla", unroll: bool = False,
-                   qkv_sharding=None):
-    """token: (B,) int32 (or (B,d) frames). Returns (logits (B,V), new cache).
+def serving_style_key(cfg: ModelConfig) -> str:
+    """Projection-style axis of the backend registry key for this config.
 
-    Dispatches per ``cfg.block_style``: merged (Q/P-removed) styles with
-    the "qp" variant take the merged fast path (``_attn_step_merged``) —
-    the per-token attention reads only K*/V* weights and the merged
-    ``b_out`` bias is applied in-stream after the FFN.  ``qkv_sharding``
-    re-anchors TP head sharding for merged styles (no wq matmul).
+    "merged" iff the per-token step can skip every eliminated projection
+    (qp variant of the merged styles on attention/vlm stacks — the stream
+    IS the query and no P exists).  kp/vp merged variants return
+    "generic": their eliminated projection is an identity inside
+    ``_project_qkv``, so no dedicated route exists (or is needed — they
+    decode token-identically through the generic backend).  Hybrid stacks
+    are "generic" too: their merged form keeps P (the FFN input is the
+    fused attn+ssm stream), so the fast path's contract doesn't hold.
     """
-    B = token.shape[0]
+    plan = layer_plan(cfg)
+    if plan["kind"] not in ("attn", "vlm"):
+        return "generic"
+    if cfg.block_style in ("skipless_merged", "residual_qpfree") \
+            and cfg.merged_variant == "qp":
+        return "merged"
+    return "generic"
+
+
+def forward_step(params, cfg: ModelConfig, token, cache, *,
+                 impl: str = "xla", unroll: bool = False,
+                 qkv_sharding=None):
+    """One decode step against EITHER serving cache — the single serving
+    entry point (serve_step body).
+
+    token: (B,) int32 (or (B,d) frames). Returns (logits (B,V), new cache)
+    where ``cache`` (and the return) is a ``DecodeCache`` or a
+    ``PagedDecodeCache``; the cache type selects the cache_kind axis of
+    the backend registry key and the config selects the style axis
+    (``serving_style_key``), so merged (Q/P-removed) "qp" models take the
+    fast path — per-token attention reads only K*/V* weights and the
+    merged ``b_out`` bias is applied in-stream after the FFN — while
+    every other combination routes through the generic backend.
+    ``qkv_sharding`` re-anchors TP head sharding for merged styles (no wq
+    matmul).  Unknown (cache_kind, style, impl) combinations raise
+    KeyError from the registry before any compute.
+    """
+    paged = isinstance(cache, PagedDecodeCache)
+    plan = layer_plan(cfg)
+    if paged:
+        assert plan["kind"] == "attn", (
+            "paged decode supports attention-only stacks; got " + plan["kind"])
+    backend = backends.get_backend("paged" if paged else "dense",
+                                   serving_style_key(cfg), impl)
     # embed through the same front-end as the seq path: skipless styles
     # scale the embedding output, and merged trees fold Q_0 into the table
     # plus optional input_proj / embed_bias — skipping any of these makes
@@ -847,7 +939,26 @@ def forward_decode(params, cfg: ModelConfig, token, cache: DecodeCache, *,
         else token[:, None, :]
     h = embed_inputs(params, cfg, inputs)
 
-    plan = layer_plan(cfg)
+    if paged:
+        ctx = {"length": cache.length, "block_tables": cache.block_tables,
+               "impl": impl, "qkv_sharding": qkv_sharding,
+               "backend": backend}
+
+        def f(h, xs):
+            lp, lc = xs
+            out, nc = apply_block_step(lp, cfg, "attn", h, lc, ctx)
+            return out, nc
+
+        h, ncs = jax.lax.scan(f, h, (params["layers"],
+                                     {"k": cache.k, "v": cache.v}),
+                              unroll=True if unroll else 1)
+        if "final_norm" in params:
+            h = apply_rmsnorm(params["final_norm"], h)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = apply_unembedding(table, h)[:, 0, :]
+        return logits, cache._replace(k=ncs["k"], v=ncs["v"],
+                                      length=cache.length + 1)
+
     # mark the new token's slot as valid BEFORE attention so it attends to
     # itself (ring-buffer slot = length % Sc under sliding window)
     kv_pos = cache.kv_pos
@@ -856,7 +967,7 @@ def forward_decode(params, cfg: ModelConfig, token, cache: DecodeCache, *,
         slot = (cache.length % Sc).astype(jnp.int32)
         kv_pos = jax.vmap(lambda pr, s, l: pr.at[s].set(l))(kv_pos, slot, cache.length)
     ctx = {"length": cache.length, "kv_pos": kv_pos, "impl": impl,
-           "qkv_sharding": qkv_sharding}
+           "qkv_sharding": qkv_sharding, "backend": backend}
 
     def layer_cache_slices(kind):
         if kind == "ssm":
@@ -995,36 +1106,34 @@ def _rope_and_insert_paged(cfg: ModelConfig, q, k_new, v_new, k_pool, v_pool,
     return q, k_pool, v_pool
 
 
-def _attn_step_paged(lp, cfg: ModelConfig, u1, k_pool, v_pool, block_tables,
-                     length, merged: bool, impl: str):
-    """Generic decode step vs a paged pool.  u1 (B,1,d); k_pool/v_pool
-    (NB,bs,Hkv,Dh).  Returns (cat, new_k_pool, new_v_pool)."""
-    B = u1.shape[0]
+def _attn_step_paged(lp, cfg: ModelConfig, u1, k_pool, v_pool, ctx):
+    """Registered backend ("paged", "generic"): decode step vs a paged
+    pool.  u1 (B,1,d); k_pool/v_pool (NB,bs,Hkv,Dh).  Returns (cat,
+    new_k_pool, new_v_pool)."""
+    B, length = u1.shape[0], ctx["length"]
+    block_tables = ctx["block_tables"]
+    merged = _is_merged(cfg.block_style)
     q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, merged)
     q, k_pool, v_pool = _rope_and_insert_paged(cfg, q, k_new, v_new,
                                                k_pool, v_pool, block_tables,
                                                length)
     out = attn_mod.decode_attention_core_paged(
         q[:, 0], k_pool, v_pool, block_tables=block_tables,
-        q_position=length, sliding_window=cfg.sliding_window, impl=impl)
+        q_position=length, sliding_window=cfg.sliding_window,
+        impl=ctx["impl"])
     return out.reshape(B, 1, cfg.attn_dim), k_pool, v_pool
 
 
-def _attn_step_paged_merged(lp, cfg: ModelConfig, u1, k_pool, v_pool, *,
-                            block_tables, length, impl: str,
-                            qkv_sharding=None):
-    """Merged (Q/P-removed) decode fast path vs a paged pool: per token the
-    attention-side HBM traffic is K*/V* weights plus the slot's mapped
-    pages — no Q/P weight reads AND no dense worst-case-length cache."""
-    B = u1.shape[0]
+def _attn_step_paged_merged(lp, cfg: ModelConfig, u1, k_pool, v_pool, ctx):
+    """Registered backend ("paged", "merged"): the Q/P-removed fast path
+    vs a paged pool — per token the attention-side HBM traffic is K*/V*
+    weights plus the slot's mapped pages: no Q/P weight reads AND no dense
+    worst-case-length cache."""
+    B, length = u1.shape[0], ctx["length"]
+    block_tables = ctx["block_tables"]
     # variant "qp": _project_qkv returns the stream itself as q (identity)
     q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, True)
-    if qkv_sharding is not None:
-        # merged styles lose the TP sharding anchor for q (no wq matmul to
-        # propagate head-sharding from) — same fix as _self_attention_seq
-        q = jax.lax.with_sharding_constraint(q, qkv_sharding)
-        k_new = jax.lax.with_sharding_constraint(k_new, qkv_sharding)
-        v_new = jax.lax.with_sharding_constraint(v_new, qkv_sharding)
+    q, k_new, v_new = _qkv_reanchor(ctx, q, k_new, v_new)
     q, k_pool, v_pool = _rope_and_insert_paged(cfg, q, k_new, v_new,
                                                k_pool, v_pool, block_tables,
                                                length)
@@ -1032,44 +1141,44 @@ def _attn_step_paged_merged(lp, cfg: ModelConfig, u1, k_pool, v_pool, *,
         q.reshape(B, cfg.attn_dim), k_pool, v_pool,
         block_tables=block_tables, q_position=length,
         n_kv_heads=cfg.n_kv_heads, sliding_window=cfg.sliding_window,
-        impl=impl)
+        impl=ctx["impl"])
     return out.reshape(B, 1, cfg.attn_dim), k_pool, v_pool
+
+
+# the four serving attention routes, one per (cache layout × projection
+# style); each registration covers xla/pallas/pallas_interpret (the steps
+# read ``impl`` from ctx and the cores dispatch on it)
+backends.register_backend("dense", "generic", _attn_step_dense)
+backends.register_backend("dense", "merged", _attn_step_dense_merged,
+                          fast_path=True)
+backends.register_backend("paged", "generic", _attn_step_paged)
+backends.register_backend("paged", "merged", _attn_step_paged_merged,
+                          fast_path=True)
+
+
+# ---------------------------------------------------------------------------
+# deprecated per-cache-kind entry points (thin shims over forward_step)
+# ---------------------------------------------------------------------------
+
+def forward_decode(params, cfg: ModelConfig, token, cache: DecodeCache, *,
+                   impl: str = "xla", unroll: bool = False,
+                   qkv_sharding=None):
+    """DEPRECATED: use ``forward_step`` (it dispatches on the cache type)."""
+    warnings.warn(
+        "forward_decode is deprecated; use forward_step, which serves "
+        "every (cache_kind, style, impl) combo through the backend "
+        "registry", DeprecationWarning, stacklevel=2)
+    return forward_step(params, cfg, token, cache, impl=impl, unroll=unroll,
+                        qkv_sharding=qkv_sharding)
 
 
 def forward_decode_paged(params, cfg: ModelConfig, token,
                          cache: PagedDecodeCache, *, impl: str = "xla",
                          unroll: bool = False, qkv_sharding=None):
-    """One decode step against the paged cache.  token (B,) int32; returns
-    (logits (B,V), new cache).
-
-    Mirrors ``forward_decode`` (same embed front-end, same merged-variant
-    dispatch — "qp" configs stream only K*/V* weights per token) with the
-    per-layer cache slice being a page pool + shared block tables instead
-    of a dense per-slot buffer.  Attention-only stacks (no ssm/vlm state
-    is paged).
-    """
-    plan = layer_plan(cfg)
-    assert plan["kind"] == "attn", (
-        "paged decode supports attention-only stacks; got " + plan["kind"])
-    inputs = token[:, None] if token.dtype in (jnp.int32, jnp.int64) \
-        else token[:, None, :]
-    h = embed_inputs(params, cfg, inputs)
-
-    ctx = {"length": cache.length, "block_tables": cache.block_tables,
-           "paged": True, "impl": impl, "qkv_sharding": qkv_sharding}
-
-    def f(h, xs):
-        lp, lc = xs
-        out, nc = apply_block_step(lp, cfg, "attn", h, lc, ctx)
-        return out, nc
-
-    h, ncs = jax.lax.scan(f, h, (params["layers"],
-                                 {"k": cache.k, "v": cache.v}),
-                          unroll=True if unroll else 1)
-
-    if "final_norm" in params:
-        h = apply_rmsnorm(params["final_norm"], h)
-    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = apply_unembedding(table, h)[:, 0, :]
-    return logits, cache._replace(k=ncs["k"], v=ncs["v"],
-                                  length=cache.length + 1)
+    """DEPRECATED: use ``forward_step`` (it dispatches on the cache type)."""
+    warnings.warn(
+        "forward_decode_paged is deprecated; use forward_step, which "
+        "serves every (cache_kind, style, impl) combo through the backend "
+        "registry", DeprecationWarning, stacklevel=2)
+    return forward_step(params, cfg, token, cache, impl=impl, unroll=unroll,
+                        qkv_sharding=qkv_sharding)

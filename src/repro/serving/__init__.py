@@ -1,13 +1,60 @@
-"""Serving layer: continuous-batching engine over two cache backends.
+"""Serving layer: one engine, two seams — cache adapters × attention backends.
 
-``kv_cache``       — dense slot cache ops (worst-case length per slot).
-``paged_kv_cache`` — block-pool cache: free-list page allocator, per-slot
-                     block tables, prefix sharing with copy-on-write.
-``engine``         — prefill/decode driver; ``ServeConfig.cache_kind``
-                     selects the backend ("dense" | "paged").
+The engine (``engine.Engine``) never special-cases a cache layout or a
+projection style.  It drives:
+
+  * ``adapters.KVCacheAdapter`` — the CACHE seam.  An adapter owns its
+    layout end to end: device state (``device_cache``/``update``), shapes
+    (``spec``) and mesh partition specs (``pspecs``), admission control
+    (``admit``), the prefill-insert path (``prefill``) and slot lifecycle
+    (``ensure_appendable``/``advance``/``release``).  Shipped adapters:
+
+      ``DenseCacheAdapter``  worst-case-length slot cache over the batched
+                             ``DecodeCache`` (``kv_cache`` ops); every
+                             family (attn/ssm/hybrid/vlm).
+      ``PagedCacheAdapter``  block-pool cache (``paged_kv_cache``):
+                             free-list pages, per-slot block tables,
+                             prefix sharing with copy-on-write, deferral +
+                             preemption-with-exact-resume; attention-only.
+                             Prefill writes prompt KV DIRECT-TO-PAGE from
+                             inside the prefill program — no worst-case-
+                             length intermediate, no scatter pass.
+
+  * ``models.backends`` — the ATTENTION seam.  A registry keyed on
+    (cache_kind, style, impl) supplying the per-layer decode step that the
+    single jitted ``models.forward_step`` runs.  Fast paths today:
+
+      (dense|paged, merged, *)   Q/P-removed "qp" models: per-token
+                                 attention reads only K*/V* weights
+                                 (``Engine.merged_fast_path`` is True).
+      (dense|paged, generic, *)  everything else, including the kp/vp
+                                 merged variants (their eliminated
+                                 projection is an identity inside the
+                                 projection helper) — token-identical to
+                                 the unmerged model, no fast-path route.
+
+    impl ∈ {xla, pallas, pallas_interpret}; the pallas kernels behind each
+    combo are listed in ``kernels.ops.DECODE_KERNELS``.
+
+Extending: a new cache layout = subclass ``KVCacheAdapter`` + register its
+attention steps with ``models.backends.register_backend(cache_kind, style,
+step)`` (steps get ``(lp, cfg, u1, k_store, v_store, ctx)``); then serve it
+with ``Engine(cfg, params, sc, cache=MyAdapter(...))``.  Unregistered
+combos raise KeyError at Engine construction.
+
+Selecting a shipped backend: ``Engine(..., cache="dense"|"paged")`` or an
+adapter instance (``PagedCacheAdapter(block_size=16, n_blocks=256)``).
+``ServeConfig.cache_kind`` and ``models.forward_decode[_paged]`` remain as
+deprecated shims over this API.
 """
-from repro.serving.engine import Engine, Request, ServeConfig
+from repro.serving.engine import Engine, Request, RequestResult, ServeConfig
+from repro.serving.adapters import (DenseCacheAdapter, KVCacheAdapter,
+                                    PagedCacheAdapter, make_adapter)
 from repro.serving import kv_cache
 from repro.serving import paged_kv_cache
 
-__all__ = ["Engine", "Request", "ServeConfig", "kv_cache", "paged_kv_cache"]
+__all__ = [
+    "Engine", "Request", "RequestResult", "ServeConfig",
+    "KVCacheAdapter", "DenseCacheAdapter", "PagedCacheAdapter",
+    "make_adapter", "kv_cache", "paged_kv_cache",
+]

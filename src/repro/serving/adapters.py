@@ -1,0 +1,259 @@
+"""KVCacheAdapter: the cache side of the serving API seam.
+
+The engine speaks to its cache through ONE interface, so cache layouts
+stop leaking into the scheduling code: ``DenseCacheAdapter`` owns the
+per-slot ring-buffer ``DecodeCache`` and ``PagedCacheAdapter`` owns the
+block-pool ``PagedDecodeCache`` (wrapping ``paged_kv_cache``'s host-side
+manager).  Each adapter owns its cache's
+
+  * ``spec()`` / ``pspecs(rules)``  — shapes for jit input specs and the
+    mesh partition specs (the shape logic the engine used to re-derive),
+  * ``init()`` / ``device_cache()`` / ``update(new)`` — the device state
+    the jitted ``forward_step`` consumes and returns (donated),
+  * request lifecycle — ``admit`` (admission control; dense always
+    admits, paged defers when the pool is exhausted), ``prefill`` (runs
+    the adapter's own jitted prefill program: dense inserts a batch-1
+    ``DecodeCache`` into the slot; paged writes prompt KV DIRECT-TO-PAGE
+    via ``forward_prefill(pages=…)`` — no worst-case-length intermediate
+    and no scatter pass), ``ensure_appendable`` / ``advance`` /
+    ``release``.
+
+Selecting a backend is then data, not code: ``Engine(cfg, params, sc,
+cache=PagedCacheAdapter(block_size=16))`` or ``cache="paged"`` — and a new
+cache layout is a new adapter plus its registered attention backends
+(``models.backends``), with zero engine changes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distribution import sharding as shd
+from repro.models import forward_prefill, init_cache
+from repro.serving import kv_cache as kvc
+from repro.serving import paged_kv_cache as pkv
+
+
+class KVCacheAdapter:
+    """Interface the engine drives; see module docstring.  Subclasses set
+    ``kind`` to the cache_kind axis of the backend-registry key."""
+
+    kind: str = "?"
+
+    # -- lifecycle ------------------------------------------------------
+    def init(self, cfg: ModelConfig, sc) -> None:
+        """Allocate the device cache for (cfg, ServeConfig)."""
+        raise NotImplementedError
+
+    def build_prefill(self, impl: str, mesh=None, params_sharding=None,
+                      cache_shardings=None) -> None:
+        """Compile-wrap this cache kind's prefill program."""
+        raise NotImplementedError
+
+    # -- device state ---------------------------------------------------
+    def spec(self):
+        """ShapeDtypeStruct tree of ``device_cache()`` (jit input specs)."""
+        return jax.eval_shape(self.device_cache)
+
+    def pspecs(self, rules):
+        """PartitionSpec tree matching ``spec()`` (mesh serving)."""
+        return shd.serving_cache_pspecs(self.cfg, rules, self.spec())
+
+    def device_cache(self):
+        raise NotImplementedError
+
+    def update(self, new) -> None:
+        """Absorb the (donated) cache returned by the jitted step."""
+        raise NotImplementedError
+
+    @property
+    def cache_bytes(self) -> int:
+        raise NotImplementedError
+
+    # -- request lifecycle ---------------------------------------------
+    def admit(self, slot: int, tokens: np.ndarray) -> Optional[int]:
+        """Admission control.  Returns the number of prefix-shared pages
+        (0 where the concept doesn't apply), or None to DEFER the request
+        (resource-exhausted; the engine retries after others finish)."""
+        raise NotImplementedError
+
+    def prefill(self, params, slot: int, padded_row, true_n: int,
+                n_shared: int, vision):
+        """Prefill ``padded_row`` (1, S) and install its KV for ``slot``;
+        returns the last real position's logits (1, V)."""
+        raise NotImplementedError
+
+    def ensure_appendable(self, slot: int) -> bool:
+        """Make the next token's write target safely writable; False means
+        resource-exhausted (the engine preempts)."""
+        return True
+
+    def advance(self, slot: int) -> None:
+        """Host-side length bookkeeping after a decoded token (the device
+        cache advances inside the jitted step)."""
+
+    def release(self, slot: int) -> None:
+        """Return a finished/preempted request's cache resources."""
+        raise NotImplementedError
+
+    # -- introspection --------------------------------------------------
+    def compiled_prefill(self, params, bucket_len: int):
+        """Lower + compile the prefill program for one prompt bucket (no
+        execution) — benchmarks read its cost_analysis (prefill HBM
+        traffic, e.g. dense-vs-paged TTFT bytes)."""
+        raise NotImplementedError
+
+
+class DenseCacheAdapter(KVCacheAdapter):
+    """Worst-case-length slot cache: every slot owns a ``max_len`` stretch
+    of one batched ``DecodeCache``; insert/evict are O(1) dynamic slices
+    (``serving.kv_cache``).  Supports every family (attn/ssm/hybrid/vlm)."""
+
+    kind = "dense"
+
+    def init(self, cfg, sc):
+        self.cfg, self.sc = cfg, sc
+        self._cache = init_cache(cfg, sc.n_slots, sc.max_len)
+
+    def build_prefill(self, impl, mesh=None, params_sharding=None,
+                      cache_shardings=None):
+        cfg, max_len = self.cfg, self.sc.max_len
+        fn = lambda p, tk, vs, tl: forward_prefill(
+            p, cfg, tk, cache_len=max_len, vision=vs, impl=impl, true_len=tl)
+        if mesh is not None:
+            self._prefill = jax.jit(
+                fn, in_shardings=(params_sharding, None, None, None))
+        else:
+            self._prefill = jax.jit(fn)
+
+    def device_cache(self):
+        return self._cache
+
+    def update(self, new):
+        self._cache = new
+
+    @property
+    def cache_bytes(self):
+        k = self._cache.k
+        return int(k.size + self._cache.v.size) * k.dtype.itemsize
+
+    def admit(self, slot, tokens):
+        return 0
+
+    def prefill(self, params, slot, padded_row, true_n, n_shared, vision):
+        tl = jnp.full((1,), true_n, jnp.int32)
+        logits, one = self._prefill(params, padded_row, vision, tl)
+        self._cache = kvc.insert_request(self._cache, one, jnp.int32(slot))
+        return logits
+
+    def release(self, slot):
+        self._cache = kvc.clear_slot(self._cache, jnp.int32(slot))
+
+    def compiled_prefill(self, params, bucket_len):
+        pshape = jax.eval_shape(lambda: params)
+        tk = jax.ShapeDtypeStruct((1, bucket_len), jnp.int32)
+        tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+        return self._prefill.lower(pshape, tk, None, tl).compile()
+
+
+class PagedCacheAdapter(KVCacheAdapter):
+    """Block-pool cache: slots map variable numbers of fixed-size physical
+    pages (free-list allocation, prefix sharing, copy-on-write, admission
+    control — ``serving.paged_kv_cache``).  Attention-only stacks.
+
+    ``block_size``/``n_blocks`` default to the ServeConfig's values at
+    ``init`` (n_blocks 0 ⇒ dense-equivalent HBM: n_slots·max_len/bs pages).
+    Prefill writes prompt KV directly into the mapped pages from inside
+    the prefill program (``forward_prefill(pages=…)``): the jit is donated
+    on the pools, so submit-time cache traffic is ONLY the prompt's own
+    pages — no max_len-sized intermediate buffer, no second scatter pass.
+    """
+
+    kind = "paged"
+
+    def __init__(self, block_size: Optional[int] = None,
+                 n_blocks: Optional[int] = None):
+        self._block_size, self._n_blocks = block_size, n_blocks
+
+    def init(self, cfg, sc):
+        self.cfg, self.sc = cfg, sc
+        bs = self._block_size or sc.block_size
+        n_blocks = self._n_blocks or sc.n_blocks \
+            or sc.n_slots * (sc.max_len // bs)
+        self.pm = pkv.PagedCacheManager(
+            cfg, n_slots=sc.n_slots, max_len=sc.max_len,
+            block_size=bs, n_blocks=n_blocks)
+
+    def build_prefill(self, impl, mesh=None, params_sharding=None,
+                      cache_shardings=None):
+        cfg = self.cfg
+        fn = lambda p, tk, tl, kp, vp, bids: forward_prefill(
+            p, cfg, tk, impl=impl, true_len=tl, pages=(kp, vp, bids))
+        if mesh is not None:
+            pool_k, pool_v = cache_shardings.k, cache_shardings.v
+            self._prefill = jax.jit(
+                fn, donate_argnums=(3, 4),
+                in_shardings=(params_sharding, None, None, pool_k, pool_v,
+                              None),
+                out_shardings=(None, (pool_k, pool_v)))
+        else:
+            self._prefill = jax.jit(fn, donate_argnums=(3, 4))
+
+    def device_cache(self):
+        return self.pm.device_cache()
+
+    def update(self, new):
+        self.pm.update_pools(new)
+
+    @property
+    def cache_bytes(self):
+        return self.pm.pool_bytes
+
+    def admit(self, slot, tokens):
+        return self.pm.admit(slot, tokens)
+
+    def prefill(self, params, slot, padded_row, true_n, n_shared, vision):
+        assert vision is None, "paged serving is attention-only (no vlm)"
+        bids = self.pm.prefill_block_ids(slot, padded_row.shape[1], n_shared)
+        tl = jnp.full((1,), true_n, jnp.int32)
+        logits, (k, v) = self._prefill(params, padded_row, tl,
+                                       self.pm.k, self.pm.v,
+                                       jnp.asarray(bids))
+        self.pm.k, self.pm.v = k, v
+        return logits
+
+    def ensure_appendable(self, slot):
+        return self.pm.ensure_appendable(slot)
+
+    def advance(self, slot):
+        self.pm.advance(slot)
+
+    def release(self, slot):
+        self.pm.release(slot)
+
+    def compiled_prefill(self, params, bucket_len):
+        pshape = jax.eval_shape(lambda: params)
+        tk = jax.ShapeDtypeStruct((1, bucket_len), jnp.int32)
+        tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+        kp = jax.eval_shape(lambda: self.pm.k)
+        vp = jax.eval_shape(lambda: self.pm.v)
+        nbk = -(-bucket_len // self.pm.bs)
+        bids = jax.ShapeDtypeStruct((nbk,), jnp.int32)
+        return self._prefill.lower(pshape, tk, tl, kp, vp, bids).compile()
+
+
+def make_adapter(kind: str, sc) -> KVCacheAdapter:
+    """Adapter for a cache_kind name (the string form of the new API, and
+    the target of the deprecated ``ServeConfig.cache_kind``)."""
+    if kind == "dense":
+        return DenseCacheAdapter()
+    if kind == "paged":
+        return PagedCacheAdapter(block_size=sc.block_size,
+                                 n_blocks=sc.n_blocks)
+    raise ValueError(
+        f"unknown cache kind {kind!r}; expected 'dense', 'paged', or a "
+        "KVCacheAdapter instance")

@@ -1,56 +1,57 @@
 """Serving engine: prefill + batched decode with continuous batching.
 
-Design (vLLM-style, TPU/JAX-native):
-  * a fixed number of serving SLOTS share one batched cache; the decode
-    step advances every active slot in a single jitted call (``serve_step``
-    — the function the decode_* dry-run cells lower);
-  * TWO cache kinds (``ServeConfig.cache_kind``):
-      - "dense": every slot owns a worst-case (max_len) stretch of one
-        batched DecodeCache.  New requests prefill batch-1 and insert with
-        dynamic_update_slice (``kv_cache.insert_request``); finished slots
-        are invalidated in place (``kv_cache.clear_slot``, jitted+donated)
-        and reused — no reallocation, no recompilation.
-      - "paged": slots map variable numbers of fixed-size physical pages
-        out of a shared block pool (``paged_kv_cache``), with free-list
-        allocation, prefix sharing (identical prompt prefixes reference
-        the same pages, copy-on-write on append) and ADMISSION CONTROL:
-        ``submit`` defers a request while the pool is exhausted instead of
-        capping concurrency at a worst-case slot count, and ``step``
-        preempts the youngest request (resubmitted later, stream intact)
-        if appends outrun the pool.  At equal HBM the pool sustains
-        strictly more concurrent streams on mixed-length traffic — which
-        is what amortizes the merged fast path's K*/V*-only weight reads.
-  * prompt lengths are BUCKETED (padded to the next power of two, exact
-    logits/cache via ``forward_prefill(true_len=…)``) so a realistic
-    traffic mix compiles O(log max_len) prefill programs, not one per
-    distinct prompt length;
-  * sampling: greedy / temperature / top-k with PER-SLOT PRNG streams —
-    each request's key is derived from (engine seed, submission index) and
-    advances only with that request's samples, so sampled continuations
-    are reproducible regardless of co-scheduled traffic.
+Design (vLLM-style, TPU/JAX-native): the engine schedules requests over a
+fixed number of serving SLOTS and drives exactly TWO seams —
 
-The engine is mesh-aware: given a mesh it shards params/caches with the
-distribution-layer rules and jits with explicit shardings.
+  * a ``KVCacheAdapter`` (``serving.adapters``) owning the cache: its
+    device state, shapes/partition specs, admission control and the
+    prefill-insert path.  Two adapters ship: "dense" (every slot owns a
+    worst-case ``max_len`` stretch of one batched ``DecodeCache``) and
+    "paged" (slots map fixed-size pages from a shared block pool with
+    free-list allocation, prefix sharing + copy-on-write, deferral and
+    youngest-preemption-with-exact-resume — at equal HBM the pool
+    sustains strictly more concurrent streams on mixed-length traffic,
+    which is what amortizes the merged fast path's K*/V*-only weight
+    reads).  Paged prefill writes prompt KV DIRECT-TO-PAGE from inside
+    the prefill program (``forward_prefill(pages=…)``, pools donated):
+    no worst-case-length intermediate cache, no post-prefill scatter.
+  * an ``AttentionBackend`` registry (``models.backends``) keyed on
+    (cache_kind, style, impl): the jitted ``serve_step`` is ONE function,
+    ``models.forward_step``, which looks up its per-layer attention route
+    there.  Merged (Q/P-removed) "qp" models take the fast path — per-
+    token attention reads only the K*/V* weights, the stream is the
+    query, the output lands in the FFN-input basis; kp/vp merged variants
+    route through the generic backend (their eliminated projection is an
+    identity inside ``_project_qkv``) token-identically to their unmerged
+    source model.  Unknown combos fail at Engine construction with the
+    registry's KeyError, not mid-serve.
 
-Merged (Q/P-removed) models are first-class: for ``skipless_merged`` /
-``residual_qpfree`` configs with the "qp" variant, ``serve_step`` routes
-through the merged decode fast path (``models.transformer._attn_step_merged``
-or ``_attn_step_paged_merged`` -> ``kernels.decode_attention_merged`` /
-``decode_attention_paged_merged``) — per-token attention reads only the
-K*/V* weights, the stream is the query, and the output lands in the
-FFN-input basis.  The kp/vp merged variants (MHA-only, paper Fig 1c/d)
-serve through the generic path: ``_project_qkv`` treats the eliminated
-projection as identity, so they decode token-identically to their
-unmerged source model without fast-path plumbing.  Under a mesh the
-engine re-anchors TP head sharding on q/k/v explicitly (merged layouts
-have no wq matmul to propagate it from).
+Scheduling facts (unchanged by the redesign): prompt lengths are BUCKETED
+(padded to the next power of two, exact logits/cache via ``true_len``) so
+a realistic traffic mix compiles O(log max_len) prefill programs; sampling
+is greedy / temperature / top-k with PER-SLOT PRNG streams (each request's
+key derives from (engine seed, submission index) and advances only with
+its own samples, so sampled continuations are traffic-independent and
+preemption-exact).  Under a mesh the engine shards params/caches with the
+distribution-layer rules (the adapter supplies its cache's specs) and
+re-anchors TP head sharding on q/k/v for merged layouts (no wq matmul to
+propagate it from).
+
+``generate`` returns per-request :class:`RequestResult`s — a list of
+token ids that also carries (prompt_len, new_tokens, ttft_s,
+decode_tok_s), so time-to-first-token wins (e.g. paged direct-to-page
+prefill) are readable without the benchmark harness.
+
+Backward compatibility: ``ServeConfig(cache_kind=…)`` still works as a
+deprecated alias for ``Engine(…, cache=…)``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from functools import partial
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -59,11 +60,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.distribution import sharding as shd
-from repro.models import (forward_decode, forward_decode_paged,
-                          forward_prefill, init_cache, layer_plan)
-from repro.models.transformer import DecodeCache, PagedDecodeCache
-from repro.serving import kv_cache as kvc
-from repro.serving import paged_kv_cache as pkv
+from repro.models import backends, forward_step, serving_style_key
+from repro.serving.adapters import KVCacheAdapter, make_adapter
 
 
 @dataclasses.dataclass
@@ -74,7 +72,7 @@ class ServeConfig:
     top_k: int = 0
     eos_token: int = -1  # -1 => run to max_new_tokens
     seed: int = 0
-    cache_kind: str = "dense"  # "dense" | "paged"
+    cache_kind: Optional[str] = None  # DEPRECATED: use Engine(cache=…)
     block_size: int = 16  # paged: tokens per physical page
     n_blocks: int = 0  # paged pool size; 0 => dense-equivalent HBM
     bucket_prompts: bool = True  # pad prompts to power-of-two buckets
@@ -89,18 +87,75 @@ class Request:
     remaining: int = 0
     rid: int = -1  # submission index (per-request PRNG stream id)
     key_state: Optional[np.ndarray] = None  # advanced PRNG key (preemption)
+    # serving telemetry (host wall-clock, seconds)
+    t_arrival: Optional[float] = None  # entered the engine's queue
+    t_first: Optional[float] = None  # first token emitted (prefill sample)
+    t_last: Optional[float] = None  # most recent token emitted
+
+
+class RequestResult(list):
+    """A finished request's generated token ids — it IS the token list
+    (equality/len/slicing behave like before) — plus per-request stats:
+
+      prompt_len    tokens in the submitted prompt
+      new_tokens    tokens generated (== len(self))
+      ttft_s        arrival -> first token, queueing + prefill included
+      decode_tok_s  steady-state decode rate after the first token
+                    (0.0 for single-token requests)
+    """
+
+    def __init__(self, tokens, *, prompt_len: int, ttft_s: float,
+                 decode_tok_s: float):
+        super().__init__(tokens)
+        self.prompt_len = prompt_len
+        self.new_tokens = len(tokens)
+        self.ttft_s = ttft_s
+        self.decode_tok_s = decode_tok_s
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {"prompt_len": self.prompt_len, "new_tokens": self.new_tokens,
+                "ttft_s": self.ttft_s, "decode_tok_s": self.decode_tok_s}
+
+
+def _result_of(req: Request) -> RequestResult:
+    ttft = (req.t_first - req.t_arrival
+            if req.t_first is not None and req.t_arrival is not None else 0.0)
+    n = len(req.out_tokens)
+    tok_s = 0.0
+    if n > 1 and req.t_last is not None and req.t_first is not None \
+            and req.t_last > req.t_first:
+        tok_s = (n - 1) / (req.t_last - req.t_first)
+    return RequestResult(req.out_tokens, prompt_len=len(req.prompt),
+                         ttft_s=ttft, decode_tok_s=tok_s)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, mesh=None,
-                 impl: str = "xla"):
+                 impl: str = "xla",
+                 cache: Union[None, str, KVCacheAdapter] = None):
         assert cfg.causal, "serving requires a decoder"
-        assert sc.cache_kind in ("dense", "paged"), sc.cache_kind
         cfg.validate_style()  # merged styles need a square Q basis
         self.cfg, self.sc, self.mesh = cfg, sc, mesh
         self.params = params
         self.impl = impl
-        self.paged = sc.cache_kind == "paged"
+
+        if sc.cache_kind is not None:
+            warnings.warn(
+                "ServeConfig.cache_kind is deprecated; pass "
+                "Engine(..., cache='dense'|'paged') or a KVCacheAdapter "
+                "instance", DeprecationWarning, stacklevel=2)
+            if cache is None:
+                cache = sc.cache_kind
+        if cache is None:
+            cache = "dense"
+        self.kv: KVCacheAdapter = (make_adapter(cache, sc)
+                                   if isinstance(cache, str) else cache)
+        # resolve the serve_step's backend NOW: an unknown (cache_kind,
+        # style, impl) combo must fail at construction, not mid-serve
+        self.backend = backends.get_backend(self.kv.kind,
+                                            serving_style_key(cfg), impl)
+
         self.free_slots = list(range(sc.n_slots))
         self.active: Dict[int, Request] = {}
         self.preempted: List[Request] = []
@@ -117,19 +172,8 @@ class Engine:
                            and not cfg.ssm_state
                            and (self.paged or not cfg.sliding_window))
 
-        if self.paged:
-            n_blocks = sc.n_blocks or sc.n_slots * (sc.max_len // sc.block_size)
-            self.pm = pkv.PagedCacheManager(
-                cfg, n_slots=sc.n_slots, max_len=sc.max_len,
-                block_size=sc.block_size, n_blocks=n_blocks)
-            self.cache = None  # device view lives in self.pm
-        else:
-            self.cache = init_cache(cfg, sc.n_slots, sc.max_len)
-
-        if mesh is not None:
-            self._build_steps_mesh(mesh)
-        else:
-            self._build_steps()
+        self.kv.init(cfg, sc)
+        self._build_steps()
 
         self._last_token = np.zeros((sc.n_slots,), np.int32)
         if sc.temperature > 0:
@@ -139,71 +183,63 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _build_steps(self):
-        sc, impl = self.sc, self.impl
-        if self.paged:
-            self._decode = jax.jit(
-                lambda p, t, c: forward_decode_paged(p, self.cfg, t, c,
-                                                     impl=impl),
-                donate_argnums=(2,))
-        else:
-            self._decode = jax.jit(
-                lambda p, t, c: forward_decode(p, self.cfg, t, c, impl=impl),
-                donate_argnums=(2,))
-        self._prefill = jax.jit(
-            lambda p, tk, vs, tl: forward_prefill(
-                p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl,
-                true_len=tl, full_cache=self.paged))
+        """Wire the jitted serve_step + the adapter's prefill: both are
+        registry/adapter lookups — no per-cache-kind engine code."""
+        impl, mesh = self.impl, self.mesh
+        psh = csh = qkv_sh = None
+        if mesh is not None:
+            rules = shd.make_rules(mesh, batch=self.sc.n_slots)
+            pshape = jax.eval_shape(lambda: self.params)
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               shd.evenly(shd.param_pspecs(pshape, rules),
+                                          pshape, mesh))
+            self.params = jax.device_put(self.params, psh)
+            if self.merged_fast_path:
+                # K*/V*-only layout: re-anchor TP head sharding explicitly
+                qkv_sh = NamedSharding(
+                    mesh, P(rules.dp, None, rules.axis("heads"), None))
+            cshape = self.kv.spec()
+            csh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               shd.evenly(self.kv.pspecs(rules), cshape,
+                                          mesh))
 
-    def _build_steps_mesh(self, mesh):
-        sc, impl = self.sc, self.impl
-        rules = shd.make_rules(mesh, batch=sc.n_slots)
-        pshape = jax.eval_shape(lambda: self.params)
-        psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                           shd.evenly(shd.param_pspecs(pshape, rules),
-                                      pshape, mesh))
-        self.params = jax.device_put(self.params, psh)
-        qkv_sh = None
-        if self.merged_fast_path:
-            # K*/V*-only layout: re-anchor TP head sharding explicitly
-            qkv_sh = NamedSharding(
-                mesh, P(rules.dp, None, rules.axis("heads"), None))
-        if self.paged:
-            cshape = jax.eval_shape(self.pm.device_cache)
-            csh = jax.tree.map(
-                lambda s: NamedSharding(mesh, s),
-                shd.evenly(shd.paged_cache_pspecs(self.cfg, rules),
-                           cshape, mesh))
-            fwd = lambda p, t, c: forward_decode_paged(
-                p, self.cfg, t, c, impl=impl, qkv_sharding=qkv_sh)
+        fwd = lambda p, t, c: forward_step(p, self.cfg, t, c, impl=impl,
+                                           qkv_sharding=qkv_sh)
+        if mesh is not None:
+            self._decode = jax.jit(
+                fwd, donate_argnums=(2,),
+                in_shardings=(psh, NamedSharding(mesh, P()), csh),
+                out_shardings=(None, csh))
         else:
-            cshape = jax.eval_shape(lambda: self.cache)
-            csh = jax.tree.map(
-                lambda s: NamedSharding(mesh, s),
-                shd.evenly(_trim_cache_spec(shd.cache_pspecs(self.cfg, rules),
-                                            self.cache), cshape, mesh))
-            fwd = lambda p, t, c: forward_decode(
-                p, self.cfg, t, c, impl=impl, qkv_sharding=qkv_sh)
-        self._decode = jax.jit(
-            fwd, donate_argnums=(2,),
-            in_shardings=(psh, NamedSharding(mesh, P()), csh),
-            out_shardings=(None, csh))
-        self._prefill = jax.jit(
-            lambda p, tk, vs, tl: forward_prefill(
-                p, self.cfg, tk, cache_len=sc.max_len, vision=vs, impl=impl,
-                true_len=tl, full_cache=self.paged),
-            in_shardings=(psh, None, None, None))
+            self._decode = jax.jit(fwd, donate_argnums=(2,))
+        self.kv.build_prefill(impl, mesh=mesh, params_sharding=psh,
+                              cache_shardings=csh)
+        # introspection alias (tests count compiled prefill buckets here)
+        self._prefill = self.kv._prefill
 
     # ------------------------------------------------------------------
+    @property
+    def paged(self) -> bool:
+        return self.kv.kind == "paged"
+
+    @property
+    def cache(self):
+        """Dense adapters' batched DecodeCache (None for other kinds) —
+        kept for callers that inspect the cache directly."""
+        return self.kv.device_cache() if self.kv.kind == "dense" else None
+
+    @property
+    def pm(self):
+        """Paged adapters' host-side PagedCacheManager (telemetry)."""
+        return self.kv.pm
+
     @property
     def merged_fast_path(self) -> bool:
         """True when serve_step routes through the merged (Q/P-removed)
         decode fast path: no Q or P weights exist, so per-token attention
         streams only K*/V* from HBM.  kp/vp merged variants return False —
-        they serve through the generic path (still token-exact)."""
-        return (self.cfg.has_attention
-                and self.cfg.block_style in ("skipless_merged",
-                                             "residual_qpfree")
-                and self.cfg.merged_variant == "qp")
+        they serve through the generic backend (still token-exact)."""
+        return self.backend.fast_path
 
     def compiled_decode(self):
         """Lower + compile serve_step for inspection (no execution).
@@ -214,11 +250,13 @@ class Engine:
         traffic."""
         pshape = jax.eval_shape(lambda: self.params)
         tshape = jax.ShapeDtypeStruct((self.sc.n_slots,), jnp.int32)
-        if self.paged:
-            cshape = jax.eval_shape(self.pm.device_cache)
-        else:
-            cshape = jax.eval_shape(lambda: self.cache)
-        return self._decode.lower(pshape, tshape, cshape).compile()
+        return self._decode.lower(pshape, tshape, self.kv.spec()).compile()
+
+    def compiled_prefill(self, bucket_len: int):
+        """Lower + compile this engine's prefill program for one prompt
+        bucket (no execution) — e.g. to read the prefill HBM bytes that
+        direct-to-page paged prefill saves over dense."""
+        return self.kv.compiled_prefill(self.params, bucket_len)
 
     # ------------------------------------------------------------------
     def _bucket_pad(self, toks: np.ndarray) -> Tuple[np.ndarray, int]:
@@ -238,13 +276,16 @@ class Engine:
 
     def submit(self, req: Request, vision: Optional[np.ndarray] = None) -> bool:
         """Prefill a request into a free slot.  Returns False when no slot
-        is free or (paged) the block pool can't admit the prompt — the
-        caller retries after other requests finish (admission control).
+        is free or the adapter can't admit the prompt (paged: pool
+        exhausted) — the caller retries after other requests finish
+        (admission control).
 
         A request with ``out_tokens`` already populated is a RESUME
         (preempted earlier): its generated tokens re-prefill with the
         prompt and decoding continues where it left off.
         """
+        if req.t_arrival is None:
+            req.t_arrival = time.perf_counter()
         if not self.free_slots:
             return False
         # fail FAST on a request that cannot finish: decode would run past
@@ -263,26 +304,17 @@ class Engine:
             toks = np.concatenate(
                 [toks, np.asarray(req.out_tokens[:-1], np.int32)])
         slot = self.free_slots[0]
-        n_shared = 0
-        if self.paged:
-            admitted = self.pm.admit(slot, toks)
-            if admitted is None:
-                self.stats["n_deferred"] += 1
-                return False
-            n_shared = admitted
+        n_shared = self.kv.admit(slot, toks)
+        if n_shared is None:
+            self.stats["n_deferred"] += 1
+            return False
         self.free_slots.pop(0)
 
         padded, n = self._bucket_pad(toks)
-        tl = jnp.full((1,), n, jnp.int32)
         vs = None if vision is None else jnp.asarray(vision)[None]
-        logits, one_cache = self._prefill(
-            self.params, jnp.asarray(padded, jnp.int32)[None], vs, tl)
-        if self.paged:
-            self.pm.insert_prefill(slot, one_cache.k[:, 0], one_cache.v[:, 0],
-                                   n, n_shared)
-        else:
-            self.cache = kvc.insert_request(self.cache, one_cache,
-                                            jnp.int32(slot))
+        logits = self.kv.prefill(self.params, slot,
+                                 jnp.asarray(padded, jnp.int32)[None],
+                                 n, n_shared, vs)
 
         if req.rid < 0:
             req.rid = self._rid
@@ -301,6 +333,8 @@ class Engine:
             tok = int(self._sample(logits, [slot])[0])
             req.out_tokens = [tok]
             req.remaining = req.max_new_tokens - 1
+            now = time.perf_counter()
+            req.t_first = req.t_last = now
         self.active[slot] = req
         self._last_token[slot] = int(tok)
         self.stats["peak_active"] = max(self.stats["peak_active"],
@@ -311,45 +345,40 @@ class Engine:
         """One batched decode step for all active slots; returns slot->token."""
         if not self.active:
             return {}
-        if self.paged:
-            self._make_appendable()
-            if not self.active:
-                return {}
+        self._make_appendable()
+        if not self.active:
+            return {}
         tokens = jnp.asarray(self._last_token, jnp.int32)
-        if self.paged:
-            logits, new_cache = self._decode(self.params, tokens,
-                                             self.pm.device_cache())
-            self.pm.update_pools(new_cache)
-        else:
-            logits, self.cache = self._decode(self.params, tokens, self.cache)
+        logits, new_cache = self._decode(self.params, tokens,
+                                         self.kv.device_cache())
+        self.kv.update(new_cache)
         next_tokens = np.asarray(self._sample(
             logits, np.arange(self.sc.n_slots)))
+        now = time.perf_counter()
         emitted: Dict[int, int] = {}
         for slot, req in list(self.active.items()):
             tok = int(next_tokens[slot])
             req.out_tokens.append(tok)
             req.remaining -= 1
+            req.t_last = now
             self._last_token[slot] = tok
             emitted[slot] = tok
-            if self.paged:
-                self.pm.advance(slot)
+            self.kv.advance(slot)
             done = req.remaining <= 0 or tok == self.sc.eos_token
             if done:
-                if self.paged:
-                    self.pm.release(slot)
-                else:
-                    self.cache = kvc.clear_slot(self.cache, jnp.int32(slot))
+                self.kv.release(slot)
                 req.slot = -1
                 del self.active[slot]
                 self.free_slots.append(slot)
         return emitted
 
     def _make_appendable(self):
-        """Guarantee every active slot can write its next token's page,
-        preempting the youngest request(s) when the pool is exhausted."""
+        """Guarantee every active slot can write its next token (paged:
+        map/CoW the target page), preempting the youngest request(s) when
+        the adapter is out of resources.  Dense adapters always succeed."""
         while True:
             blocked = [s for s in sorted(self.active)
-                       if not self.pm.ensure_appendable(s)]
+                       if not self.kv.ensure_appendable(s)]
             if not blocked:
                 return
             if len(self.active) == 1:
@@ -361,7 +390,7 @@ class Engine:
 
     def _preempt(self, slot: int):
         req = self.active.pop(slot)
-        self.pm.release(slot)
+        self.kv.release(slot)
         self.free_slots.append(slot)
         req.slot = -2
         req.key_state = np.asarray(self._slot_keys[slot])  # resume in place
@@ -369,11 +398,18 @@ class Engine:
         self.stats["n_preempted"] += 1
 
     def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int = 32,
-                 vision: Optional[Sequence[np.ndarray]] = None) -> List[List[int]]:
-        """Continuous batching driver: keeps slots full until all done."""
+                 vision: Optional[Sequence[np.ndarray]] = None
+                 ) -> List[RequestResult]:
+        """Continuous batching driver: keeps slots full until all done.
+
+        Returns one :class:`RequestResult` per prompt — the generated
+        token ids (list semantics preserved) plus prompt_len / new_tokens
+        / ttft_s / decode_tok_s."""
+        t_arrival = time.perf_counter()
         pending = [Request(prompt=np.asarray(p, np.int32),
-                           max_new_tokens=max_new_tokens) for p in prompts]
-        results: List[Optional[List[int]]] = [None] * len(pending)
+                           max_new_tokens=max_new_tokens,
+                           t_arrival=t_arrival) for p in prompts]
+        results: List[Optional[RequestResult]] = [None] * len(pending)
         order = {id(r): i for i, r in enumerate(pending)}
         queue = list(pending)
         inflight: List[Request] = []
@@ -401,7 +437,7 @@ class Engine:
             self.step()
             for r in list(inflight):
                 if r.slot == -1:  # finished (not preempted, not active)
-                    results[order[id(r)]] = r.out_tokens
+                    results[order[id(r)]] = _result_of(r)
                     inflight.remove(r)
         return results  # type: ignore
 
@@ -438,10 +474,3 @@ def _sample_rows(logits: jnp.ndarray, keys: jnp.ndarray, *,
     split = jax.vmap(jax.random.split)(keys)  # (R, 2, 2)
     toks = jax.vmap(jax.random.categorical)(split[:, 1], scaled)
     return toks.astype(jnp.int32), split[:, 0]
-
-
-def _trim_cache_spec(spec_cache: DecodeCache, like: DecodeCache) -> DecodeCache:
-    """Drop spec entries for fields that are None in the actual cache."""
-    return DecodeCache(*[
-        None if getattr(like, f) is None else getattr(spec_cache, f)
-        for f in DecodeCache._fields])

@@ -1,12 +1,13 @@
 """DENSE-cache slot operations over the batched DecodeCache.
 
-This is the worst-case-length serving backend: every slot owns a fixed
+This is the worst-case-length serving backend (driven through
+``serving.adapters.DenseCacheAdapter``): every slot owns a fixed
 ``max_len`` stretch of one batched cache, so inserts/evicts are O(1)
 dynamic slices but concurrency is capped at ``HBM / (L · max_len · Hkv ·
 Dh)`` slots regardless of actual sequence lengths.  The alternative is
-``paged_kv_cache`` (``ServeConfig.cache_kind="paged"``): block-pool pages
-mapped on demand, which trades the simple slot arithmetic for strictly
-more concurrent streams per HBM byte on mixed-length traffic.
+``paged_kv_cache`` (``Engine(cache="paged")``): block-pool pages mapped
+on demand, which trades the simple slot arithmetic for strictly more
+concurrent streams per HBM byte on mixed-length traffic.
 
 The cache produced by ``models.init_cache`` is batched over serving slots;
 these utilities insert a freshly-prefilled single-request cache into slot
@@ -29,7 +30,6 @@ Batch axis position by field:
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

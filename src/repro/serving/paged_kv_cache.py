@@ -10,11 +10,15 @@ sustains strictly more concurrent streams on any realistic (mixed-length)
 traffic.
 
 Division of labor:
-  * DEVICE — the page pools (``PagedDecodeCache.k/v``) plus two jitted,
-    donated ops: ``scatter_prefill_blocks`` (write a prefilled request's
-    pages) and ``copy_block`` (copy-on-write).  Per-token appends are
-    inside the jitted decode step (models.transformer), also via
-    dynamic-slice scatter — nothing here reallocates or recompiles.
+  * DEVICE — the page pools (``PagedDecodeCache.k/v``).  Prompt KV is
+    written DIRECTLY into mapped pages by the prefill program itself
+    (``models.transformer.forward_prefill(pages=…)`` — no worst-case-
+    length intermediate cache, no post-prefill scatter pass); per-token
+    appends are inside the jitted decode step (models.transformer); and
+    ``copy_block`` (jitted, donated) implements copy-on-write.  Nothing
+    here reallocates or recompiles.  ``scatter_prefill_blocks`` is the
+    LEGACY insert path (dense intermediate + scatter), retained so the
+    benchmark can measure the before/after prefill traffic.
   * HOST — ``BlockAllocator`` (free list + per-page refcounts) and
     ``PagedCacheManager`` (block tables, admission, prefix sharing,
     copy-on-write policy, eviction).  Tables/lengths are tiny int32
@@ -51,7 +55,10 @@ from repro.models.transformer import (PagedDecodeCache, init_paged_cache,
 
 @partial(jax.jit, donate_argnums=(0, 1))
 def scatter_prefill_blocks(k_pool, v_pool, k_blocks, v_blocks, block_ids):
-    """Write a prefilled request's pages into the pool.
+    """LEGACY prefill insert: write a dense-prefilled request's pages into
+    the pool.  The engine now prefills direct-to-page
+    (``forward_prefill(pages=…)``); this op remains as the before-path for
+    ``benchmarks/bench_paged_serving.py``'s prefill-traffic comparison.
 
     k_blocks/v_blocks: (L, nb, bs, Hkv, Dh) — the request's kv reshaped to
     pages; block_ids: (nb,) int32 physical destinations.  One compiled
@@ -140,9 +147,10 @@ class PagedCacheManager:
     """Owns the device pools and every host-side paging decision.
 
     The engine calls, per request lifecycle:
-      ``admit(slot, tokens)``      admission control + prefix sharing
-      ``insert_prefill(...)``      write the unshared tail pages
-      ``ensure_appendable(slot)``  map/CoW the page ``length`` falls in
+      ``admit(slot, tokens)``        admission control + prefix sharing
+      ``prefill_block_ids(slot, …)`` per-logical-block destinations for
+                                     the direct-to-page prefill scatter
+      ``ensure_appendable(slot)``    map/CoW the page ``length`` falls in
       ``advance(slot)`` / ``release(slot)``
     and per decode step ``device_cache()`` / ``update_pools(new_cache)``.
     """
@@ -244,26 +252,24 @@ class PagedCacheManager:
         self._register(tokens, blocks, len(shared))
         return len(shared)
 
-    def insert_prefill(self, slot: int, k_one: jnp.ndarray, v_one: jnp.ndarray,
-                       n_tokens: int, n_shared: int) -> None:
-        """Scatter the UNSHARED tail of a prefilled request into its pages.
+    def prefill_block_ids(self, slot: int, padded_len: int,
+                          n_shared: int) -> np.ndarray:
+        """Physical destination per logical block of a (bucket-padded)
+        prefill, for ``forward_prefill(pages=…)``'s direct-to-page scatter.
 
-        k_one/v_one: (L, Sc, Hkv, Dh) from the batch-1 prefill cache (Sc >=
-        n_tokens; positions beyond n_tokens may hold bucket padding — they
-        land in-page past ``length`` where the causal mask hides them).
+        Entries are -1 (the scatter DROPS them) for (a) prefix-SHARED
+        pages — they already hold the prefix, and their in-page tail may
+        be another live request's decoded tokens, so they must never be
+        rewritten — and (b) bucket-padding blocks past the prompt, which
+        this slot doesn't own.
         """
-        nb = self.blocks_for(n_tokens)
-        if nb == n_shared:
-            return  # fully shared — nothing to write
-        ids = self._slots[slot].blocks[n_shared:nb]
-        lo, hi = n_shared * self.bs, nb * self.bs
-        L = k_one.shape[0]
-        kb = k_one[:, lo:hi].reshape(L, nb - n_shared, self.bs,
-                                     *k_one.shape[2:])
-        vb = v_one[:, lo:hi].reshape(L, nb - n_shared, self.bs,
-                                     *v_one.shape[2:])
-        self.k, self.v = scatter_prefill_blocks(
-            self.k, self.v, kb, vb, jnp.asarray(ids, jnp.int32))
+        info = self._slots[slot]
+        nb = self.blocks_for(int(self.lengths[slot]))
+        nbk = -(-padded_len // self.bs)
+        assert nbk >= nb, (padded_len, self.lengths[slot])
+        ids = np.full((nbk,), -1, np.int32)
+        ids[n_shared:nb] = info.blocks[n_shared:nb]
+        return ids
 
     def ensure_appendable(self, slot: int) -> bool:
         """Make the page that position ``lengths[slot]`` falls into safely

@@ -9,10 +9,8 @@ checkpoint.  ``host_id``/``n_hosts`` shard the global batch across processes
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from typing import Dict, Iterator, Optional
 
-import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig

@@ -16,15 +16,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 import sys
-import time
 from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig

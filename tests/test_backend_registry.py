@@ -1,0 +1,123 @@
+"""The serving API seam: every (cache_kind × style × impl) combo serves
+through the single registry entry point (``models.forward_step`` looking
+up ``models.backends``) and emits greedy tokens identical to the unmerged
+dense XLA full-sequence oracle; unknown combos fail loudly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import merge_skipless
+from repro.kernels import ops as kops
+from repro.models import backends, forward_seq, init_params, serving_style_key
+from repro.serving import Engine, PagedCacheAdapter, ServeConfig
+
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """One base model + its three merged rewrites + the oracle streams.
+
+    MHA (n_kv_heads = n_heads) so the kp/vp variants are applicable
+    (paper Fig 1c/d need e == d); float32 + scaled embeddings so the
+    merged/unmerged logit comparison is well-conditioned.
+    """
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        n_kv_heads=4)
+    assert cfg.kp_vp_removal_applicable
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params["embed"]["table"] = params["embed"]["table"] * 50.0
+
+    models = {"generic": (cfg, params)}
+    for variant in ("qp", "kp", "vp"):
+        mp, mc = merge_skipless(params, cfg, variant)
+        models[variant] = (mc, mp)
+
+    prompts = [np.arange(5) % cfg.vocab_size + 3 * i for i in range(2)]
+
+    def greedy_oracle(prompt, n):
+        toks = list(prompt)
+        out = []
+        for _ in range(n):
+            lg, _, _ = forward_seq(params, cfg,
+                                   jnp.asarray(toks, jnp.int32)[None])
+            t = int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))
+            out.append(t)
+            toks.append(t)
+        return out
+
+    oracle = [greedy_oracle(p, MAX_NEW) for p in prompts]
+    return models, prompts, oracle
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("style", ["generic", "qp", "kp", "vp"])
+@pytest.mark.parametrize("cache_kind", ["dense", "paged"])
+def test_cross_product_matches_unmerged_dense_xla_oracle(
+        setup, cache_kind, style, impl):
+    """The acceptance grid: all (cache ∈ {dense,paged}) × (style ∈
+    {generic,qp,kp,vp}) × (impl ∈ {xla,pallas}) combos serve through the
+    one registry entry point, greedy token-identical to the unmerged
+    dense XLA oracle.  kp/vp must route to the generic backend
+    (merged_fast_path False); qp must take the fast path."""
+    models, prompts, oracle = setup
+    cfg, params = models[style]
+    sc = ServeConfig(n_slots=2, max_len=48)
+    cache = PagedCacheAdapter(block_size=8) if cache_kind == "paged" \
+        else "dense"
+    eng = Engine(cfg, params, sc, impl=impl, cache=cache)
+    assert eng.backend.key == (cache_kind, serving_style_key(cfg), impl)
+    assert eng.merged_fast_path == (style == "qp"), (
+        "only the qp variant has a fast-path route; kp/vp and unmerged "
+        "models serve through the generic backend")
+    outs = eng.generate(prompts, max_new_tokens=MAX_NEW)
+    for p, o, want in zip(prompts, outs, oracle):
+        assert o == want, (cache_kind, style, impl, list(p[:3]))
+
+
+def test_registry_rejects_unknown_combos():
+    with pytest.raises(KeyError, match="no AttentionBackend registered"):
+        backends.get_backend("ring", "generic", "xla")
+    with pytest.raises(KeyError, match="registered combos"):
+        backends.get_backend("dense", "quantized", "xla")
+    with pytest.raises(KeyError, match="cuda"):
+        backends.get_backend("dense", "generic", "cuda")
+    with pytest.raises(KeyError, match="no Pallas decode kernel"):
+        kops.decode_kernel("dense", "quantized")
+
+
+def test_registry_covers_the_serving_grid():
+    keys = set(backends.registered_backends())
+    for ck in backends.CACHE_KINDS:
+        for st in backends.STYLES:
+            for impl in backends.IMPLS:
+                assert (ck, st, impl) in keys, (ck, st, impl)
+    for ck in backends.CACHE_KINDS:
+        assert backends.get_backend(ck, "merged", "xla").fast_path
+        assert not backends.get_backend(ck, "generic", "xla").fast_path
+
+
+def test_engine_rejects_unknown_cache_kind():
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="unknown cache kind"):
+        Engine(cfg, params, ServeConfig(n_slots=1, max_len=32), cache="ring")
+
+
+def test_serving_style_key():
+    base = reduce_config(get_config("mistral-7b"))
+    assert serving_style_key(base) == "generic"
+    merged = base.with_(block_style="skipless_merged", merged_variant="qp")
+    assert serving_style_key(merged) == "merged"
+    kp = base.with_(block_style="skipless_merged", merged_variant="kp",
+                    n_kv_heads=4)
+    assert serving_style_key(kp) == "generic"
+    ssm = reduce_config(get_config("mamba2-2.7b"))
+    assert serving_style_key(ssm) == "generic"
+    # hybrid merged keeps P (fused attn+ssm stream feeds the FFN): generic
+    hybrid = reduce_config(get_config("hymba-1.5b")).with_(
+        block_style="skipless_merged")
+    assert serving_style_key(hybrid) == "generic"

@@ -1,0 +1,127 @@
+"""Direct-to-page paged prefill: prompt KV lands straight in the mapped
+pool blocks — no worst-case-length intermediate buffer, no post-prefill
+scatter pass — and stays token-exact under prefix sharing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.models import forward_prefill, forward_seq, init_params
+from repro.serving import Engine, PagedCacheAdapter, Request, ServeConfig
+
+# chosen so MAX_LEN collides with NO model/pool dimension (reduced shapes
+# use 2/4/16/64/96/128; the pool uses N_BLOCKS/BLOCK): any max_len-sized
+# array in the prefill program would be the worst-case intermediate the
+# direct path is supposed to have deleted
+MAX_LEN = 160
+BLOCK = 8
+N_BLOCKS = 21
+
+
+def _all_avals(jaxpr):
+    """Every var aval in a (closed) jaxpr, recursing into inner jaxprs."""
+    seen = []
+
+    def walk(jx):
+        for v in list(jx.invars) + list(jx.outvars) + list(jx.constvars):
+            seen.append(v.aval)
+        for eqn in jx.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                if hasattr(v, "aval"):
+                    seen.append(v.aval)
+            for p in eqn.params.values():
+                for sub in jax.tree.leaves(
+                        p, is_leaf=lambda x: isinstance(
+                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        walk(sub.jaxpr)
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        walk(sub)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return seen
+
+
+def test_paged_prefill_allocates_no_worst_case_buffer():
+    """The engine's ACTUAL paged prefill program (as wired through the
+    adapter) must contain no max_len-sized array anywhere: the prompt's
+    KV goes straight to its mapped pages, so the program's sequence
+    extents are bounded by the prompt bucket, never by max_len."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sc = ServeConfig(n_slots=2, max_len=MAX_LEN)
+    eng = Engine(cfg, params, sc,
+                 cache=PagedCacheAdapter(block_size=BLOCK, n_blocks=N_BLOCKS))
+    bucket = 16
+    assert bucket < MAX_LEN
+    adapter = eng.kv
+    nbk = bucket // BLOCK
+    jaxpr = jax.make_jaxpr(
+        lambda p, tk, tl, kp, vp, b: forward_prefill(
+            p, cfg, tk, impl=eng.impl, true_len=tl, pages=(kp, vp, b)))(
+        params, jnp.zeros((1, bucket), jnp.int32), jnp.full((1,), 5, jnp.int32),
+        adapter.pm.k, adapter.pm.v, jnp.zeros((nbk,), jnp.int32))
+    offending = [a for a in _all_avals(jaxpr)
+                 if hasattr(a, "shape") and MAX_LEN in tuple(a.shape)]
+    assert not offending, (
+        f"paged prefill materialized max_len({MAX_LEN})-sized buffers: "
+        f"{[a.shape for a in offending[:5]]}")
+    # and the engine really serves through that program
+    out = eng.generate([np.arange(5) % cfg.vocab_size], max_new_tokens=3)
+    assert len(out[0]) == 3
+
+
+def _greedy_oracle(params, cfg, prompt, n):
+    toks = list(prompt)
+    out = []
+    for _ in range(n):
+        lg, _, _ = forward_seq(params, cfg, jnp.asarray(toks, jnp.int32)[None])
+        t = int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))
+        out.append(t)
+        toks.append(t)
+    return out
+
+
+def test_direct_prefill_tokens_match_dense_oracle():
+    """Mixed buckets, shared prefixes, sliding window: the direct-to-page
+    engine must emit the dense engine's (and the oracle's) exact greedy
+    streams."""
+    cfg = reduce_config(get_config("mistral-7b"))  # GQA + sliding window
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(int(n),)).astype(np.int32)
+               for n in (3, 9, 17, 17, 26)]
+    prompts[3] = prompts[2].copy()  # identical pair -> shared prefix pages
+    paged = Engine(cfg, params, ServeConfig(n_slots=5, max_len=64),
+                   cache=PagedCacheAdapter(block_size=8, n_blocks=40))
+    outs = paged.generate(prompts, max_new_tokens=5)
+    assert paged.pm.allocator.n_shared_hits > 0
+    for p, o in zip(prompts, outs):
+        assert o == _greedy_oracle(params, cfg, p, 5), len(p)
+
+
+def test_direct_prefill_skips_shared_pages_of_live_requests():
+    """STAGGERED prefix sharing: request A decodes into its partial tail
+    page, then request B with an identical prompt prefills direct-to-page.
+    B's prefill must NOT rewrite the shared pages (its block ids are -1
+    there) — rewriting would clobber A's decoded KV with B's bucket
+    padding and corrupt A's stream mid-flight."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = (np.arange(12) * 5 + 1) % cfg.vocab_size  # 1 full + partial page
+    want = _greedy_oracle(params, cfg, prompt, 6)
+
+    eng = Engine(cfg, params, ServeConfig(n_slots=2, max_len=64),
+                 cache=PagedCacheAdapter(block_size=8, n_blocks=32))
+    ra = Request(prompt=prompt, max_new_tokens=6)
+    assert eng.submit(ra)
+    for _ in range(3):  # A writes positions 12..14 into the shared tail
+        eng.step()
+    rb = Request(prompt=prompt.copy(), max_new_tokens=6)
+    assert eng.submit(rb)
+    assert eng.pm.allocator.n_shared_hits >= 2, "B must share A's pages"
+    while eng.active:
+        eng.step()
+    assert ra.out_tokens == want, "A's stream was corrupted by B's prefill"
+    assert rb.out_tokens == want
+    assert eng.pm.allocator.n_cow >= 1, "B's first append must CoW the tail"
