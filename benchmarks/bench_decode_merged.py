@@ -16,7 +16,9 @@ views per arch (Mistral-7B is the paper's GQA example):
     full-depth weight stream (paper §3 model) is printed next to it.
 
 Merged must access strictly fewer bytes: wq/wp are simply not in the
-program.
+program.  The same comparison is made for the PREFILL program (the
+stream-as-query fast path dispatched through the PrefillBackend
+registry) — the TTFT side of the paper's claim.
 
   PYTHONPATH=src python -m benchmarks.bench_decode_merged
 """
@@ -32,7 +34,8 @@ from repro.configs import get_config, reduce_config
 from repro.core import active_weights_per_token, merge_skipless
 from repro.core.analysis import cost_dict
 from repro.launch import steps as steps_lib
-from repro.models import forward_prefill, forward_step, init_params
+from repro.models import (DensePrefillDest, forward_prefill, forward_step,
+                          init_params)
 
 
 def _measured_tok_s(arch: str, n_new: int = 24):
@@ -71,8 +74,8 @@ def _measured_tok_s(arch: str, n_new: int = 24):
             best = max(best, B * n_new / (time.perf_counter() - t0))
         return np.asarray(jnp.stack(out)), best
 
-    lg0, c0 = forward_prefill(params, cfg, toks, cache_len=64)
-    lg1, c1 = forward_prefill(mparams, mcfg, toks, cache_len=64)
+    lg0, c0 = forward_prefill(params, cfg, toks, DensePrefillDest(64))
+    lg1, c1 = forward_prefill(mparams, mcfg, toks, DensePrefillDest(64))
     first0 = jnp.argmax(lg0[:, :cfg.vocab_size], axis=-1)
     first1 = jnp.argmax(lg1[:, :cfg.vocab_size], axis=-1)
     toks0, tok_s0 = decode_loop(make_step(cfg), params, c0, first0)
@@ -95,6 +98,18 @@ def _compiled_bytes(cfg, batch: int = 1, cache_len: int = 1024):
     return float(c.get("bytes accessed", -1.0)), float(c.get("flops", -1.0))
 
 
+def _compiled_prefill_bytes(cfg, batch: int = 1, seq_len: int = 256):
+    """bytes-accessed of one jitted prefill (lower+compile only) — the
+    TTFT-side twin of ``_compiled_bytes``.  Dispatches through the
+    PrefillBackend registry, so ``skipless_merged`` lowers the stream-as-
+    query fast path (no wq/wp reads anywhere in the prompt forward)."""
+    fn, _ = steps_lib.build_step(cfg, "prefill")
+    pshape = steps_lib.param_specs(cfg)
+    batch_spec = {"inputs": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+    compiled = jax.jit(fn).lower(pshape, batch_spec).compile()
+    return float(cost_dict(compiled).get("bytes accessed", -1.0))
+
+
 def run(arch: str = "mistral-7b"):
     full = get_config(arch)
     bytes_skipless, _ = _compiled_bytes(full.with_(block_style="skipless"))
@@ -102,6 +117,12 @@ def run(arch: str = "mistral-7b"):
     assert bytes_merged < bytes_skipless, (
         "merged decode must access strictly fewer HBM bytes "
         f"(no wq/wp reads): {bytes_merged} vs {bytes_skipless}")
+    pf_skipless = _compiled_prefill_bytes(full.with_(block_style="skipless"))
+    pf_merged = _compiled_prefill_bytes(
+        full.with_(block_style="skipless_merged"))
+    assert pf_merged < pf_skipless, (
+        "merged prefill must access strictly fewer HBM bytes "
+        f"(no wq/wp reads): {pf_merged} vs {pf_skipless}")
     meas = _measured_tok_s(arch)
     # analytic full-depth weight stream (paper §3 model, bf16 weights)
     w_with = active_weights_per_token(full, with_qp=True) * 2
@@ -110,6 +131,9 @@ def run(arch: str = "mistral-7b"):
                  bytes_per_token_skipless=bytes_skipless,
                  bytes_per_token_merged=bytes_merged,
                  bytes_saved_frac=1.0 - bytes_merged / bytes_skipless,
+                 prefill_bytes_skipless=pf_skipless,
+                 prefill_bytes_merged=pf_merged,
+                 prefill_bytes_saved_frac=1.0 - pf_merged / pf_skipless,
                  model_weight_bytes_with_qp=w_with,
                  model_weight_bytes_without_qp=w_wo,
                  model_bytes_saved_frac=1.0 - w_wo / w_with,
@@ -123,6 +147,11 @@ def main():
               f"{r['bytes_per_token_skipless'] / 1e6:.1f} MB -> "
               f"{r['bytes_per_token_merged'] / 1e6:.1f} MB "
               f"({100 * r['bytes_saved_frac']:.1f}% fewer, scanned-body HLO)")
+        print(f"  prefill (256-token prompt) bytes "
+              f"{r['prefill_bytes_skipless'] / 1e6:.1f} MB -> "
+              f"{r['prefill_bytes_merged'] / 1e6:.1f} MB "
+              f"({100 * r['prefill_bytes_saved_frac']:.1f}% fewer, "
+              f"stream-as-query fast path)")
         print(f"  full-depth weight stream (paper §3, bf16): "
               f"{r['model_weight_bytes_with_qp'] / 1e9:.2f} GB -> "
               f"{r['model_weight_bytes_without_qp'] / 1e9:.2f} GB/token "

@@ -20,12 +20,19 @@ ratio and the HLO byte counts are the TPU-relevant parts.
 
 A second section measures the PREFILL path per prompt bucket:
 ``cost_analysis`` bytes of the compiled prefill program, paged
-direct-to-page (``forward_prefill(pages=…)`` — prompt KV lands straight
-in the mapped blocks) vs the LEGACY paged path it replaced (dense
-worst-case-``max_len`` intermediate cache + post-prefill page scatter)
-vs the dense engine's prefill.  Direct-to-page must move strictly fewer
-bytes than the legacy path — the intermediate buffer and the second
-scatter pass are simply not in the program.
+direct-to-page (``forward_prefill(dest=PagedPrefillDest(…))`` — prompt
+KV lands straight in the mapped blocks) vs the LEGACY paged path it
+replaced (dense worst-case-``max_len`` intermediate cache + post-prefill
+page scatter) vs the dense engine's prefill.  Direct-to-page must move
+strictly fewer bytes than the legacy path — the intermediate buffer and
+the second scatter pass are simply not in the program.
+
+A third section measures MERGED vs GENERIC prefill per bucket (the
+PrefillBackend registry's style axis, same delta style as the direct-to-
+page one): compiled prefill bytes of the qp-merged rewrite vs its
+unmerged source, for both cache kinds, plus the measured TTFT delta from
+the serve rows.  Merged must move strictly fewer bytes — the wq/wp reads
+are simply not in the program (stream-as-query fast path).
 
   PYTHONPATH=src python -m benchmarks.bench_paged_serving
 """
@@ -39,7 +46,7 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core import merge_skipless
 from repro.core.analysis import cost_dict
-from repro.models import forward_prefill, init_params
+from repro.models import DensePrefillDest, forward_prefill, init_params
 from repro.serving import Engine, PagedCacheAdapter, ServeConfig
 from repro.serving.paged_kv_cache import scatter_prefill_blocks
 
@@ -111,7 +118,7 @@ def _prefill_traffic(dense: Engine, paged: Engine, bucket: int):
     tk = jax.ShapeDtypeStruct((1, bucket), jax.numpy.int32)
     tl = jax.ShapeDtypeStruct((1,), jax.numpy.int32)
     legacy_pf = jax.jit(lambda p, t, l: forward_prefill(
-        p, cfg, t, cache_len=MAX_LEN, true_len=l, full_cache=True))
+        p, cfg, t, DensePrefillDest(MAX_LEN, full_cache=True), true_len=l))
     b_legacy = cost_dict(
         legacy_pf.lower(pshape, tk, tl).compile()).get("bytes accessed", 0.0)
     nb = -(-bucket // BLOCK)
@@ -169,11 +176,37 @@ def run():
         assert pr["paged_bytes"] < pr["paged_legacy_bytes"], (
             "direct-to-page prefill must move strictly fewer bytes than "
             "the legacy dense-intermediate + scatter path", pr)
-    return rows, prefill
+
+    # merged vs generic prefill (the PrefillBackend style axis), per
+    # bucket and per cache kind — the engine must actually route merged
+    # configs through the fast path, and the fast path must move fewer
+    # bytes (no wq/wp reads in the prompt forward)
+    dense_m = _make_engine(mcfg, mparams, "dense")
+    paged_m = _make_engine(mcfg, mparams, "paged")
+    assert dense_m.merged_prefill_fast_path and paged_m.merged_prefill_fast_path
+    assert not dense_eng.merged_prefill_fast_path
+    merged_prefill = []
+    for b in (8, 16):
+        row = dict(
+            bucket=b,
+            dense_generic=cost_dict(dense_eng.compiled_prefill(b)).get(
+                "bytes accessed", 0.0),
+            dense_merged=cost_dict(dense_m.compiled_prefill(b)).get(
+                "bytes accessed", 0.0),
+            paged_generic=cost_dict(paged_eng.compiled_prefill(b)).get(
+                "bytes accessed", 0.0),
+            paged_merged=cost_dict(paged_m.compiled_prefill(b)).get(
+                "bytes accessed", 0.0))
+        for kind in ("dense", "paged"):
+            assert row[f"{kind}_merged"] < row[f"{kind}_generic"], (
+                "merged prefill must move strictly fewer bytes than the "
+                "generic prefill (no wq/wp reads)", kind, row)
+        merged_prefill.append(row)
+    return rows, prefill, merged_prefill
 
 
 def main():
-    rows, prefill = run()
+    rows, prefill, merged_prefill = run()
     print(f"{N_REQ} requests, prompts 4..28 tok, +{MAX_NEW} new; equal "
           f"cache HBM ({rows[0]['cache_bytes']/1e6:.2f} MB)")
     hdr = ("weights", "cache", "peak_streams", "tok_s", "ttft_ms",
@@ -194,6 +227,24 @@ def main():
               f"{pr['paged_legacy_bytes']/1e6:.2f} MB "
               f"({100 * saved:.1f}% fewer bytes direct)")
     print("direct-to-page < legacy paged prefill bytes OK")
+    print("\nmerged vs generic prefill per bucket (PrefillBackend style "
+          "axis; compiled prefill bytes):")
+    for mp in merged_prefill:
+        sd = 1.0 - mp["dense_merged"] / mp["dense_generic"]
+        sp = 1.0 - mp["paged_merged"] / mp["paged_generic"]
+        print(f"  bucket {mp['bucket']:>3}: dense "
+              f"{mp['dense_generic']/1e6:.2f} -> {mp['dense_merged']/1e6:.2f} "
+              f"MB ({100 * sd:.1f}% fewer) | paged "
+              f"{mp['paged_generic']/1e6:.2f} -> {mp['paged_merged']/1e6:.2f} "
+              f"MB ({100 * sp:.1f}% fewer)")
+    for kind in ("dense", "paged"):
+        g = next(r for r in rows if r["weights"] == "skipless"
+                 and r["cache"] == kind)
+        m = next(r for r in rows if r["weights"] == "merged_qp"
+                 and r["cache"] == kind)
+        print(f"  measured TTFT ({kind}): generic {g['ttft_ms']:.1f} ms -> "
+              f"merged {m['ttft_ms']:.1f} ms (CPU, illustrative)")
+    print("merged < generic prefill bytes OK (both cache kinds)")
 
 
 if __name__ == "__main__":

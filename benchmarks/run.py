@@ -46,18 +46,24 @@ def main() -> None:
                 derived = f"qwen_e2e_speedup={m['speedup_e2e']:.3f}"
             elif name.startswith("decode_merged"):
                 m = next(r for r in rows if r["arch"] == "mistral-7b")
-                derived = f"mistral_bytes_saved={m['bytes_saved_frac']:.3f}"
+                derived = (f"mistral_bytes_saved={m['bytes_saved_frac']:.3f}"
+                           f";prefill_bytes_saved="
+                           f"{m['prefill_bytes_saved_frac']:.3f}")
             elif name.startswith("paged_serving"):
-                rows, prefill = rows  # run() -> (serve rows, prefill rows)
+                # run() -> (serve rows, prefill rows, merged-prefill rows)
+                rows, prefill, merged_prefill = rows
                 dn = next(r for r in rows if r["weights"] == "merged_qp"
                           and r["cache"] == "dense")
                 pg = next(r for r in rows if r["weights"] == "merged_qp"
                           and r["cache"] == "paged")
                 pf = prefill[-1]
                 saved = 1.0 - pf["paged_bytes"] / pf["paged_legacy_bytes"]
+                mp = merged_prefill[-1]
+                msaved = 1.0 - mp["paged_merged"] / mp["paged_generic"]
                 derived = (f"streams_paged_vs_dense="
                            f"{pg['peak_streams']}v{dn['peak_streams']}"
-                           f";prefill_bytes_saved={saved:.3f}")
+                           f";prefill_bytes_saved={saved:.3f}"
+                           f";merged_prefill_bytes_saved={msaved:.3f}")
             elif name.startswith("numerics"):
                 o = next(r for r in rows if r["init"] == "orthogonal"
                          and r["dtype"] == "float32")

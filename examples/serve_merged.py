@@ -55,6 +55,9 @@ def main():
         sc = ServeConfig(n_slots=args.slots, max_len=128)
         cache = "dense"
     eng = Engine(mcfg, mparams, sc, cache=cache)
+    print(f"  merged fast path: decode={eng.merged_fast_path} "
+          f"prefill={eng.merged_prefill_fast_path} (Q/P weights never "
+          f"read in either serving phase)")
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, size=(rng.randint(6, 24),))
                for _ in range(args.requests)]

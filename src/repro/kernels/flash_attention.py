@@ -14,6 +14,18 @@ TPU-native design (not a CUDA port):
     stay exactly zero (no NaN rescue needed); fully-masked kv blocks are
     skipped via pl.when on block-level bounds.
 
+Two variants (mirroring ``decode_attention``'s generic/merged pair):
+  * ``flash_attention_bhsd`` — generic: q is a separately-projected
+    head-major (B, Hq, Sq, D) tensor, k/v arrive head-major too.
+  * ``flash_attention_merged_bsd`` — the paper's merged (Q/P-removed)
+    PREFILL fast path: there is NO q projection, the RoPE'd residual
+    stream (B, Sq, d_model) *is* the query (d_model = Hq·D for merged
+    configs, paper Fig 1b).  The kernel takes the stream reshaped
+    (bitcast, no copy) to (B, Sq, Hq, D) and reads K*/V* tiles in their
+    NATIVE (B, Sk, Hkv, D) layout — no head-major transpose of q/k/v/o
+    bracketing the kernel — then writes the attention output straight
+    back into the stream (FFN-input) basis.
+
 Accumulation is float32 regardless of input dtype.
 """
 from __future__ import annotations
@@ -31,12 +43,15 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 NEG = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, causal: bool, window: int,
-                  bq: int, bk: int, nk: int):
-    iq = pl.program_id(2)
-    ik = pl.program_id(3)
+def _flash_body(iq, ik, load_q, load_k, load_v, m_scr, l_scr, acc_scr, *,
+                scale: float, causal: bool, window: int, bq: int, bk: int):
+    """Shared online-softmax state update for one (bq, bk) block pair.
 
+    ``load_q``/``load_k``/``load_v`` are thunks returning (bq, D)/(bk, D)
+    tiles — the generic and merged kernels slice their differently-shaped
+    VMEM refs there, and the loads stay INSIDE the fully-masked-block skip
+    (pl.when below) either way.
+    """
     @pl.when(ik == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG)
@@ -56,8 +71,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(run)
     def _body():
-        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, D)
-        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        q = load_q().astype(jnp.float32) * scale  # (bq, D)
+        k = load_k().astype(jnp.float32)  # (bk, D)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (bq, bk)
 
@@ -76,17 +91,31 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         alpha = jnp.exp(m_prev - m_next)  # (bq, 1)
         p = jnp.where(mask, jnp.exp(s - m_next), 0.0)  # (bq, bk)
 
-        v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = load_v().astype(jnp.float32)  # (bk, D)
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
             p, v, preferred_element_type=jnp.float32)
         l_scr[:, :1] = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
         m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
 
+
+def _flash_finish(l_scr, acc_scr):
+    l = l_scr[:, :1]
+    l = jnp.where(l == 0.0, 1.0, l)
+    return acc_scr[...] / l
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    _flash_body(iq, ik, lambda: q_ref[0, 0], lambda: k_ref[0, 0],
+                lambda: v_ref[0, 0], m_scr, l_scr, acc_scr,
+                scale=scale, causal=causal, window=window, bq=bq, bk=bk)
+
     @pl.when(ik == nk - 1)
     def _finish():
-        l = l_scr[:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        o_ref[0, 0] = _flash_finish(l_scr, acc_scr).astype(o_ref.dtype)
 
 
 def flash_attention_bhsd(
@@ -132,3 +161,80 @@ def flash_attention_bhsd(
         interpret=interpret,
         name="flash_attention",
     )(q, k, v)
+
+
+def _flash_kernel_merged(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, causal: bool, window: int,
+                         bq: int, bk: int, nk: int):
+    """Same online-softmax recurrence as ``_flash_kernel`` (shared
+    ``_flash_body``); the refs are tiles of the NATIVE sequence-major
+    layouts (q (1, bq, 1, D) from the stream-as-heads view, k/v
+    (1, bk, 1, D) from the serving cache layout), so the only difference
+    is the slicing."""
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    _flash_body(iq, ik, lambda: q_ref[0, :, 0], lambda: k_ref[0, :, 0],
+                lambda: v_ref[0, :, 0], m_scr, l_scr, acc_scr,
+                scale=scale, causal=causal, window=window, bq=bq, bk=bk)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, :, 0] = _flash_finish(l_scr, acc_scr).astype(o_ref.dtype)
+
+
+def flash_attention_merged_bsd(
+    u: jnp.ndarray,  # (B, Sq, Hq, D) — RoPE'd residual stream viewed as heads
+    k: jnp.ndarray,  # (B, Sk, Hkv, D) — K*, NATIVE (sequence-major) layout
+    v: jnp.ndarray,  # (B, Sk, Hkv, D) — V*, native layout
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged-weight (Q/P-removed) flash PREFILL: stream-as-query.
+
+    Grid and softmax state as in ``flash_attention_bhsd``; the BlockSpecs
+    differ so that q tiles come straight from the (B, Sq, Hq, D) bitcast
+    of the residual stream and K*/V* tiles come from the serving cache's
+    native (B, Sk, Hkv, D) layout — the head-major transposes of q, k, v
+    AND o that bracket the generic kernel are simply not in the program.
+    The output lands as (B, Sq, Hq, D), a bitcast of the (B, Sq, d_model)
+    FFN-input stream the merged block consumes next.
+    """
+    B, Sq, Hq, D = u.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    kernel = functools.partial(_flash_kernel_merged, scale=scale,
+                               causal=causal, window=sliding_window,
+                               bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            # kv head h // G owns query head h of the stream view
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), u.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention_merged",
+    )(u, k, v)

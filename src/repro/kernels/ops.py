@@ -14,7 +14,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention import (flash_attention_bhsd,
+                                           flash_attention_merged_bsd)
 from repro.kernels.decode_attention import (decode_attention_bhsd,
                                             decode_attention_merged_bsd,
                                             decode_attention_paged_bhsd,
@@ -56,6 +57,47 @@ def flash_attention(
         causal=causal, sliding_window=sliding_window,
         block_q=bq, block_k=bk, interpret=interpret)
     return out.transpose(0, 2, 1, 3)  # back to (B, Sq, Hq, D)
+
+
+@partial(jax.jit, static_argnames=("n_kv_heads", "causal", "sliding_window",
+                                   "interpret", "block_q", "block_k"))
+def flash_attention_merged(
+    u: jnp.ndarray,  # (B, Sq, d_model) — RoPE'd residual stream = merged query
+    k: jnp.ndarray,  # (B, Sk, Hkv, D) — K*, native layout
+    v: jnp.ndarray,  # (B, Sk, Hkv, D) — V*, native layout
+    *,
+    n_kv_heads: int,
+    q_positions=None,  # accepted for API parity; kernel assumes arange
+    kv_positions=None,
+    causal: bool = True,
+    sliding_window: int = 0,
+    kv_valid=None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) flash PREFILL -> (B, Sq, d_model) FFN-input
+    stream.
+
+    No q projection exists in merged configs, so the stream is handed to
+    the kernel directly — the (B, Sq, Hq, D) view is a bitcast — and
+    K*/V* are consumed in their native sequence-major layout: none of the
+    four head-major transposes of the generic ``flash_attention`` wrapper
+    appear in the program.
+    """
+    assert kv_valid is None, "flash kernel: use the decode kernel for padded caches"
+    B, Sq, d = u.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    assert Hkv == n_kv_heads, (Hkv, n_kv_heads)
+    D = k.shape[3]
+    assert d % D == 0 and (d // D) % Hkv == 0, (d, D, Hkv)
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(Sk, block_k)
+    out = flash_attention_merged_bsd(
+        u.reshape(B, Sq, d // D, D), k, v,
+        causal=causal, sliding_window=sliding_window,
+        block_q=bq, block_k=bk, interpret=interpret)
+    return out.reshape(B, Sq, d)
 
 
 @partial(jax.jit, static_argnames=("sliding_window", "interpret", "block_k"))
@@ -191,25 +233,52 @@ def decode_attention_paged_merged(
 
 
 # ---------------------------------------------------------------------------
-# decode-kernel table: the kernel-layer face of the serving backend registry
+# attention-kernel table: the kernel-layer face of the serving backend
+# registries (models.backends' AttentionBackend AND PrefillBackend)
 # ---------------------------------------------------------------------------
 
-# keyed like models.backends (minus the impl axis — every wrapper here IS the
-# pallas route; ``interpret=True`` is the CPU-validation mode of the same
-# kernel).  models.attention's cores fetch their pallas path here, so "which
-# (cache layout × projection style) combos have a fused kernel" is read off
-# one table instead of four call sites.
-DECODE_KERNELS = {
-    ("dense", "generic"): decode_attention,
-    ("dense", "merged"): decode_attention_merged,
-    ("paged", "generic"): decode_attention_paged,
-    ("paged", "merged"): decode_attention_paged_merged,
+# keyed (phase, cache_kind, style) — like models.backends plus the phase
+# axis, minus the impl axis (every wrapper here IS the pallas route;
+# ``interpret=True`` is the CPU-validation mode of the same kernel).
+# models.attention's cores fetch their pallas path here, so "which (phase ×
+# cache layout × projection style) combos have a fused kernel" is read off
+# one table instead of eight call sites.  Prefill COMPUTE is cache-kind-
+# independent — paging changes where the collected KV is written (see
+# ``models.transformer``'s paged prefill backend), not the attention math —
+# so both prefill cache kinds map to the same flash wrapper.
+ATTENTION_KERNELS = {
+    ("decode", "dense", "generic"): decode_attention,
+    ("decode", "dense", "merged"): decode_attention_merged,
+    ("decode", "paged", "generic"): decode_attention_paged,
+    ("decode", "paged", "merged"): decode_attention_paged_merged,
+    ("prefill", "dense", "generic"): flash_attention,
+    ("prefill", "dense", "merged"): flash_attention_merged,
+    ("prefill", "paged", "generic"): flash_attention,
+    ("prefill", "paged", "merged"): flash_attention_merged,
 }
+
+
+def attention_kernel(phase: str, cache_kind: str, style: str):
+    """Pallas attention kernel wrapper for one (phase, cache_kind, style)
+    combo; unknown combos raise KeyError naming the registered ones."""
+    try:
+        return ATTENTION_KERNELS[(phase, cache_kind, style)]
+    except KeyError:
+        raise KeyError(
+            f"no Pallas attention kernel for (phase={phase!r}, "
+            f"cache_kind={cache_kind!r}, style={style!r}); available: "
+            f"{sorted(ATTENTION_KERNELS)}") from None
+
+
+# backward-compatible decode view of the unified table
+DECODE_KERNELS = {(ck, st): fn for (ph, ck, st), fn in ATTENTION_KERNELS.items()
+                  if ph == "decode"}
 
 
 def decode_kernel(cache_kind: str, style: str):
     """Pallas decode kernel wrapper for one (cache_kind, style) combo;
-    unknown combos raise KeyError naming the registered ones."""
+    unknown combos raise KeyError naming the registered ones.  (The decode
+    face of ``attention_kernel`` — kept for existing callers.)"""
     try:
         return DECODE_KERNELS[(cache_kind, style)]
     except KeyError:

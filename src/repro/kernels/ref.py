@@ -40,6 +40,27 @@ def ref_attention(
     return o.reshape(B, Hq, Sq, D).astype(q.dtype)
 
 
+def ref_flash_attention_merged(
+    u: jnp.ndarray,  # (B, Sq, d_model) — RoPE'd residual stream = merged query
+    k: jnp.ndarray,  # (B, Sk, Hkv, D) — native (sequence-major) layout
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    n_kv_heads: int,
+    causal: bool = True,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the merged flash PREFILL kernel: view the stream as
+    grouped heads, defer to the generic attention oracle, return in the
+    stream (FFN-input) basis."""
+    B, Sq, d = u.shape
+    D = k.shape[3]
+    o = ref_attention(
+        u.reshape(B, Sq, d // D, D).transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, sliding_window=sliding_window)
+    return o.transpose(0, 2, 1, 3).reshape(B, Sq, d)
+
+
 def ref_decode_attention(
     q: jnp.ndarray,  # (B, Hkv, G, D)
     k: jnp.ndarray,  # (B, Hkv, S, D)

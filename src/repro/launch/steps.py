@@ -18,8 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeSpec
-from repro.models import (forward_prefill, forward_seq, forward_step,
-                          init_cache, init_params)
+from repro.models import (DensePrefillDest, forward_prefill, forward_seq,
+                          forward_step, init_cache, init_params)
 from repro.training.optimizer import make_optimizer
 from repro.training.train_loop import make_train_step
 
@@ -92,10 +92,12 @@ def build_step(cfg: ModelConfig, kind: str, *, grad_accum: int = 1,
             return encode, ("params", "batch")
 
         def prefill(params, batch):
-            return forward_prefill(params, cfg, batch["inputs"],
-                                   cache_len=batch["inputs"].shape[1],
+            # dispatches through the models.backends PREFILL registry:
+            # merged qp configs lower the stream-as-query fast path
+            dest = DensePrefillDest(cache_len=batch["inputs"].shape[1])
+            return forward_prefill(params, cfg, batch["inputs"], dest,
                                    vision=batch.get("vision"), impl=impl,
-                                   unroll=unroll)
+                                   unroll=unroll, qkv_sharding=qkv_sharding)
         return prefill, ("params", "batch")
     if kind == "decode":
         def serve_step(params, token, cache):

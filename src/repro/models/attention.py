@@ -12,9 +12,12 @@ Three implementations:
   * ``impl="pallas"`` — TPU Pallas flash-attention kernel (kernels/).
   * ``impl="pallas_interpret"`` — same kernel, interpret mode (CPU tests).
 
-Decode cores fetch their Pallas route from ``kernels.ops.DECODE_KERNELS``,
-keyed (cache_kind, style) like the serving backend registry
+Cores fetch their Pallas route from ``kernels.ops.ATTENTION_KERNELS``,
+keyed (phase, cache_kind, style) like the serving backend registries
 (``models.backends``) — one table says which combos have fused kernels.
+``attention_core_merged`` is the prefill face of the paper's merged
+(Q/P-removed) layout: stream-as-query, no head-major transposes, output
+in the FFN-input basis.
 
 GQA is computed grouped (q reshaped to (…, n_kv, group, d)) — KV heads are
 never materialized repeated.
@@ -79,7 +82,7 @@ def attention_core(
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
-        return kops.flash_attention(
+        return kops.attention_kernel("prefill", "dense", "generic")(
             q, k, v,
             q_positions=q_positions, kv_positions=kv_positions,
             causal=causal, sliding_window=sliding_window, kv_valid=kv_valid,
@@ -108,6 +111,54 @@ def attention_core(
     out = jax.lax.map(one_chunk, (qg_c, qp_c))  # (n_chunks, B, chunk, Hkv, G, D)
     out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, D)
     return out
+
+
+def attention_core_merged(
+    u: jnp.ndarray,  # (B, Sq, d_model) — RoPE'd residual stream (merged query)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D) — K*, native (sequence-major) layout
+    v: jnp.ndarray,  # (B, Sk, Hkv, D) — V*
+    *,
+    q_positions: jnp.ndarray,  # (B, Sq) int32
+    kv_positions: jnp.ndarray,  # (B, Sk) int32
+    n_kv_heads: int,
+    causal: bool = True,
+    sliding_window: int = 0,
+    query_chunk: int = 1024,
+    impl: str = "xla",
+    cache_kind: str = "dense",
+) -> jnp.ndarray:
+    """Merged (Q/P-removed, paper Fig 1b) full-sequence attention — the
+    PREFILL sibling of ``decode_attention_core_merged``.
+
+    In ``skipless_merged`` qp-variant blocks the residual stream *is* the
+    query basis (Q folded into the producers of u) and no P projection
+    exists, so this core takes the stream directly — the grouped-head view
+    is a bitcast — and returns the (B, Sq, d_model) FFN-input stream.  The
+    pallas route is the stream-as-query flash kernel reading K*/V* tiles
+    in their native layout; numerics are identical to ``attention_core``
+    on the bitcast head view.  ``cache_kind`` selects the prefill row of
+    ``kernels.ops.ATTENTION_KERNELS`` (both cache kinds currently share
+    the flash kernel — paging changes the KV *write*, not the math).
+    """
+    B, Sq, d = u.shape
+    D = k.shape[3]
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.attention_kernel("prefill", cache_kind, "merged")(
+            u, k, v, n_kv_heads=n_kv_heads,
+            q_positions=q_positions, kv_positions=kv_positions,
+            causal=causal, sliding_window=sliding_window,
+            interpret=(impl == "pallas_interpret"),
+        )
+
+    out = attention_core(
+        u.reshape(B, Sq, d // D, D), k, v,
+        q_positions=q_positions, kv_positions=kv_positions,
+        causal=causal, sliding_window=sliding_window,
+        query_chunk=query_chunk, impl=impl)
+    return out.reshape(B, Sq, d)
 
 
 def decode_attention_core(

@@ -1,4 +1,4 @@
-"""AttentionBackend registry: the seam between the model and its KV cache.
+"""Backend registries: the seam between the model and its KV cache.
 
 The paper's point is that Q/P-free (KV-weights-only) attention is a *layout
 choice*, not a fork of the model code — but a serving stack accumulates
@@ -7,18 +7,25 @@ variants along three independent axes:
   cache_kind  how per-token KV is stored: "dense" (per-slot ring buffer,
               ``DecodeCache``) or "paged" (block-pool pages behind a block
               table, ``PagedDecodeCache``)
-  style       which projections the per-token step reads: "generic"
-              (projects q/k/v as the config dictates, covering unmerged
-              models AND the kp/vp merged variants whose eliminated
-              projection is an identity inside ``_project_qkv``) or
-              "merged" (the qp fast path: the residual stream IS the
-              query, no Q or P weights exist to read)
+  style       which projections the step reads: "generic" (projects q/k/v
+              as the config dictates, covering unmerged models AND the
+              kp/vp merged variants whose eliminated projection is an
+              identity inside ``_project_qkv``) or "merged" (the qp fast
+              path: the residual stream IS the query, no Q or P weights
+              exist to read)
   impl        "xla" | "pallas" | "pallas_interpret"
 
 Rather than one hand-wired entry point per combination (PR 1–2 grew four
 ``_attn_step*`` functions plus a ``forward_decode``/``forward_decode_paged``
-pair), every combination is a registered :class:`AttentionBackend` and the
-single ``models.transformer.forward_step`` looks its per-layer step up here.
+pair; PR 3's ``forward_prefill`` branched the same three axes inline),
+every combination is a registered backend, and BOTH serving phases have a
+single dispatcher looking their route up here:
+
+  * decode — :class:`AttentionBackend` (a per-layer, per-token attention
+    step) behind ``models.transformer.forward_step``;
+  * prefill — :class:`PrefillBackend` (a whole-sequence prefill program:
+    run the stack, collect KV, write it into the destination cache)
+    behind ``models.transformer.forward_prefill``.
 
 Registering a new backend (e.g. a quantized-cache kind or a fused step for
 a new merged variant) is::
@@ -34,10 +41,19 @@ a new merged variant) is::
 
     backends.register_backend("mykind", "generic", my_step)
 
+    def my_prefill(params, cfg, inputs, dest, ctx):
+        # dest is the cache-kind's destination (``DensePrefillDest`` /
+        # ``PagedPrefillDest`` / your own); ctx carries "vision", "impl",
+        # "unroll", "qkv_sharding", "true_len".
+        ...
+        return last_logits, filled_dest
+
+    backends.register_prefill_backend("mykind", "generic", my_prefill)
+
 Steps take ``impl`` from ``ctx`` so one function usually serves every impl
-key; ``register_backend`` registers all three impls by default.  Lookups of
-unregistered combinations fail loudly with the list of registered keys —
-there is no silent fallback path.
+key; both ``register_*`` helpers register all three impls by default.
+Lookups of unregistered combinations fail loudly with the list of
+registered keys — there is no silent fallback path.
 """
 from __future__ import annotations
 
@@ -102,3 +118,67 @@ def get_backend(cache_kind: str, style: str, impl: str) -> AttentionBackend:
 
 def registered_backends() -> List[Tuple[str, str, str]]:
     return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# prefill: whole-sequence programs, same (cache_kind, style, impl) key
+# ---------------------------------------------------------------------------
+
+# run(params, cfg, inputs, dest, ctx) -> (last_logits, filled destination)
+PrefillFn = Callable[..., Tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillBackend:
+    """One registered (cache_kind, style, impl) prefill route.
+
+    Unlike decode (a per-layer step), a prefill backend is the whole
+    program: run the stack over the prompt, collect per-layer KV, and
+    write it into ``dest`` — a ``DecodeCache`` under construction for
+    "dense", mapped pool pages for "paged".  ``fast_path`` is True when
+    the program reads no Q or P weights (the paper's merged qp layout
+    cashed in at prefill time); the engine surfaces it as
+    ``Engine.merged_prefill_fast_path``.
+    """
+    cache_kind: str
+    style: str
+    impl: str
+    run: PrefillFn
+    fast_path: bool = False
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        return (self.cache_kind, self.style, self.impl)
+
+
+_PREFILL_REGISTRY: Dict[Tuple[str, str, str], PrefillBackend] = {}
+
+
+def register_prefill_backend(cache_kind: str, style: str, run: PrefillFn, *,
+                             impls: Tuple[str, ...] = IMPLS,
+                             fast_path: bool = False) -> None:
+    """Register ``run`` under (cache_kind, style) for each impl in
+    ``impls``.  Re-registration overwrites (latest wins)."""
+    for impl in impls:
+        _PREFILL_REGISTRY[(cache_kind, style, impl)] = PrefillBackend(
+            cache_kind=cache_kind, style=style, impl=impl, run=run,
+            fast_path=fast_path)
+
+
+def get_prefill_backend(cache_kind: str, style: str,
+                        impl: str) -> PrefillBackend:
+    """Look up the prefill backend for one combo; unknown combos raise
+    KeyError naming the offending key and every registered one (no silent
+    fallback)."""
+    key = (cache_kind, style, impl)
+    try:
+        return _PREFILL_REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"no PrefillBackend registered for (cache_kind={cache_kind!r}, "
+            f"style={style!r}, impl={impl!r}); registered prefill combos: "
+            f"{registered_prefill_backends()}") from None
+
+
+def registered_prefill_backends() -> List[Tuple[str, str, str]]:
+    return sorted(_PREFILL_REGISTRY)

@@ -18,17 +18,26 @@ choice). The VLM interleave (cross-attn every Nth layer) scans over
 
 Modes:
   forward_train / forward_encode : full-sequence, returns logits (+aux)
-  forward_prefill                : full-sequence, fills a DecodeCache — or,
-                                   with ``pages=``, writes prompt KV
-                                   straight into mapped paged-pool blocks
+  forward_prefill                : full-sequence prefill DISPATCHER — the
+                                   destination (``DensePrefillDest`` /
+                                   ``PagedPrefillDest``) picks the
+                                   cache_kind axis and the config picks
+                                   the style axis (``prefill_style_key``)
+                                   of the ``models.backends`` PREFILL
+                                   registry; merged qp layouts run the
+                                   stream-as-query flash core end to end
   forward_step                   : one token vs either serving cache
                                    (serve_step body); the per-layer
                                    attention route is looked up in the
                                    ``models.backends`` registry keyed on
                                    (cache_kind, style, impl)
 
-``forward_decode`` / ``forward_decode_paged`` remain as deprecated shims
-over ``forward_step``.
+Both serving dispatchers validate at the boundary (ValueError — survives
+``python -O``, unlike the asserts they replaced) and fail unknown
+registry combos with KeyError before any compute.  ``forward_decode`` /
+``forward_decode_paged`` remain as deprecated shims over ``forward_step``;
+``forward_prefill``'s old ``cache_len=``/``pages=`` mega-signature remains
+as a deprecated shim over the ``dest=`` dispatch.
 """
 from __future__ import annotations
 
@@ -232,7 +241,12 @@ def _project_qkv(lp, cfg: ModelConfig, u, kv_src, merged: bool):
 
 
 def _self_attention_seq(lp, cfg: ModelConfig, u, positions, merged: bool,
-                        impl: str, qkv_sharding=None):
+                        impl: str, qkv_sharding=None,
+                        merged_core: bool = False, cache_kind: str = "dense"):
+    """``merged_core`` selects the stream-as-query attention core (merged
+    qp layouts only: q below is an identity view of u, so handing it to
+    ``attention_core_merged`` keeps every tensor in its native layout —
+    the prefill twin of the merged decode fast path)."""
     q, k, v = _project_qkv(lp, cfg, u, u, merged)
     if qkv_sharding is not None:
         # merged styles lose the TP sharding anchor for q (no wq matmul to
@@ -245,11 +259,19 @@ def _self_attention_seq(lp, cfg: ModelConfig, u, positions, merged: bool,
                    fraction=cfg.rope_fraction)
     k = apply_rope(k, positions, style=cfg.rope_style, theta=cfg.rope_theta,
                    fraction=cfg.rope_fraction)
+    B, S = u.shape[0], u.shape[1]
+    if merged_core:
+        out = attn_mod.attention_core_merged(
+            q.reshape(B, S, cfg.attn_dim), k, v,
+            q_positions=positions, kv_positions=positions,
+            n_kv_heads=cfg.n_kv_heads, causal=cfg.causal,
+            sliding_window=cfg.sliding_window, impl=impl,
+            query_chunk=cfg.query_chunk or S, cache_kind=cache_kind)
+        return out, (k, v)
     out = attn_mod.attention_core(
         q, k, v, q_positions=positions, kv_positions=positions,
         causal=cfg.causal, sliding_window=cfg.sliding_window, impl=impl,
         query_chunk=cfg.query_chunk or q.shape[1])
-    B, S = u.shape[0], u.shape[1]
     return out.reshape(B, S, cfg.attn_dim), (k, v)
 
 
@@ -313,7 +335,11 @@ def apply_block_seq(p, cfg: ModelConfig, kind: str, u, ctx) -> Tuple[jnp.ndarray
         if kind == "cross":
             cat, kv_ = _cross_attention_seq(p["attn"], cfg, x, ctx["vision"], merged, impl)
         else:
-            cat, kv_ = _self_attention_seq(p["attn"], cfg, x, positions, merged, impl)
+            cat, kv_ = _self_attention_seq(
+                p["attn"], cfg, x, positions, merged, impl,
+                qkv_sharding=ctx.get("qkv_sharding"),
+                merged_core=ctx.get("merged_core", False),
+                cache_kind=ctx.get("cache_kind", "dense"))
         kv = kv_
         return cat
 
@@ -444,15 +470,22 @@ def embed_inputs(params, cfg: ModelConfig, tokens_or_frames):
 def forward_seq(params, cfg: ModelConfig, inputs, *, positions=None,
                 vision=None, impl: str = "xla", remat: bool = False,
                 collect_kv: bool = False, unroll: bool = False,
-                stream_sharding=None, qkv_sharding=None):
-    """Full-sequence forward. inputs: int tokens (B,S) or frames (B,S,d)."""
+                stream_sharding=None, qkv_sharding=None,
+                merged_core: bool = False, cache_kind: str = "dense"):
+    """Full-sequence forward. inputs: int tokens (B,S) or frames (B,S,d).
+
+    ``merged_core`` routes self-attention through the stream-as-query
+    merged core (prefill backends set it for merged qp layouts);
+    ``cache_kind`` tags which prefill kernel-table row the core fetches.
+    """
     B, S = inputs.shape[0], inputs.shape[1]
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     h = embed_inputs(params, cfg, inputs)
     ctx = {"positions": positions, "vision": None if vision is None else
            vision.astype(h.dtype), "impl": impl,
-           "stream_sharding": stream_sharding, "qkv_sharding": qkv_sharding}
+           "stream_sharding": stream_sharding, "qkv_sharding": qkv_sharding,
+           "merged_core": merged_core, "cache_kind": cache_kind}
     h, aux, kvs = _scan_blocks_seq(params, cfg, h, ctx, collect_kv, remat,
                                    unroll=unroll)
     if "final_norm" in params:
@@ -573,71 +606,96 @@ def _last_logits_and_length(logits, true_len, B, S):
     return last, true_len
 
 
-def forward_prefill(params, cfg: ModelConfig, inputs, *, cache_len: int = 0,
-                    vision=None, impl: str = "xla", unroll: bool = False,
-                    qkv_sharding=None, true_len=None, full_cache: bool = False,
-                    pages=None):
-    """Cache-aware prefill.
+class DensePrefillDest(NamedTuple):
+    """Destination of a dense prefill: build a fresh ``DecodeCache`` of
+    ``cache_len`` positions.  ``full_cache`` keeps the cache ``cache_len``
+    long even for sliding-window configs (whose dense serving cache is a
+    window-sized ring buffer), for callers that need every prompt
+    position.  Both fields are STATIC (python ints/bools, resolved at
+    trace time)."""
+    cache_len: int
+    full_cache: bool = False
 
-    Dense (default): returns (last_token_logits (B,V), DecodeCache of
-    ``cache_len`` positions).
 
-    Paged (``pages=(k_pool, v_pool, block_ids)``): writes the prompt's KV
-    DIRECTLY into the mapped physical blocks of the pool — no worst-case
-    ``cache_len`` intermediate cache and no post-prefill scatter pass —
-    and returns (last_token_logits (B,V), (k_pool, v_pool)).  ``k_pool``/
-    ``v_pool`` are (L, NB, bs, Hkv, Dh) page pools; ``block_ids`` is
-    (ceil(S/bs),) int32 mapping this request's logical block j to its
-    physical page, with -1 for blocks that must NOT be written (prefix-
-    shared pages already holding the prefix — possibly extended by another
-    live request's decoded tokens — and bucket-padding blocks past the
-    prompt).  The sliding window never trims paged prompt KV: the paged
-    cache stores absolute positions and masks the window in the kernel.
+class PagedPrefillDest(NamedTuple):
+    """Destination of a direct-to-page paged prefill: the prompt's KV is
+    written straight into the mapped physical blocks of the pool — no
+    worst-case-length intermediate cache and no post-prefill scatter pass.
 
-    ``true_len`` (B,) int32 supports bucketed prompts: ``inputs`` may be
-    RIGHT-padded to a bucket length, and causality guarantees positions
-    < true_len are unaffected by the padding — the returned logits are
-    gathered at ``true_len - 1`` and the cache marks padded positions
-    empty (dense: kv_pos = -1; paged: in-page positions past ``length``,
-    hidden by the causal mask) with ``length = true_len``, so decode
-    overwrites them in order.  ``None`` means the whole sequence is real.
+    ``k_pool``/``v_pool`` are (L, NB, bs, Hkv, Dh) page pools;
+    ``block_ids`` is (ceil(S/bs),) int32 mapping this request's logical
+    block j to its physical page, with -1 for blocks that must NOT be
+    written (prefix-shared pages already holding the prefix — possibly
+    extended by another live request's decoded tokens — and bucket-padding
+    blocks past the prompt).  The sliding window never trims paged prompt
+    KV: the paged cache stores absolute positions and masks the window in
+    the kernel."""
+    k_pool: Any
+    v_pool: Any
+    block_ids: Any
 
-    ``full_cache`` (dense) keeps the cache ``cache_len`` long even for
-    sliding-window configs (whose dense serving cache is a window-sized
-    ring buffer), for callers that need every prompt position.
+
+def prefill_style_key(cfg: ModelConfig) -> str:
+    """Projection-style axis of the PREFILL backend registry key.
+
+    "merged" iff the whole-prompt forward can run the stream-as-query
+    attention core in every self-attention layer (qp variant of the merged
+    styles on attention-only stacks: the stream IS the query and no P
+    exists, so prefill attention reads only K*/V* weights).  kp/vp merged
+    variants stay "generic" — their eliminated projection is an identity
+    inside ``_project_qkv`` and no dedicated route exists (exactly as at
+    decode).  ssm/hybrid/vlm stacks are "generic" too (hybrid keeps P;
+    vlm interleaves cross-attention layers that read vision tokens).
     """
-    B, S = inputs.shape[0], inputs.shape[1]
-    logits, aux, kvs = forward_seq(params, cfg, inputs, vision=vision,
-                                   impl=impl, collect_kv=True, unroll=unroll,
-                                   qkv_sharding=qkv_sharding)
+    if layer_plan(cfg)["kind"] != "attn":
+        return "generic"
+    if cfg.block_style in ("skipless_merged", "residual_qpfree") \
+            and cfg.merged_variant == "qp":
+        return "merged"
+    return "generic"
 
-    if pages is not None:
-        assert layer_plan(cfg)["kind"] == "attn", (
-            "paged prefill supports attention-only stacks")
-        assert B == 1, "paged prefill inserts one request at a time"
-        k_pool, v_pool, block_ids = pages
-        last_logits, length = _last_logits_and_length(logits, true_len, B, S)
-        ks, vs = kvs  # (L, 1, S, Hkv, Dh)
-        L, bs, NB = k_pool.shape[0], k_pool.shape[2], k_pool.shape[1]
-        nbk = block_ids.shape[0]
-        pad = nbk * bs - S
-        assert pad >= 0, (S, nbk, bs)
-        if pad:
-            ks = jnp.pad(ks, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
-            vs = jnp.pad(vs, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
-        kb = ks[:, 0].reshape(L, nbk, bs, *ks.shape[3:])
-        vb = vs[:, 0].reshape(L, nbk, bs, *vs.shape[3:])
-        # unmapped/-1 destinations are clamped out of range and DROPPED:
-        # shared-prefix pages (owned content, maybe another request's
-        # decoded tail) and bucket-padding blocks are never touched
-        safe = jnp.where(block_ids >= 0, block_ids, NB).astype(jnp.int32)
-        k_pool = k_pool.at[:, safe].set(kb.astype(k_pool.dtype), mode="drop")
-        v_pool = v_pool.at[:, safe].set(vb.astype(v_pool.dtype), mode="drop")
-        return last_logits, (k_pool, v_pool)
 
-    assert cache_len > 0, "dense prefill needs cache_len"
-    cache_cfg = cfg.with_(sliding_window=0) if full_cache else cfg
-    cache = init_cache(cache_cfg, B, cache_len)
+def _prefill_seq(params, cfg: ModelConfig, inputs, ctx, *,
+                 merged_core: bool, cache_kind: str):
+    """The shared full-sequence pass every prefill backend starts with."""
+    return forward_seq(params, cfg, inputs, vision=ctx.get("vision"),
+                       impl=ctx.get("impl", "xla"), collect_kv=True,
+                       unroll=ctx.get("unroll", False),
+                       qkv_sharding=ctx.get("qkv_sharding"),
+                       merged_core=merged_core, cache_kind=cache_kind)
+
+
+def _finish_paged(cfg: ModelConfig, logits, kvs, dest: PagedPrefillDest, ctx,
+                  B: int, S: int):
+    """Scatter the collected prompt KV direct-to-page (see
+    ``PagedPrefillDest``) and gather the last real position's logits."""
+    k_pool, v_pool, block_ids = dest
+    last_logits, _ = _last_logits_and_length(logits, ctx.get("true_len"), B, S)
+    ks, vs = kvs  # (L, 1, S, Hkv, Dh)
+    L, bs, NB = k_pool.shape[0], k_pool.shape[2], k_pool.shape[1]
+    nbk = block_ids.shape[0]
+    pad = nbk * bs - S
+    if pad:
+        ks = jnp.pad(ks, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+        vs = jnp.pad(vs, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+    kb = ks[:, 0].reshape(L, nbk, bs, *ks.shape[3:])
+    vb = vs[:, 0].reshape(L, nbk, bs, *vs.shape[3:])
+    # unmapped/-1 destinations are clamped out of range and DROPPED:
+    # shared-prefix pages (owned content, maybe another request's
+    # decoded tail) and bucket-padding blocks are never touched
+    safe = jnp.where(block_ids >= 0, block_ids, NB).astype(jnp.int32)
+    k_pool = k_pool.at[:, safe].set(kb.astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[:, safe].set(vb.astype(v_pool.dtype), mode="drop")
+    return last_logits, (k_pool, v_pool)
+
+
+def _finish_dense(params, cfg: ModelConfig, inputs, logits, kvs,
+                  dest: DensePrefillDest, ctx, B: int, S: int):
+    """Place the collected prompt KV into a fresh ``DecodeCache`` (ring-
+    phased under a sliding window) and gather the last real logits."""
+    true_len = ctx.get("true_len")
+    cache_cfg = cfg.with_(sliding_window=0) if dest.full_cache else cfg
+    cache = init_cache(cache_cfg, B, dest.cache_len)
     Sc = cache.k.shape[2] if cache.k is not None else 0
 
     def place(kv_stacked):
@@ -682,9 +740,154 @@ def forward_prefill(params, cfg: ModelConfig, inputs, *, cache_len: int = 0,
         # NOTE: SSM state is not position-masked, so bucketed (padded)
         # prompts are unsupported here — the engine disables bucketing for
         # ssm/hybrid families.
-        ssm = _prefill_ssm_states(params, cfg, inputs, vision, impl, unroll)
+        ssm = _prefill_ssm_states(params, cfg, inputs, ctx.get("vision"),
+                                  ctx.get("impl", "xla"),
+                                  ctx.get("unroll", False))
         new = new._replace(ssm=ssm)
     return last_logits, new
+
+
+# --- the four registered prefill routes --------------------------------------
+
+def _prefill_dense_generic(params, cfg: ModelConfig, inputs, dest, ctx):
+    """Registered prefill backend ("dense", "generic"): projects q/k/v as
+    the config dictates (kp/vp merged variants pass through — their
+    eliminated projection is an identity) and fills a ``DecodeCache``.
+    Covers every family (attn/ssm/hybrid/vlm)."""
+    B, S = inputs.shape[0], inputs.shape[1]
+    logits, _, kvs = _prefill_seq(params, cfg, inputs, ctx,
+                                  merged_core=False, cache_kind="dense")
+    return _finish_dense(params, cfg, inputs, logits, kvs, dest, ctx, B, S)
+
+
+def _prefill_dense_merged(params, cfg: ModelConfig, inputs, dest, ctx):
+    """Registered prefill backend ("dense", "merged"): the Q/P-removed
+    PREFILL fast path — every self-attention layer runs the stream-as-
+    query core (``attention_core_merged`` / the merged flash kernel), so
+    the whole-prompt forward reads no Q or P weights and moves no
+    head-major transposes; the filled cache is byte-identical in layout
+    to the generic backend's."""
+    B, S = inputs.shape[0], inputs.shape[1]
+    logits, _, kvs = _prefill_seq(params, cfg, inputs, ctx,
+                                  merged_core=True, cache_kind="dense")
+    return _finish_dense(params, cfg, inputs, logits, kvs, dest, ctx, B, S)
+
+
+def _prefill_paged_generic(params, cfg: ModelConfig, inputs, dest, ctx):
+    """Registered prefill backend ("paged", "generic"): generic projection
+    path, prompt KV written DIRECT-TO-PAGE into the mapped pool blocks."""
+    B, S = inputs.shape[0], inputs.shape[1]
+    logits, _, kvs = _prefill_seq(params, cfg, inputs, ctx,
+                                  merged_core=False, cache_kind="paged")
+    return _finish_paged(cfg, logits, kvs, dest, ctx, B, S)
+
+
+def _prefill_paged_merged(params, cfg: ModelConfig, inputs, dest, ctx):
+    """Registered prefill backend ("paged", "merged"): stream-as-query
+    attention AND direct-to-page KV writes — prefill HBM traffic is the
+    prompt's own pages plus K*/V*-only weight reads."""
+    B, S = inputs.shape[0], inputs.shape[1]
+    logits, _, kvs = _prefill_seq(params, cfg, inputs, ctx,
+                                  merged_core=True, cache_kind="paged")
+    return _finish_paged(cfg, logits, kvs, dest, ctx, B, S)
+
+
+backends.register_prefill_backend("dense", "generic", _prefill_dense_generic)
+backends.register_prefill_backend("dense", "merged", _prefill_dense_merged,
+                                  fast_path=True)
+backends.register_prefill_backend("paged", "generic", _prefill_paged_generic)
+backends.register_prefill_backend("paged", "merged", _prefill_paged_merged,
+                                  fast_path=True)
+
+
+def forward_prefill(params, cfg: ModelConfig, inputs, dest=None, *,
+                    cache_len: int = 0, vision=None, impl: str = "xla",
+                    unroll: bool = False, qkv_sharding=None, true_len=None,
+                    full_cache: bool = False, pages=None):
+    """Cache-aware prefill — the single dispatcher over the
+    ``models.backends`` PREFILL registry.
+
+    ``dest`` names the destination cache and selects the cache_kind axis
+    of the registry key; the config selects the style axis
+    (``prefill_style_key``), so merged (Q/P-removed) "qp" models take the
+    stream-as-query fast path in every self-attention layer while every
+    other combination routes through the generic backend:
+
+    * ``DensePrefillDest(cache_len, full_cache=False)`` — returns
+      (last_token_logits (B, V), ``DecodeCache`` of ``cache_len``
+      positions).
+    * ``PagedPrefillDest(k_pool, v_pool, block_ids)`` — writes the
+      prompt's KV DIRECTLY into the mapped physical pool blocks (see the
+      dest's docstring for the block_ids contract) and returns
+      (last_token_logits (B, V), (k_pool, v_pool)).
+
+    ``true_len`` (B,) int32 supports bucketed prompts: ``inputs`` may be
+    RIGHT-padded to a bucket length, and causality guarantees positions
+    < true_len are unaffected by the padding — the returned logits are
+    gathered at ``true_len - 1`` and the cache marks padded positions
+    empty (dense: kv_pos = -1; paged: in-page positions past ``length``,
+    hidden by the causal mask) with ``length = true_len``, so decode
+    overwrites them in order.  ``None`` means the whole sequence is real.
+
+    Invalid requests (paged on a non-attention stack, paged batch > 1,
+    too few mapped blocks, non-positive dense cache_len) raise ValueError
+    at the dispatch boundary; unknown (cache_kind, style, impl) combos
+    raise the registry's KeyError.  DEPRECATED: calling without ``dest``
+    — the old ``cache_len=``/``pages=`` mega-signature — still works via
+    a compatibility shim but emits DeprecationWarning (matching the
+    ``forward_decode``/``forward_decode_paged`` shims).
+    """
+    if dest is None:
+        warnings.warn(
+            "forward_prefill's cache_len=/pages= mega-signature is "
+            "deprecated; pass dest=DensePrefillDest(cache_len, full_cache) "
+            "or dest=PagedPrefillDest(k_pool, v_pool, block_ids) — the "
+            "dispatcher routes it through the models.backends prefill "
+            "registry either way", DeprecationWarning, stacklevel=2)
+        dest = (PagedPrefillDest(*pages) if pages is not None
+                else DensePrefillDest(cache_len=cache_len,
+                                      full_cache=full_cache))
+    elif pages is not None or cache_len or full_cache:
+        # a half-migrated call mixing both conventions would silently drop
+        # the legacy arguments — fail instead of prefilling the wrong kind
+        raise ValueError(
+            "forward_prefill got both dest= and legacy cache_len=/pages=/"
+            "full_cache= arguments; the destination lives entirely in "
+            "dest — drop the legacy kwargs")
+
+    B, S = int(inputs.shape[0]), int(inputs.shape[1])
+    if isinstance(dest, PagedPrefillDest):
+        kind = "paged"
+        plan = layer_plan(cfg)
+        if plan["kind"] != "attn":
+            raise ValueError(
+                f"paged prefill supports attention-only stacks, not "
+                f"{plan['kind']!r} (family {cfg.family!r})")
+        if B != 1:
+            raise ValueError(
+                f"paged prefill inserts one request at a time, got batch "
+                f"size {B}")
+        nbk, bs = int(dest.block_ids.shape[0]), int(dest.k_pool.shape[2])
+        if nbk * bs < S:
+            raise ValueError(
+                f"PagedPrefillDest.block_ids maps {nbk} blocks of {bs} "
+                f"tokens — too few for a {S}-token prompt")
+    elif isinstance(dest, DensePrefillDest):
+        kind = "dense"
+        if dest.cache_len <= 0:
+            raise ValueError(
+                "dense prefill needs DensePrefillDest.cache_len > 0, got "
+                f"{dest.cache_len!r}")
+    else:
+        raise ValueError(
+            f"unknown prefill destination {type(dest).__name__!r}; expected "
+            "DensePrefillDest or PagedPrefillDest (or register a "
+            "PrefillBackend for a new cache kind)")
+
+    backend = backends.get_prefill_backend(kind, prefill_style_key(cfg), impl)
+    ctx = {"vision": vision, "impl": impl, "unroll": unroll,
+           "qkv_sharding": qkv_sharding, "true_len": true_len}
+    return backend.run(params, cfg, inputs, dest, ctx)
 
 
 def _prefill_ssm_states(params, cfg: ModelConfig, inputs, vision, impl,

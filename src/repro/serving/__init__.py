@@ -20,13 +20,17 @@ projection style.  It drives:
                              inside the prefill program — no worst-case-
                              length intermediate, no scatter pass.
 
-  * ``models.backends`` — the ATTENTION seam.  A registry keyed on
-    (cache_kind, style, impl) supplying the per-layer decode step that the
-    single jitted ``models.forward_step`` runs.  Fast paths today:
+  * ``models.backends`` — the ATTENTION seam, for BOTH serving phases.
+    Registries keyed on (cache_kind, style, impl) supply the per-layer
+    decode step that the single jitted ``models.forward_step`` runs AND
+    the whole-sequence prefill program that the single
+    ``models.forward_prefill`` dispatcher runs.  Fast paths today:
 
-      (dense|paged, merged, *)   Q/P-removed "qp" models: per-token
-                                 attention reads only K*/V* weights
-                                 (``Engine.merged_fast_path`` is True).
+      (dense|paged, merged, *)   Q/P-removed "qp" models: attention reads
+                                 only K*/V* weights, at decode
+                                 (``Engine.merged_fast_path``) and at
+                                 prefill (stream-as-query flash kernel,
+                                 ``Engine.merged_prefill_fast_path``).
       (dense|paged, generic, *)  everything else, including the kp/vp
                                  merged variants (their eliminated
                                  projection is an identity inside the
@@ -34,13 +38,16 @@ projection style.  It drives:
                                  the unmerged model, no fast-path route.
 
     impl ∈ {xla, pallas, pallas_interpret}; the pallas kernels behind each
-    combo are listed in ``kernels.ops.DECODE_KERNELS``.
+    combo are listed in ``kernels.ops.ATTENTION_KERNELS``, keyed
+    (phase, cache_kind, style).
 
 Extending: a new cache layout = subclass ``KVCacheAdapter`` + register its
 attention steps with ``models.backends.register_backend(cache_kind, style,
-step)`` (steps get ``(lp, cfg, u1, k_store, v_store, ctx)``); then serve it
-with ``Engine(cfg, params, sc, cache=MyAdapter(...))``.  Unregistered
-combos raise KeyError at Engine construction.
+step)`` (steps get ``(lp, cfg, u1, k_store, v_store, ctx)``) and its
+prefill program with ``register_prefill_backend(cache_kind, style, run)``
+(runs get ``(params, cfg, inputs, dest, ctx)``); then serve it with
+``Engine(cfg, params, sc, cache=MyAdapter(...))``.  Unregistered combos
+raise KeyError at Engine construction.
 
 Selecting a shipped backend: ``Engine(..., cache="dense"|"paged")`` or an
 adapter instance (``PagedCacheAdapter(block_size=16, n_blocks=256)``).

@@ -14,7 +14,8 @@ manager).  Each adapter owns its cache's
     admits, paged defers when the pool is exhausted), ``prefill`` (runs
     the adapter's own jitted prefill program: dense inserts a batch-1
     ``DecodeCache`` into the slot; paged writes prompt KV DIRECT-TO-PAGE
-    via ``forward_prefill(pages=…)`` — no worst-case-length intermediate
+    via ``forward_prefill(dest=PagedPrefillDest(…))`` — no
+    worst-case-length intermediate
     and no scatter pass), ``ensure_appendable`` / ``advance`` /
     ``release``.
 
@@ -33,7 +34,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distribution import sharding as shd
-from repro.models import forward_prefill, init_cache
+from repro.models import (DensePrefillDest, PagedPrefillDest, forward_prefill,
+                          init_cache)
 from repro.serving import kv_cache as kvc
 from repro.serving import paged_kv_cache as pkv
 
@@ -50,8 +52,12 @@ class KVCacheAdapter:
         raise NotImplementedError
 
     def build_prefill(self, impl: str, mesh=None, params_sharding=None,
-                      cache_shardings=None) -> None:
-        """Compile-wrap this cache kind's prefill program."""
+                      cache_shardings=None, qkv_sharding=None) -> None:
+        """Compile-wrap this cache kind's prefill program (a
+        ``models.forward_prefill`` dispatch — the cache kind picks the
+        destination, the model config picks the generic/merged style).
+        ``qkv_sharding`` re-anchors TP head sharding for merged layouts
+        under a mesh (no wq matmul to propagate it from)."""
         raise NotImplementedError
 
     # -- device state ---------------------------------------------------
@@ -120,10 +126,12 @@ class DenseCacheAdapter(KVCacheAdapter):
         self._cache = init_cache(cfg, sc.n_slots, sc.max_len)
 
     def build_prefill(self, impl, mesh=None, params_sharding=None,
-                      cache_shardings=None):
-        cfg, max_len = self.cfg, self.sc.max_len
+                      cache_shardings=None, qkv_sharding=None):
+        cfg = self.cfg
+        dest = DensePrefillDest(cache_len=self.sc.max_len)
         fn = lambda p, tk, vs, tl: forward_prefill(
-            p, cfg, tk, cache_len=max_len, vision=vs, impl=impl, true_len=tl)
+            p, cfg, tk, dest, vision=vs, impl=impl, true_len=tl,
+            qkv_sharding=qkv_sharding)
         if mesh is not None:
             self._prefill = jax.jit(
                 fn, in_shardings=(params_sharding, None, None, None))
@@ -168,7 +176,8 @@ class PagedCacheAdapter(KVCacheAdapter):
     ``block_size``/``n_blocks`` default to the ServeConfig's values at
     ``init`` (n_blocks 0 ⇒ dense-equivalent HBM: n_slots·max_len/bs pages).
     Prefill writes prompt KV directly into the mapped pages from inside
-    the prefill program (``forward_prefill(pages=…)``): the jit is donated
+    the prefill program (``forward_prefill(dest=PagedPrefillDest(…))``):
+    the jit is donated
     on the pools, so submit-time cache traffic is ONLY the prompt's own
     pages — no max_len-sized intermediate buffer, no second scatter pass.
     """
@@ -189,10 +198,11 @@ class PagedCacheAdapter(KVCacheAdapter):
             block_size=bs, n_blocks=n_blocks)
 
     def build_prefill(self, impl, mesh=None, params_sharding=None,
-                      cache_shardings=None):
+                      cache_shardings=None, qkv_sharding=None):
         cfg = self.cfg
         fn = lambda p, tk, tl, kp, vp, bids: forward_prefill(
-            p, cfg, tk, impl=impl, true_len=tl, pages=(kp, vp, bids))
+            p, cfg, tk, PagedPrefillDest(kp, vp, bids), impl=impl,
+            true_len=tl, qkv_sharding=qkv_sharding)
         if mesh is not None:
             pool_k, pool_v = cache_shardings.k, cache_shardings.v
             self._prefill = jax.jit(

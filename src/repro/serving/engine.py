@@ -13,17 +13,22 @@ fixed number of serving SLOTS and drives exactly TWO seams —
     sustains strictly more concurrent streams on mixed-length traffic,
     which is what amortizes the merged fast path's K*/V*-only weight
     reads).  Paged prefill writes prompt KV DIRECT-TO-PAGE from inside
-    the prefill program (``forward_prefill(pages=…)``, pools donated):
-    no worst-case-length intermediate cache, no post-prefill scatter.
-  * an ``AttentionBackend`` registry (``models.backends``) keyed on
-    (cache_kind, style, impl): the jitted ``serve_step`` is ONE function,
+    the prefill program (``forward_prefill(dest=PagedPrefillDest(…))``,
+    pools donated): no worst-case-length intermediate cache, no
+    post-prefill scatter.
+  * the ``models.backends`` registries, keyed (cache_kind, style, impl)
+    for BOTH serving phases: the jitted ``serve_step`` is ONE function,
     ``models.forward_step``, which looks up its per-layer attention route
-    there.  Merged (Q/P-removed) "qp" models take the fast path — per-
-    token attention reads only the K*/V* weights, the stream is the
-    query, the output lands in the FFN-input basis; kp/vp merged variants
-    route through the generic backend (their eliminated projection is an
-    identity inside ``_project_qkv``) token-identically to their unmerged
-    source model.  Unknown combos fail at Engine construction with the
+    in the ``AttentionBackend`` registry, and the adapter's prefill
+    program is ONE dispatcher, ``models.forward_prefill``, which looks up
+    its whole-sequence route in the ``PrefillBackend`` registry.  Merged
+    (Q/P-removed) "qp" models take the fast path in both phases — the
+    stream is the query, attention reads only the K*/V* weights, the
+    output lands in the FFN-input basis (``merged_fast_path`` /
+    ``merged_prefill_fast_path``); kp/vp merged variants route through
+    the generic backends (their eliminated projection is an identity
+    inside ``_project_qkv``) token-identically to their unmerged source
+    model.  Unknown combos fail at Engine construction with the
     registry's KeyError, not mid-serve.
 
 Scheduling facts (unchanged by the redesign): prompt lengths are BUCKETED
@@ -60,7 +65,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.distribution import sharding as shd
-from repro.models import backends, forward_step, serving_style_key
+from repro.models import (backends, forward_step, prefill_style_key,
+                          serving_style_key)
 from repro.serving.adapters import KVCacheAdapter, make_adapter
 
 
@@ -151,10 +157,12 @@ class Engine:
             cache = "dense"
         self.kv: KVCacheAdapter = (make_adapter(cache, sc)
                                    if isinstance(cache, str) else cache)
-        # resolve the serve_step's backend NOW: an unknown (cache_kind,
+        # resolve BOTH phases' backends NOW: an unknown (cache_kind,
         # style, impl) combo must fail at construction, not mid-serve
         self.backend = backends.get_backend(self.kv.kind,
                                             serving_style_key(cfg), impl)
+        self.prefill_backend = backends.get_prefill_backend(
+            self.kv.kind, prefill_style_key(cfg), impl)
 
         self.free_slots = list(range(sc.n_slots))
         self.active: Dict[int, Request] = {}
@@ -213,7 +221,7 @@ class Engine:
         else:
             self._decode = jax.jit(fwd, donate_argnums=(2,))
         self.kv.build_prefill(impl, mesh=mesh, params_sharding=psh,
-                              cache_shardings=csh)
+                              cache_shardings=csh, qkv_sharding=qkv_sh)
         # introspection alias (tests count compiled prefill buckets here)
         self._prefill = self.kv._prefill
 
@@ -240,6 +248,16 @@ class Engine:
         streams only K*/V* from HBM.  kp/vp merged variants return False —
         they serve through the generic backend (still token-exact)."""
         return self.backend.fast_path
+
+    @property
+    def merged_prefill_fast_path(self) -> bool:
+        """True when this engine's prefill routes through the merged
+        (Q/P-removed) PREFILL fast path: every self-attention layer of the
+        prompt forward runs the stream-as-query flash core — no Q or P
+        weight reads, no head-major transposes — cutting prefill HBM
+        traffic and TTFT.  kp/vp merged variants and non-attention stacks
+        return False (generic prefill backend, still token-exact)."""
+        return self.prefill_backend.fast_path
 
     def compiled_decode(self):
         """Lower + compile serve_step for inspection (no execution).

@@ -1,7 +1,10 @@
 """The serving API seam: every (cache_kind × style × impl) combo serves
-through the single registry entry point (``models.forward_step`` looking
-up ``models.backends``) and emits greedy tokens identical to the unmerged
-dense XLA full-sequence oracle; unknown combos fail loudly."""
+through the single registry entry points — ``models.forward_step`` for
+decode AND ``models.forward_prefill`` for prefill, both looking up
+``models.backends`` — and emits greedy tokens identical to the unmerged
+dense XLA full-sequence oracle; unknown combos fail loudly; invalid
+prefill requests raise ValueError at the dispatch boundary (not asserts —
+they must survive ``python -O``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +13,10 @@ import pytest
 from repro.configs import get_config, reduce_config
 from repro.core import merge_skipless
 from repro.kernels import ops as kops
-from repro.models import backends, forward_seq, init_params, serving_style_key
+from repro.models import (DensePrefillDest, PagedPrefillDest, backends,
+                          forward_prefill, forward_seq, forward_step,
+                          init_paged_cache, init_params, prefill_style_key,
+                          serving_style_key)
 from repro.serving import Engine, PagedCacheAdapter, ServeConfig
 
 MAX_NEW = 4
@@ -73,9 +79,69 @@ def test_cross_product_matches_unmerged_dense_xla_oracle(
     assert eng.merged_fast_path == (style == "qp"), (
         "only the qp variant has a fast-path route; kp/vp and unmerged "
         "models serve through the generic backend")
+    assert eng.prefill_backend.key == (cache_kind, prefill_style_key(cfg),
+                                       impl)
+    assert eng.merged_prefill_fast_path == (style == "qp"), (
+        "prefill mirrors decode: only qp takes the stream-as-query fast "
+        "path")
     outs = eng.generate(prompts, max_new_tokens=MAX_NEW)
     for p, o, want in zip(prompts, outs, oracle):
         assert o == want, (cache_kind, style, impl, list(p[:3]))
+
+
+def _greedy_via_prefill_and_step(cfg, params, prompt, n, cache_kind, impl):
+    """Greedy-decode ``n`` tokens straight through the dispatchers: one
+    ``forward_prefill`` into the cache kind's destination, then
+    ``forward_step`` against the resulting cache."""
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    S = toks.shape[1]
+    if cache_kind == "dense":
+        lg, cache = forward_prefill(params, cfg, toks, DensePrefillDest(48),
+                                    impl=impl)
+    else:
+        bs = 8
+        pc = init_paged_cache(cfg, n_blocks=8, block_size=bs, n_slots=1,
+                              max_len=S + n)
+        nbk = -(-S // bs)
+        lg, (k, v) = forward_prefill(
+            params, cfg, toks,
+            PagedPrefillDest(pc.k, pc.v, jnp.arange(nbk, dtype=jnp.int32)),
+            impl=impl)
+        mb = pc.block_tables.shape[1]
+        cache = pc._replace(k=k, v=v,
+                            block_tables=jnp.arange(
+                                mb, dtype=jnp.int32)[None, :],
+                            length=jnp.full((1,), S, jnp.int32))
+    out = [int(jnp.argmax(lg[0, :cfg.vocab_size]))]
+    for _ in range(n - 1):
+        lg, cache = forward_step(params, cfg,
+                                 jnp.asarray(out[-1:], jnp.int32), cache,
+                                 impl=impl)
+        out.append(int(jnp.argmax(lg[0, :cfg.vocab_size])))
+    return out
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("style", ["generic", "qp", "kp", "vp"])
+@pytest.mark.parametrize("cache_kind", ["dense", "paged"])
+def test_prefill_grid_matches_unmerged_dense_xla_oracle(
+        setup, cache_kind, style, impl):
+    """The PREFILL acceptance grid, mirroring the decode grid: every
+    (cache ∈ {dense,paged}) × (style ∈ {generic,qp,kp,vp}) × (impl ∈
+    {xla,pallas}) combo prefills through the one registry dispatcher and
+    (with decode continuation) emits the unmerged dense XLA oracle's
+    exact greedy stream.  qp must resolve to the merged (fast-path)
+    prefill backend; kp/vp must stay pinned to the generic one."""
+    models, prompts, oracle = setup
+    cfg, params = models[style]
+    backend = backends.get_prefill_backend(cache_kind, prefill_style_key(cfg),
+                                           impl)
+    assert backend.fast_path == (style == "qp"), (
+        "only the qp variant has a stream-as-query prefill route")
+    for p, want in zip(prompts, oracle):
+        got = _greedy_via_prefill_and_step(cfg, params, p, MAX_NEW,
+                                           cache_kind, impl)
+        assert got == want, (cache_kind, style, impl, list(p[:3]))
 
 
 def test_registry_rejects_unknown_combos():
@@ -89,15 +155,153 @@ def test_registry_rejects_unknown_combos():
         kops.decode_kernel("dense", "quantized")
 
 
+def test_prefill_registry_rejects_unknown_combos():
+    with pytest.raises(KeyError, match="no PrefillBackend registered"):
+        backends.get_prefill_backend("ring", "generic", "xla")
+    with pytest.raises(KeyError, match="registered prefill combos"):
+        backends.get_prefill_backend("dense", "quantized", "xla")
+    with pytest.raises(KeyError, match="cuda"):
+        backends.get_prefill_backend("dense", "generic", "cuda")
+    with pytest.raises(KeyError, match="no Pallas attention kernel"):
+        kops.attention_kernel("train", "dense", "generic")
+    with pytest.raises(KeyError, match="no Pallas attention kernel"):
+        kops.attention_kernel("prefill", "dense", "quantized")
+
+
+def test_prefill_dispatcher_rejects_invalid_requests():
+    """The paged-prefill preconditions are ValueErrors at the dispatch
+    boundary — they must survive ``python -O`` (the asserts they replaced
+    vanish under it)."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    kp = jnp.zeros((cfg.n_layers, 4, 8, cfg.n_kv_heads, cfg.d_head))
+    ids1 = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError, match="one request at a time"):
+        forward_prefill(params, cfg, jnp.zeros((2, 8), jnp.int32),
+                        PagedPrefillDest(kp, kp, ids1))
+    with pytest.raises(ValueError, match="too few"):
+        forward_prefill(params, cfg, jnp.zeros((1, 16), jnp.int32),
+                        PagedPrefillDest(kp, kp, ids1))
+    with pytest.raises(ValueError, match="cache_len > 0"):
+        forward_prefill(params, cfg, jnp.zeros((1, 8), jnp.int32),
+                        DensePrefillDest(0))
+    with pytest.raises(ValueError, match="unknown prefill destination"):
+        forward_prefill(params, cfg, jnp.zeros((1, 8), jnp.int32), "dense")
+    with pytest.raises(ValueError, match="both dest= and legacy"):
+        # a half-migrated call mixing conventions must fail, not silently
+        # drop the legacy arguments and prefill the wrong cache kind
+        forward_prefill(params, cfg, jnp.zeros((1, 8), jnp.int32),
+                        DensePrefillDest(16), pages=(kp, kp, ids1))
+    scfg = reduce_config(get_config("mamba2-2.7b"))
+    sparams = init_params(jax.random.PRNGKey(0), scfg)
+    with pytest.raises(ValueError, match="attention-only"):
+        forward_prefill(sparams, scfg, jnp.zeros((1, 8), jnp.int32),
+                        PagedPrefillDest(kp, kp, ids1))
+
+
+def test_prefill_shim_and_dispatcher_are_token_identical(setup):
+    """The deprecated ``cache_len=``/``pages=`` mega-signature is a pure
+    shim: it must warn, and its logits, cache, and greedy continuation
+    must be bit-identical to the ``dest=`` dispatcher's."""
+    models, prompts, _ = setup
+    cfg, params = models["qp"]
+    toks = jnp.asarray(prompts[0], jnp.int32)[None]
+    with pytest.warns(DeprecationWarning, match="mega-signature"):
+        lg_old, c_old = forward_prefill(params, cfg, toks, cache_len=32)
+    lg_new, c_new = forward_prefill(params, cfg, toks, DensePrefillDest(32))
+    assert jnp.array_equal(lg_old, lg_new)
+    for a, b in zip(jax.tree.leaves(c_old), jax.tree.leaves(c_new)):
+        assert jnp.array_equal(a, b)
+
+    def greedy(lg, cache):
+        out = [int(jnp.argmax(lg[0, :cfg.vocab_size]))]
+        for _ in range(3):
+            lg, cache = forward_step(params, cfg,
+                                     jnp.asarray(out[-1:], jnp.int32), cache)
+            out.append(int(jnp.argmax(lg[0, :cfg.vocab_size])))
+        return out
+
+    assert greedy(lg_old, c_old) == greedy(lg_new, c_new)
+
+
+def _count_dot_generals(jaxpr) -> int:
+    """dot_general eqns in a (closed) jaxpr, recursing into inner jaxprs
+    (scan bodies, pallas_call kernels, …)."""
+    n = 0
+
+    def walk(jx):
+        nonlocal n
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "dot_general":
+                n += 1
+            for p in eqn.params.values():
+                for sub in jax.tree.leaves(
+                        p, is_leaf=lambda x: isinstance(
+                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        walk(sub.jaxpr)
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        walk(sub)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return n
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("cache_kind", ["dense", "paged"])
+def test_merged_prefill_lowers_no_q_projection_matmul(setup, cache_kind,
+                                                      impl):
+    """The acceptance check, analogous to test_paged_prefill's
+    no-max_len-buffer assertion: the lowered merged prefill program must
+    contain NO Q-projection (or P-projection) matmul.  The qp-merged
+    rewrite of the same model differs from its unmerged source by exactly
+    the wq and wp matmuls per scanned layer body — so the merged jaxpr
+    must count exactly two fewer dot_generals, and the merged param tree
+    must hold no wq/wp to read in the first place."""
+    models, prompts, _ = setup
+    cfg, params = models["generic"]
+    mcfg, mparams = models["qp"]
+    assert "wq" not in mparams["layers"]["attn"], "no Q weights exist"
+    assert "wp" not in mparams["layers"]["attn"], "no P weights exist"
+    toks = jnp.asarray(prompts[0], jnp.int32)[None]
+
+    if cache_kind == "dense":
+        def prog(c):
+            return lambda p, t: forward_prefill(p, c, t, DensePrefillDest(32),
+                                                impl=impl)
+        jx_g = jax.make_jaxpr(prog(cfg))(params, toks)
+        jx_m = jax.make_jaxpr(prog(mcfg))(mparams, toks)
+    else:
+        S = toks.shape[1]
+        pc = init_paged_cache(cfg, n_blocks=4, block_size=8, n_slots=1,
+                              max_len=16)
+        ids = jnp.arange(-(-S // 8), dtype=jnp.int32)
+
+        def prog(c):
+            return lambda p, t, kp, vp: forward_prefill(
+                p, c, t, PagedPrefillDest(kp, vp, ids), impl=impl)
+        jx_g = jax.make_jaxpr(prog(cfg))(params, toks, pc.k, pc.v)
+        jx_m = jax.make_jaxpr(prog(mcfg))(mparams, toks, pc.k, pc.v)
+
+    n_g, n_m = _count_dot_generals(jx_g), _count_dot_generals(jx_m)
+    assert n_m == n_g - 2, (
+        f"merged prefill must drop exactly the wq and wp matmuls: generic "
+        f"has {n_g} dot_generals, merged has {n_m}")
+
+
 def test_registry_covers_the_serving_grid():
     keys = set(backends.registered_backends())
+    pkeys = set(backends.registered_prefill_backends())
     for ck in backends.CACHE_KINDS:
         for st in backends.STYLES:
             for impl in backends.IMPLS:
                 assert (ck, st, impl) in keys, (ck, st, impl)
+                assert (ck, st, impl) in pkeys, ("prefill", ck, st, impl)
     for ck in backends.CACHE_KINDS:
         assert backends.get_backend(ck, "merged", "xla").fast_path
         assert not backends.get_backend(ck, "generic", "xla").fast_path
+        assert backends.get_prefill_backend(ck, "merged", "xla").fast_path
+        assert not backends.get_prefill_backend(ck, "generic", "xla").fast_path
 
 
 def test_engine_rejects_unknown_cache_kind():
@@ -121,3 +325,22 @@ def test_serving_style_key():
     hybrid = reduce_config(get_config("hymba-1.5b")).with_(
         block_style="skipless_merged")
     assert serving_style_key(hybrid) == "generic"
+
+
+def test_prefill_style_key():
+    base = reduce_config(get_config("mistral-7b"))
+    assert prefill_style_key(base) == "generic"
+    merged = base.with_(block_style="skipless_merged", merged_variant="qp")
+    assert prefill_style_key(merged) == "merged"
+    kp = base.with_(block_style="skipless_merged", merged_variant="kp",
+                    n_kv_heads=4)
+    assert prefill_style_key(kp) == "generic"
+    ssm = reduce_config(get_config("mamba2-2.7b"))
+    assert prefill_style_key(ssm) == "generic"
+    # vlm qp DECODES merged (self-attn steps only) but PREFILLS generic:
+    # the interleaved cross-attention layers read vision tokens, which the
+    # stream-as-query whole-prompt core does not cover
+    vlm = reduce_config(get_config("llama3.2-vision-11b")).with_(
+        block_style="skipless_merged", merged_variant="qp")
+    assert serving_style_key(vlm) == "merged"
+    assert prefill_style_key(vlm) == "generic"

@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduce_config
-from repro.models import (forward_decode, forward_prefill, forward_seq,
-                          init_params)
+from repro.models import (DensePrefillDest, forward_decode, forward_prefill,
+                          forward_seq, init_params)
 
 CAUSAL = [a for a in ASSIGNED_ARCHS if get_config(a).causal]
 
@@ -27,7 +27,7 @@ def test_decode_matches_full_forward(arch):
                                    (B, cfg.n_vision_tokens, cfg.d_model))
     full, _, _ = forward_seq(params, cfg, toks, vision=vision)
     last, cache = forward_prefill(params, cfg, toks[:, :S_pre],
-                                  cache_len=S + 2, vision=vision)
+                                  DensePrefillDest(S + 2), vision=vision)
     step = jax.jit(lambda p, t, c: forward_decode(p, cfg, t, c))
     errs = [np.max(np.abs(np.asarray(last) - np.asarray(full[:, S_pre - 1])))]
     for t in range(S_pre, S):
@@ -43,7 +43,7 @@ def test_sliding_window_ring_buffer_wraps():
     B, S = 1, 20  # window 6 -> wraps 3x
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
     full, _, _ = forward_seq(params, cfg, toks)
-    _, cache = forward_prefill(params, cfg, toks[:, :4], cache_len=32)
+    _, cache = forward_prefill(params, cfg, toks[:, :4], DensePrefillDest(32))
     assert cache.k.shape[2] == 6  # ring buffer is window-sized
     step = jax.jit(lambda p, t, c: forward_decode(p, cfg, t, c))
     for t in range(4, S):
@@ -68,8 +68,8 @@ def test_merged_fastpath_greedy_token_equivalence(n_kv):
     B, S_pre, n_new = 2, 6, 8
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, S_pre), 0,
                               cfg.vocab_size)
-    lg0, c0 = forward_prefill(params, cfg, toks, cache_len=32)
-    lg1, c1 = forward_prefill(mparams, mcfg, toks, cache_len=32)
+    lg0, c0 = forward_prefill(params, cfg, toks, DensePrefillDest(32))
+    lg1, c1 = forward_prefill(mparams, mcfg, toks, DensePrefillDest(32))
     ck = c1  # separate cache for the pallas-kernel route
     step0 = jax.jit(lambda p, t, c: forward_decode(p, cfg, t, c))
     step1 = jax.jit(lambda p, t, c: forward_decode(p, mcfg, t, c))
@@ -104,8 +104,8 @@ def test_decode_merged_equals_decode_vanilla():
     B, S_pre = 2, 6
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, S_pre + 4), 0,
                               cfg.vocab_size)
-    _, c0 = forward_prefill(params, cfg, toks[:, :S_pre], cache_len=16)
-    _, c1 = forward_prefill(mparams, mcfg, toks[:, :S_pre], cache_len=16)
+    _, c0 = forward_prefill(params, cfg, toks[:, :S_pre], DensePrefillDest(16))
+    _, c1 = forward_prefill(mparams, mcfg, toks[:, :S_pre], DensePrefillDest(16))
     step0 = jax.jit(lambda p, t, c: forward_decode(p, cfg, t, c))
     step1 = jax.jit(lambda p, t, c: forward_decode(p, mcfg, t, c))
     for t in range(S_pre, S_pre + 4):

@@ -65,6 +65,69 @@ def test_flash_attention_block_invariance(bq, bk, win, seed):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
 
 
+@pytest.mark.parametrize("dtype,B,S,Hq,Hkv,D,causal,win", [
+    (jnp.float32, 2, 128, 4, 2, 64, True, 0),
+    (jnp.bfloat16, 2, 128, 4, 2, 64, True, 0),
+    (jnp.float32, 1, 256, 8, 1, 32, True, 0),   # MQA
+    (jnp.float32, 2, 128, 4, 4, 64, True, 48),  # MHA + sliding window
+    (jnp.float32, 1, 64, 6, 3, 128, True, 16),  # GQA + window, d=128
+])
+def test_flash_attention_merged(B, S, Hq, Hkv, D, causal, win, dtype):
+    """Stream-as-query merged flash PREFILL kernel vs its oracle: the
+    stream (B, S, d) is the query, K*/V* are read in native layout."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    u = jax.random.normal(ks[0], (B, S, Hq * D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = ops.flash_attention_merged(u, k, v, n_kv_heads=Hkv, causal=causal,
+                                     sliding_window=win, block_q=64,
+                                     block_k=64, interpret=True)
+    want = ref.ref_flash_attention_merged(u, k, v, n_kv_heads=Hkv,
+                                          causal=causal, sliding_window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_merged_matches_generic():
+    """The merged kernel is the generic kernel in a different layout: on
+    the bitcast head view the two must agree to float tolerance."""
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    u = jax.random.normal(ks[0], (B, S, Hq * D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    merged = ops.flash_attention_merged(u, k, v, n_kv_heads=Hkv,
+                                        sliding_window=8, block_q=32,
+                                        block_k=32, interpret=True)
+    generic = ops.flash_attention(u.reshape(B, S, Hq, D), k, v,
+                                  sliding_window=8, block_q=32, block_k=32,
+                                  interpret=True).reshape(B, S, Hq * D)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(generic),
+                               atol=3e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bq=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    win=st.sampled_from([0, 8, 40]),
+    seed=st.integers(0, 100),
+)
+def test_flash_attention_merged_block_invariance(bq, bk, win, seed):
+    """Output must not depend on the BlockSpec tiling (property)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    u = jax.random.normal(ks[0], (1, 64, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.float32)
+    out = ops.flash_attention_merged(u, k, v, n_kv_heads=2, causal=True,
+                                     sliding_window=win, block_q=bq,
+                                     block_k=bk, interpret=True)
+    want = ref.ref_flash_attention_merged(u, k, v, n_kv_heads=2, causal=True,
+                                          sliding_window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
 # ---------------------------------------------------------------------------
 # decode attention
 # ---------------------------------------------------------------------------

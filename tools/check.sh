@@ -5,12 +5,16 @@
 #
 # Installs the optional dev deps best-effort (offline containers still run:
 # property-based tests skip via tests/_hypothesis_stub.py) and runs the
-# full suite with src/ on PYTHONPATH.
+# full suite with src/ on PYTHONPATH, then the same `ruff --select F` lint
+# as the CI lint job — local tier-1 matches what CI gates.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-python -m pip install -q -r requirements-dev.txt 2>/dev/null ||
+DEV_DEPS_OK=1
+python -m pip install -q -r requirements-dev.txt 2>/dev/null || {
+    DEV_DEPS_OK=0
     echo "[check] dev-dep install failed (offline?) — property tests will skip"
+}
 
 # the dep install is best-effort, the test runner is NOT: a missing pytest
 # must fail the check loudly, not "succeed" by running nothing
@@ -21,3 +25,22 @@ python -c "import pytest" 2>/dev/null || {
 }
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
+
+# lint: pyflakes-class checks only (F = undefined names, unused imports,
+# redefinitions) over src/, exactly what CI's `lint` job runs.  ruff comes
+# from the same requirements-dev.txt install as pytest; if that install
+# SUCCEEDED yet ruff is still missing, the environment is misconfigured —
+# fail loudly rather than silently skipping what CI will gate.  Only a
+# failed (offline) install downgrades to a loud skip, since tier-1's tests
+# must still run in network-less containers.
+if python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check --select F --isolated src
+    echo "[check] ruff --select F clean"
+elif [ "$DEV_DEPS_OK" = 1 ]; then
+    echo "[check] FATAL: dev-dep install succeeded but ruff is missing —" >&2
+    echo "[check] lint did NOT run; CI's lint job WILL run it" >&2
+    exit 1
+else
+    echo "[check] WARNING: ruff unavailable (offline dev-dep install) —" >&2
+    echo "[check] lint SKIPPED here; CI's lint job still gates it" >&2
+fi
