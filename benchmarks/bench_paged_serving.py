@@ -34,6 +34,15 @@ unmerged source, for both cache kinds, plus the measured TTFT delta from
 the serve rows.  Merged must move strictly fewer bytes — the wq/wp reads
 are simply not in the program (stream-as-query fast path).
 
+A fourth section re-runs the equal-HBM stream comparison WITH the
+config's sliding window (the dense cache is then a window-sized ring per
+slot, and the paged cache is a bounded RING of ceil(window/bs)+1 recycled
+table slots per request — serving/paged_kv_cache).  It asserts all four
+greedy streams identical, the windowed paged page high-water ≤ the ring
+bound for EVERY request, and reports the admitted-streams and
+pages-per-request deltas (ring vs the unbounded absolute tables the paged
+cache used before recycling).
+
   PYTHONPATH=src python -m benchmarks.bench_paged_serving
 """
 from __future__ import annotations
@@ -57,6 +66,10 @@ DENSE_SLOTS = 4
 BLOCK = 8
 MAX_NEW = 8
 N_REQ = 16
+# windowed section: the reduced-mistral window; smaller pages so the ring
+# bound (ceil(16/4)+1 = 5 pages/request) bites visibly on long requests
+WIN = 16
+WIN_BLOCK = 4
 
 
 def _workload(vocab: int):
@@ -69,12 +82,31 @@ def _workload(vocab: int):
     return prompts
 
 
+def _workload_windowed(vocab: int):
+    """Short-skewed ragged traffic (where a window-sized dense slot still
+    over-reserves) plus window-ROLLING long requests (where the ring bound
+    bites: 24+8 = 32 tokens would need 8 absolute pages, the ring holds
+    them at ≤ 5)."""
+    rng = np.random.RandomState(1)
+    lens = [4, 8] * 6 + [24] * 4
+    prompts = [rng.randint(0, vocab, size=(n,)).astype(np.int32)
+               for n in lens]
+    prompts[1] = prompts[0].copy()  # identical pair -> shared prefix pages
+    return prompts
+
+
 def _make_engine(cfg, params, cache_kind: str) -> Engine:
-    n_blocks = DENSE_SLOTS * MAX_LEN // BLOCK
+    # equal HBM on both sides of each section: a dense slot costs a
+    # max_len (windowless) or window-sized (windowed) KV stretch, and the
+    # paged pool gets exactly the same bytes as fixed-size pages
+    sc_dense = min(MAX_LEN, cfg.sliding_window) if cfg.sliding_window \
+        else MAX_LEN
+    bs = WIN_BLOCK if cfg.sliding_window else BLOCK
+    n_blocks = DENSE_SLOTS * sc_dense // bs
     if cache_kind == "paged":
         # same bytes, but slots are just batch rows: admission is by pages
         sc = ServeConfig(n_slots=N_REQ, max_len=MAX_LEN)
-        cache = PagedCacheAdapter(block_size=BLOCK, n_blocks=n_blocks)
+        cache = PagedCacheAdapter(block_size=bs, n_blocks=n_blocks)
     else:
         sc = ServeConfig(n_slots=DENSE_SLOTS, max_len=MAX_LEN)
         cache = "dense"
@@ -83,7 +115,8 @@ def _make_engine(cfg, params, cache_kind: str) -> Engine:
 
 def _serve(cfg, params, cache_kind: str):
     eng = _make_engine(cfg, params, cache_kind)
-    prompts = _workload(cfg.vocab_size)
+    prompts = _workload_windowed(cfg.vocab_size) if cfg.sliding_window \
+        else _workload(cfg.vocab_size)
     eng.generate(prompts[:1], max_new_tokens=2)  # warm the jit caches
     eng2 = _make_engine(cfg, params, cache_kind)
     t0 = time.perf_counter()
@@ -99,7 +132,16 @@ def _serve(cfg, params, cache_kind: str):
     if cache_kind == "paged":
         row.update(shared_pages=eng2.pm.allocator.n_shared_hits,
                    cow=eng2.pm.allocator.n_cow,
-                   peak_pages=eng2.pm.allocator.peak_used)
+                   peak_pages=eng2.pm.allocator.peak_used,
+                   recycled=eng2.pm.allocator.n_recycled,
+                   ring_bound=eng2.pm.ring_bound,
+                   page_hwm=(max(eng2.pm.request_page_hwm)
+                             if eng2.pm.request_page_hwm else 0))
+        if cfg.sliding_window:
+            # pages the same requests would pin WITHOUT ring recycling
+            # (absolute tables hold every block until the request ends)
+            row["pages_unbounded"] = max(
+                -(-(len(p) + MAX_NEW - 1) // eng2.pm.bs) for p in prompts)
     return row, outs
 
 
@@ -134,19 +176,9 @@ def _prefill_traffic(dense: Engine, paged: Engine, bucket: int):
                 paged_legacy_bytes=b_legacy)
 
 
-def run():
-    # window off: the dense cache is then max_len-sized per slot (with a
-    # window it is a ring ≤ window and the HBM budgets aren't comparable —
-    # paged keeps absolute positions and does not yet recycle out-of-window
-    # pages; see ROADMAP follow-up)
-    base = reduce_config(get_config("mistral-7b")).with_(
-        block_style="skipless", dtype="float32", param_dtype="float32",
-        sliding_window=0)
-    params = init_params(jax.random.PRNGKey(0), base)
-    # O(1) streams so merged/unmerged logits compare well-conditioned
-    params["embed"]["table"] = params["embed"]["table"] * 50.0
-    mparams, mcfg = merge_skipless(params, base, "qp")
-
+def _serve_grid(base, params, mcfg, mparams):
+    """The four-cell equal-HBM serve comparison (cache × weights) for one
+    config; returns the rows with every greedy stream cross-asserted."""
     rows, streams = [], {}
     for wname, (c, p) in (("skipless", (base, params)),
                           ("merged_qp", (mcfg, mparams))):
@@ -160,11 +192,29 @@ def run():
     ref = streams[("skipless", "dense")]
     for key, outs in streams.items():
         assert outs == ref, f"greedy stream diverged for {key}"
-    # equal HBM must buy strictly more concurrency on ragged traffic
     for wname in ("skipless", "merged_qp"):
         d = next(r for r in rows if r["weights"] == wname and r["cache"] == "dense")
         p = next(r for r in rows if r["weights"] == wname and r["cache"] == "paged")
         assert p["cache_bytes"] == d["cache_bytes"], (p["cache_bytes"], d["cache_bytes"])
+    return rows
+
+
+def run():
+    # windowless first: the dense cache is max_len-sized per slot — the
+    # baseline absolute-table paged comparison
+    base = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        sliding_window=0)
+    params = init_params(jax.random.PRNGKey(0), base)
+    # O(1) streams so merged/unmerged logits compare well-conditioned
+    params["embed"]["table"] = params["embed"]["table"] * 50.0
+    mparams, mcfg = merge_skipless(params, base, "qp")
+
+    rows = _serve_grid(base, params, mcfg, mparams)
+    # equal HBM must buy strictly more concurrency on ragged traffic
+    for wname in ("skipless", "merged_qp"):
+        d = next(r for r in rows if r["weights"] == wname and r["cache"] == "dense")
+        p = next(r for r in rows if r["weights"] == wname and r["cache"] == "paged")
         assert p["peak_streams"] > d["peak_streams"], (
             "paged pool must sustain more concurrent streams than the dense "
             f"cache at equal HBM: {p['peak_streams']} vs {d['peak_streams']}")
@@ -202,11 +252,41 @@ def run():
                 "merged prefill must move strictly fewer bytes than the "
                 "generic prefill (no wq/wp reads)", kind, row)
         merged_prefill.append(row)
-    return rows, prefill, merged_prefill
+
+    # windowed section: the SAME equal-HBM grid with the model's sliding
+    # window restored — dense slots shrink to window-sized rings, paged
+    # tables become bounded rings of ceil(window/bs)+1 recycled slots, so
+    # the two sides are finally HBM-comparable with sliding_window > 0
+    base_w = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        sliding_window=WIN)
+    params_w = init_params(jax.random.PRNGKey(0), base_w)
+    params_w["embed"]["table"] = params_w["embed"]["table"] * 50.0
+    mparams_w, mcfg_w = merge_skipless(params_w, base_w, "qp")
+    rows_w = _serve_grid(base_w, params_w, mcfg_w, mparams_w)
+    bound = -(-WIN // WIN_BLOCK) + 1
+    for r in rows_w:
+        if r["cache"] != "paged":
+            continue
+        d = next(x for x in rows_w if x["weights"] == r["weights"]
+                 and x["cache"] == "dense")
+        assert r["ring_bound"] == bound, (r["ring_bound"], bound)
+        assert 0 < r["page_hwm"] <= bound, (
+            "windowed paged page high-water must stay within the ring "
+            f"bound ceil(window/block)+1 = {bound}", r)
+        assert r["recycled"] > 0, (
+            "the window-rolling requests must actually recycle pages", r)
+        assert r["pages_unbounded"] > bound, (
+            "workload must contain requests the ring bound genuinely caps")
+        assert r["peak_streams"] > d["peak_streams"], (
+            "windowed paged pool must sustain more concurrent streams than "
+            f"window-sized dense slots at equal HBM: {r['peak_streams']} "
+            f"vs {d['peak_streams']}")
+    return rows, prefill, merged_prefill, rows_w
 
 
 def main():
-    rows, prefill, merged_prefill = run()
+    rows, prefill, merged_prefill, rows_w = run()
     print(f"{N_REQ} requests, prompts 4..28 tok, +{MAX_NEW} new; equal "
           f"cache HBM ({rows[0]['cache_bytes']/1e6:.2f} MB)")
     hdr = ("weights", "cache", "peak_streams", "tok_s", "ttft_ms",
@@ -245,6 +325,25 @@ def main():
         print(f"  measured TTFT ({kind}): generic {g['ttft_ms']:.1f} ms -> "
               f"merged {m['ttft_ms']:.1f} ms (CPU, illustrative)")
     print("merged < generic prefill bytes OK (both cache kinds)")
+
+    bound = -(-WIN // WIN_BLOCK) + 1
+    print(f"\nsliding window {WIN} (block {WIN_BLOCK}, ring bound "
+          f"{bound} pages/request; equal cache HBM "
+          f"{rows_w[0]['cache_bytes']/1e6:.2f} MB):")
+    hdr_w = ("weights", "cache", "peak_streams", "deferred", "preempted",
+             "page_hwm", "recycled", "cow")
+    print(" ".join(f"{h:>12}" for h in hdr_w))
+    for r in rows_w:
+        print(" ".join(f"{str(r.get(h, '-')):>12}" for h in hdr_w))
+    pw = next(r for r in rows_w if r["cache"] == "paged")
+    dw = next(r for r in rows_w if r["cache"] == "dense")
+    print(f"  admitted-streams delta: paged {pw['peak_streams']} vs dense "
+          f"{dw['peak_streams']} at equal HBM")
+    print(f"  pages-per-request delta: ring high-water {pw['page_hwm']} "
+          f"<= bound {bound}, vs {pw['pages_unbounded']} pages the longest "
+          f"request would pin without recycling")
+    print("all four windowed greedy streams token-identical; page "
+          "high-water <= ring bound OK")
 
 
 if __name__ == "__main__":

@@ -50,8 +50,9 @@ def main() -> None:
                            f";prefill_bytes_saved="
                            f"{m['prefill_bytes_saved_frac']:.3f}")
             elif name.startswith("paged_serving"):
-                # run() -> (serve rows, prefill rows, merged-prefill rows)
-                rows, prefill, merged_prefill = rows
+                # run() -> (serve rows, prefill rows, merged-prefill rows,
+                #           windowed serve rows)
+                rows, prefill, merged_prefill, rows_w = rows
                 dn = next(r for r in rows if r["weights"] == "merged_qp"
                           and r["cache"] == "dense")
                 pg = next(r for r in rows if r["weights"] == "merged_qp"
@@ -60,10 +61,18 @@ def main() -> None:
                 saved = 1.0 - pf["paged_bytes"] / pf["paged_legacy_bytes"]
                 mp = merged_prefill[-1]
                 msaved = 1.0 - mp["paged_merged"] / mp["paged_generic"]
+                wd = next(r for r in rows_w if r["weights"] == "merged_qp"
+                          and r["cache"] == "dense")
+                wp = next(r for r in rows_w if r["weights"] == "merged_qp"
+                          and r["cache"] == "paged")
                 derived = (f"streams_paged_vs_dense="
                            f"{pg['peak_streams']}v{dn['peak_streams']}"
                            f";prefill_bytes_saved={saved:.3f}"
-                           f";merged_prefill_bytes_saved={msaved:.3f}")
+                           f";merged_prefill_bytes_saved={msaved:.3f}"
+                           f";windowed_streams="
+                           f"{wp['peak_streams']}v{wd['peak_streams']}"
+                           f";windowed_page_hwm={wp['page_hwm']}"
+                           f"of{wp['ring_bound']}")
             elif name.startswith("numerics"):
                 o = next(r for r in rows if r["init"] == "orthogonal"
                          and r["dtype"] == "float32")

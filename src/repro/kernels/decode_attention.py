@@ -30,9 +30,13 @@ owns a per-request block table (B, MB) of physical page ids (-1 =
 unmapped).  The sequential kv axis of the grid walks LOGICAL blocks; the
 block table is a scalar-prefetch operand so the k/v BlockSpec index_maps
 gather the mapped physical page (clamped to page 0 when unmapped — the
-in-kernel mask zeroes those scores).  kv positions are not stored: logical
-block j covers positions [j·bs, (j+1)·bs), so the kernel derives them from
-the grid index and the online-softmax update is shared with the dense
+in-kernel mask zeroes those scores).  kv positions are not stored: with
+absolute addressing logical block j covers positions [j·bs, (j+1)·bs);
+with ring addressing (``ring_blocks`` > 0 — sliding-window tables bounded
+at ceil(window/bs)+1 recycled slots, see ``kernels.paging``) slot j holds
+the latest absolute block ≡ j (mod ring) not beyond the query's block, so
+the kernel reconstructs positions from the grid index and the query
+position.  Either way the online-softmax update is shared with the dense
 variants unchanged.
 """
 from __future__ import annotations
@@ -225,20 +229,28 @@ def decode_attention_merged_bsd(
 # paged variants: block-table gather over a physical page pool
 # ---------------------------------------------------------------------------
 
-def _paged_kpos(block_id, j, bs):
-    """Positions covered by logical block ``j`` (-1 everywhere if unmapped).
+def _paged_kpos(block_id, j, bs, qpos, ring):
+    """Positions covered by table slot ``j`` (-1 everywhere if unmapped).
 
+    Absolute addressing (``ring`` = 0): slot j IS logical block j.  Ring
+    addressing: slot j holds the latest absolute block ≡ j (mod ring) the
+    request has entered — reconstructed from the query's block ``lb``;
+    never-entered slots (b < 0) are unmapped anyway but masked for safety.
     2D iota then rank-reduce: TPU vector units have no 1D iota."""
-    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
-    return jnp.where(block_id >= 0, kpos, -1)
+    off = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    if ring:
+        lb = qpos // bs
+        b = lb - ((lb + ring - j) % ring)
+        return jnp.where((block_id >= 0) & (b >= 0), b * bs + off, -1)
+    return jnp.where(block_id >= 0, j * bs + off, -1)
 
 
 def _decode_kernel_paged(bt_ref, q_ref, k_ref, v_ref, qpos_ref, o_ref,
                          m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                         bs: int, nb: int):
+                         bs: int, nb: int, ring: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
-    kpos = _paged_kpos(bt_ref[b, j], j, bs)
+    kpos = _paged_kpos(bt_ref[b, j], j, bs, qpos_ref[0, 0], ring)
     _online_softmax_block(j, q_ref[0, 0], k_ref[0, :, 0], v_ref[0, :, 0],
                           kpos, qpos_ref[0, 0], m_scr, l_scr, acc_scr,
                           scale=scale, window=window)
@@ -256,19 +268,24 @@ def decode_attention_paged_bhsd(
     q_position: jnp.ndarray,  # (B, 1) int32
     *,
     sliding_window: int = 0,
+    ring_blocks: int = 0,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Generic paged decode: like ``decode_attention_bhsd`` but the kv-block
     axis walks the slot's block table and gathers physical pages.  The pool
     keeps the serving cache's native (…, bs, Hkv, D) page layout — pages are
-    written once at append time and never transposed."""
+    written once at append time and never transposed.  ``ring_blocks`` > 0
+    means the table is ring-addressed (windowed requests recycle pages; see
+    ``kernels.paging``) and slot positions are reconstructed from the query
+    position."""
     B, Hkv, G, D = q.shape
     NB, bs = k_pool.shape[0], k_pool.shape[1]
     MB = block_tables.shape[1]
     scale = 1.0 / math.sqrt(D)
 
     kernel = functools.partial(_decode_kernel_paged, scale=scale,
-                               window=sliding_window, bs=bs, nb=MB)
+                               window=sliding_window, bs=bs, nb=MB,
+                               ring=ring_blocks)
 
     def page(b, h, j, bt):  # physical page for logical block j of slot b
         return (jnp.maximum(bt[b, j], 0), 0, h, 0)
@@ -303,10 +320,10 @@ def decode_attention_paged_bhsd(
 
 def _decode_kernel_paged_merged(bt_ref, u_ref, k_ref, v_ref, qpos_ref, o_ref,
                                 m_scr, l_scr, acc_scr, *, scale: float,
-                                window: int, bs: int, nb: int):
+                                window: int, bs: int, nb: int, ring: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
-    kpos = _paged_kpos(bt_ref[b, j], j, bs)
+    kpos = _paged_kpos(bt_ref[b, j], j, bs, qpos_ref[0, 0], ring)
     _online_softmax_block(j, u_ref[0], k_ref[0, :, 0], v_ref[0, :, 0],
                           kpos, qpos_ref[0, 0], m_scr, l_scr, acc_scr,
                           scale=scale, window=window)
@@ -324,6 +341,7 @@ def decode_attention_paged_merged_bsd(
     q_position: jnp.ndarray,  # (B, 1) int32
     *,
     sliding_window: int = 0,
+    ring_blocks: int = 0,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Merged (Q/P-removed) paged decode: stream-as-query over a page pool.
@@ -331,7 +349,8 @@ def decode_attention_paged_merged_bsd(
     Combines the paper's serving fast path (no Q projection to read, output
     straight into the FFN-input basis) with vLLM-style paging — per token
     the only HBM traffic besides the stream is K*/V* weight reads and the
-    slot's mapped pages."""
+    slot's mapped pages.  ``ring_blocks`` as in
+    ``decode_attention_paged_bhsd``."""
     B, Hq, D = u.shape
     NB, bs, Hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
     assert Hq % Hkv == 0, (Hq, Hkv)
@@ -340,7 +359,8 @@ def decode_attention_paged_merged_bsd(
     scale = 1.0 / math.sqrt(D)
 
     kernel = functools.partial(_decode_kernel_paged_merged, scale=scale,
-                               window=sliding_window, bs=bs, nb=MB)
+                               window=sliding_window, bs=bs, nb=MB,
+                               ring=ring_blocks)
 
     def page(b, h, j, bt):
         return (jnp.maximum(bt[b, j], 0), 0, h, 0)

@@ -20,6 +20,7 @@ from repro.kernels.decode_attention import (decode_attention_bhsd,
                                             decode_attention_merged_bsd,
                                             decode_attention_paged_bhsd,
                                             decode_attention_paged_merged_bsd)
+from repro.kernels.paging import paged_ring_active
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -196,14 +197,20 @@ def decode_attention_paged(
     sliding_window: int = 0,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Generic decode attention over a paged KV pool (block-table gather)."""
+    """Generic decode attention over a paged KV pool (block-table gather).
+
+    Ring addressing (windowed tables bounded at ceil(window/bs)+1 recycled
+    slots) is derived from the static window and the table width — see
+    ``kernels.paging`` — so callers never thread a ring flag."""
     B, Hq, D = q.shape
     Hkv = k_pool.shape[2]
     G = Hq // Hkv
+    ring = paged_ring_active(sliding_window, k_pool.shape[1],
+                             block_tables.shape[1])
     out = decode_attention_paged_bhsd(
         q.reshape(B, Hkv, G, D), k_pool, v_pool,
         block_tables.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
-        sliding_window=sliding_window, interpret=interpret)
+        sliding_window=sliding_window, ring_blocks=ring, interpret=interpret)
     return out.reshape(B, Hq, D)
 
 
@@ -220,15 +227,18 @@ def decode_attention_paged_merged(
     sliding_window: int = 0,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Merged (Q/P-removed) decode fast path over a paged KV pool."""
+    """Merged (Q/P-removed) decode fast path over a paged KV pool.  Ring
+    addressing derived as in ``decode_attention_paged``."""
     B, d = u.shape
     Hkv, D = k_pool.shape[2], k_pool.shape[3]
     assert Hkv == n_kv_heads, (Hkv, n_kv_heads)
     assert d % D == 0 and (d // D) % Hkv == 0, (d, D, Hkv)
+    ring = paged_ring_active(sliding_window, k_pool.shape[1],
+                             block_tables.shape[1])
     out = decode_attention_paged_merged_bsd(
         u.reshape(B, d // D, D), k_pool, v_pool,
         block_tables.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
-        sliding_window=sliding_window, interpret=interpret)
+        sliding_window=sliding_window, ring_blocks=ring, interpret=interpret)
     return out.reshape(B, d)
 
 

@@ -155,11 +155,29 @@ def ref_paged_gather(
     return k.reshape(B, MB * bs, *pool.shape[2:])
 
 
-def ref_paged_positions(block_tables: jnp.ndarray, block_size: int
+def ref_paged_positions(block_tables: jnp.ndarray, block_size: int,
+                        q_position: jnp.ndarray = None, ring_blocks: int = 0
                         ) -> jnp.ndarray:
-    """kv positions of the densified view: logical block j covers
-    [j*bs, (j+1)*bs); unmapped blocks are -1 (empty-slot convention)."""
+    """kv positions of the densified view; unmapped blocks are -1
+    (empty-slot convention).
+
+    Absolute addressing (``ring_blocks`` = 0): logical block j covers
+    [j*bs, (j+1)*bs).  Ring addressing (windowed tables bounded at
+    ceil(window/bs)+1 recycled slots — ``kernels.paging``): slot j holds
+    the latest absolute block ≡ j (mod ring) not beyond the query's block,
+    reconstructed from ``q_position``; never-entered slots (b < 0) are -1.
+    """
     B, MB = block_tables.shape
+    if ring_blocks:
+        j = jnp.arange(MB, dtype=jnp.int32)[None, :]
+        lb = (jnp.asarray(q_position, jnp.int32) // block_size)
+        lb = lb.reshape(B, 1)
+        b = lb - ((lb + ring_blocks - j) % ring_blocks)
+        pos = jnp.repeat(b * block_size, block_size, axis=1) + \
+            jnp.tile(jnp.arange(block_size, dtype=jnp.int32), MB)[None, :]
+        mapped = jnp.repeat((block_tables >= 0) & (b >= 0), block_size,
+                            axis=1)
+        return jnp.where(mapped, pos, -1)
     pos = jnp.arange(MB * block_size, dtype=jnp.int32)[None, :]
     mapped = jnp.repeat(block_tables >= 0, block_size, axis=1)
     return jnp.where(mapped, pos, -1)
@@ -173,13 +191,16 @@ def ref_decode_attention_paged(
     q_position: jnp.ndarray,  # (B,) int32
     *,
     sliding_window: int = 0,
+    ring_blocks: int = 0,
 ) -> jnp.ndarray:
     """Oracle for the paged decode kernel: gather the slot's pages into a
-    dense (B, S, Hkv, D) view and defer to the dense decode oracle."""
+    dense (B, S, Hkv, D) view and defer to the dense decode oracle.
+    ``ring_blocks`` > 0 reconstructs ring-addressed slot positions from
+    the query position (``ref_paged_positions``)."""
     bs = k_pool.shape[1]
     k = ref_paged_gather(k_pool, block_tables).transpose(0, 2, 1, 3)
     v = ref_paged_gather(v_pool, block_tables).transpose(0, 2, 1, 3)
-    kv_pos = ref_paged_positions(block_tables, bs)
+    kv_pos = ref_paged_positions(block_tables, bs, q_position, ring_blocks)
     return ref_decode_attention(q, k, v, kv_pos, q_position[:, None],
                                 sliding_window=sliding_window)
 
@@ -193,6 +214,7 @@ def ref_decode_attention_paged_merged(
     *,
     n_kv_heads: int,
     sliding_window: int = 0,
+    ring_blocks: int = 0,
 ) -> jnp.ndarray:
     """Oracle for the merged paged kernel: stream reshaped to grouped heads,
     pages densified, output back in the stream (FFN-input) basis."""
@@ -201,5 +223,5 @@ def ref_decode_attention_paged_merged(
     G = d // D // n_kv_heads
     o = ref_decode_attention_paged(
         u.reshape(B, n_kv_heads, G, D), k_pool, v_pool, block_tables,
-        q_position, sliding_window=sliding_window)
+        q_position, sliding_window=sliding_window, ring_blocks=ring_blocks)
     return o.reshape(B, d)

@@ -29,6 +29,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paging import paged_ring_active
+
 NEG_INF = -1e30
 
 
@@ -265,11 +267,28 @@ def decode_attention_core_positions(
 # paged decode cores (block-table gather over a physical page pool)
 # ---------------------------------------------------------------------------
 
-def paged_kv_positions(block_tables: jnp.ndarray, block_size: int
-                       ) -> jnp.ndarray:
-    """kv positions of a slot's densified page view: logical block j covers
-    [j*bs, (j+1)*bs); unmapped (-1) blocks stay -1 (empty-slot mask)."""
+def paged_kv_positions(block_tables: jnp.ndarray, block_size: int,
+                       q_position: Optional[jnp.ndarray] = None,
+                       ring_blocks: int = 0) -> jnp.ndarray:
+    """kv positions of a slot's densified page view; unmapped (-1) blocks
+    stay -1 (empty-slot mask).
+
+    Absolute addressing (``ring_blocks`` = 0): logical block j covers
+    [j*bs, (j+1)*bs).  Ring addressing (windowed tables bounded at
+    ceil(window/bs)+1 recycled slots — see ``kernels.paging``): slot j
+    holds the latest absolute block ≡ j (mod ring) not beyond the query's
+    current block, so positions are reconstructed from ``q_position``;
+    slots reconstructing to b < 0 (never entered) are -1."""
     B, MB = block_tables.shape
+    if ring_blocks:
+        j = jnp.arange(MB, dtype=jnp.int32)[None, :]
+        lb = (jnp.asarray(q_position, jnp.int32) // block_size).reshape(B, 1)
+        b = lb - ((lb + ring_blocks - j) % ring_blocks)
+        pos = jnp.repeat(b * block_size, block_size, axis=1) + \
+            jnp.tile(jnp.arange(block_size, dtype=jnp.int32), MB)[None, :]
+        mapped = jnp.repeat((block_tables >= 0) & (b >= 0), block_size,
+                            axis=1)
+        return jnp.where(mapped, pos, -1)
     pos = jnp.arange(MB * block_size, dtype=jnp.int32)[None, :]
     mapped = jnp.repeat(block_tables >= 0, block_size, axis=1)
     return jnp.broadcast_to(jnp.where(mapped, pos, -1), (B, MB * block_size))
@@ -297,6 +316,9 @@ def decode_attention_core_paged(
     The pallas path hands the pool and table straight to the paged kernel
     (pages are gathered block-by-block inside the grid); the XLA path
     densifies the slot's logical view first and defers to the dense core.
+    Ring addressing (windowed tables bounded at ceil(window/bs)+1 recycled
+    slots) is derived from the window and the table width
+    (``kernels.paging``), with positions reconstructed per query.
     """
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
@@ -307,10 +329,11 @@ def decode_attention_core_paged(
             interpret=(impl == "pallas_interpret"))
 
     bs = k_pool.shape[1]
+    ring = paged_ring_active(sliding_window, bs, block_tables.shape[1])
     return decode_attention_core_positions(
         q, _paged_gather(k_pool, block_tables),
         _paged_gather(v_pool, block_tables),
-        kv_positions=paged_kv_positions(block_tables, bs),
+        kv_positions=paged_kv_positions(block_tables, bs, q_position, ring),
         q_position=q_position, sliding_window=sliding_window, impl=impl)
 
 

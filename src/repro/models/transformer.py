@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import paging
 from repro.models import attention as attn_mod
 from repro.models import backends
 from repro.models import ffn as ffn_mod
@@ -624,12 +625,13 @@ class PagedPrefillDest(NamedTuple):
 
     ``k_pool``/``v_pool`` are (L, NB, bs, Hkv, Dh) page pools;
     ``block_ids`` is (ceil(S/bs),) int32 mapping this request's logical
-    block j to its physical page, with -1 for blocks that must NOT be
-    written (prefix-shared pages already holding the prefix — possibly
-    extended by another live request's decoded tokens — and bucket-padding
-    blocks past the prompt).  The sliding window never trims paged prompt
-    KV: the paged cache stores absolute positions and masks the window in
-    the kernel."""
+    (absolute) block j to its physical page, with -1 for blocks that must
+    NOT be written (prefix-shared pages already holding the prefix —
+    possibly extended by another live request's decoded tokens — bucket-
+    padding blocks past the prompt, and, under a sliding window, prompt
+    blocks wholly out of every future query's window: a windowed request's
+    table is a bounded ring of ceil(window/bs)+1 recycled slots and only
+    the live window's blocks are mapped — ``kernels.paging``)."""
     k_pool: Any
     v_pool: Any
     block_ids: Any
@@ -1251,14 +1253,31 @@ class PagedDecodeCache(NamedTuple):
 
     ``k``/``v`` are pools of physical pages shared by every serving slot;
     ``block_tables[b, j]`` maps slot b's logical block j to a physical page
-    (-1 = unmapped).  Page content beyond a slot's ``length`` may be stale
-    (freed/reused pages are not scrubbed) — the causal mask hides it, and
-    decode always writes position ``length`` before attending.
+    (-1 = unmapped).  Sliding-window configs bound the table at
+    ``ceil(window/bs)+1`` RING slots (absolute block j lives at slot
+    j % ring and out-of-window pages are recycled in place); readers
+    reconstruct each slot's absolute positions from ``length``, so the
+    ring phase is carried by the cache exactly as the dense ring buffer
+    carries it (``kernels.paging``).  Page content beyond a slot's
+    ``length`` may be stale (freed/reused/recycled pages are not
+    scrubbed) — the causal mask hides it, and decode always writes
+    position ``length`` before attending.
     """
     k: jnp.ndarray  # (L, n_blocks, block_size, Hkv, Dh) — physical pages
     v: jnp.ndarray
     block_tables: jnp.ndarray  # (B, MB) int32 page ids, -1 unmapped
     length: jnp.ndarray  # (B,) int32 — tokens so far (= next position)
+
+
+def paged_table_blocks(cfg: ModelConfig, block_size: int, max_len: int) -> int:
+    """Block-table width for one serving slot: ``ceil(max_len/bs)`` slots
+    in absolute addressing, or the ring bound ``ceil(window/bs)+1`` when a
+    sliding window makes that strictly smaller — windowed requests then
+    wrap the table and recycle out-of-window pages in place (the paged
+    sibling of the dense window-sized ring buffer; ``kernels.paging``)."""
+    mb = -(-max_len // block_size)
+    r = paging.paged_ring_blocks(cfg.sliding_window, block_size)
+    return r if 0 < r < mb else mb
 
 
 def paged_cache_spec(cfg: ModelConfig, n_blocks: int, block_size: int,
@@ -1270,7 +1289,7 @@ def paged_cache_spec(cfg: ModelConfig, n_blocks: int, block_size: int,
             f"paged KV cache supports attention-only stacks, not "
             f"{plan['kind']!r} (family {cfg.family!r})")
     cdt = dtype_of(cfg.dtype)
-    mb = -(-max_len // block_size)
+    mb = paged_table_blocks(cfg, block_size, max_len)
     pool = ((plan["n"], n_blocks, block_size, cfg.n_kv_heads, cfg.d_head), cdt)
     return {"k": pool, "v": pool,
             "block_tables": ((n_slots, mb), jnp.int32),
@@ -1290,7 +1309,9 @@ def _rope_and_insert_paged(cfg: ModelConfig, q, k_new, v_new, k_pool, v_pool,
                            block_tables, length):
     """RoPE the step's q/k at position ``length`` and scatter the new k/v
     into each slot's mapped page (page = table[length // bs], offset =
-    length % bs).  Unmapped slots (idle batch rows) drop the write."""
+    length % bs; ring-addressed windowed tables wrap the table index —
+    ``kernels.paging``).  Unmapped slots (idle batch rows) drop the
+    write."""
     pos = length[:, None]  # (B,1)
     q = apply_rope(q, pos, style=cfg.rope_style, theta=cfg.rope_theta,
                    fraction=cfg.rope_fraction)
@@ -1298,7 +1319,9 @@ def _rope_and_insert_paged(cfg: ModelConfig, q, k_new, v_new, k_pool, v_pool,
                        fraction=cfg.rope_fraction)
     NB, bs = k_pool.shape[0], k_pool.shape[1]
     MB = block_tables.shape[1]
-    lb = jnp.minimum((length // bs).astype(jnp.int32), MB - 1)
+    ring = paging.paged_ring_active(cfg.sliding_window, bs, MB)
+    lb = (length // bs).astype(jnp.int32)
+    lb = (lb % ring) if ring else jnp.minimum(lb, MB - 1)
     off = (length % bs).astype(jnp.int32)
     blk = jnp.take_along_axis(block_tables, lb[:, None], axis=1)[:, 0]
     safe = jnp.where(blk >= 0, blk, NB)  # NB is out of range -> dropped

@@ -228,7 +228,7 @@ class PagedCacheAdapter(KVCacheAdapter):
 
     def prefill(self, params, slot, padded_row, true_n, n_shared, vision):
         assert vision is None, "paged serving is attention-only (no vlm)"
-        bids = self.pm.prefill_block_ids(slot, padded_row.shape[1], n_shared)
+        bids = self.pm.prefill_block_ids(slot, padded_row.shape[1])
         tl = jnp.full((1,), true_n, jnp.int32)
         logits, (k, v) = self._prefill(params, padded_row, tl,
                                        self.pm.k, self.pm.v,

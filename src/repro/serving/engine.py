@@ -366,7 +366,9 @@ class Engine:
         self._make_appendable()
         if not self.active:
             return {}
-        tokens = jnp.asarray(self._last_token, jnp.int32)
+        # copy: jax CPU zero-copies numpy buffers, and _last_token is
+        # mutated in place right after this step is dispatched
+        tokens = jnp.asarray(self._last_token.copy(), jnp.int32)
         logits, new_cache = self._decode(self.params, tokens,
                                          self.kv.device_cache())
         self.kv.update(new_cache)

@@ -33,6 +33,29 @@ extended by the owner's decoded tokens, which is safe because (a) a
 sharer's causal mask hides positions beyond its own length, and (b) any
 append into a page with refcount > 1 first copies it (copy-on-write), and
 decode always writes position ``length`` before attending to it.
+
+Sliding-window ring-of-pages: when the config has a sliding window, a
+request's block table is a bounded RING of ``ceil(window/bs)+1`` slots
+(absolute block b at slot b % ring — ``kernels.paging``), so a windowed
+request can never hold more pages than its window needs:
+
+  * ``admit`` maps (and prefix-shares) only the LIVE window's blocks of
+    the prompt — blocks every future query has already slid past are
+    never allocated, and ``prefill_block_ids`` marks them -1 so the
+    direct-to-page scatter drops their KV;
+  * on entering a new absolute block, ``ensure_appendable`` RECYCLES the
+    ring slot's stale page in place (no alloc, no free, no device copy:
+    every offset of the recycled page reconstructs to a position beyond
+    the query until decode overwrites it, exactly the dense ring-buffer
+    invariant).  A stale page that is still prefix-SHARED is detached
+    instead — the ring variant of copy-on-write: release our reference
+    (the peer keeps the original bytes) and take a fresh page, so a
+    sharer's window rolling forward can never corrupt a slower peer;
+  * recycling a solely-owned page drops its prefix-registry entries (its
+    bytes no longer hold the registered prefix), so later prompts can
+    never share a rolled-over page.  Prompts longer than the window
+    register nothing: a prefix chain must start at block 0, which such a
+    prompt no longer maps.
 """
 from __future__ import annotations
 
@@ -46,7 +69,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import (PagedDecodeCache, init_paged_cache,
-                                      layer_plan)
+                                      layer_plan, paged_table_blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +119,7 @@ class BlockAllocator:
         self.peak_used = 0
         self.n_cow = 0
         self.n_shared_hits = 0
+        self.n_recycled = 0  # windowed ring: stale pages reused in place
 
     @property
     def n_free(self) -> int:
@@ -140,7 +164,13 @@ class BlockAllocator:
 
 @dataclasses.dataclass
 class _SlotInfo:
-    blocks: List[int]  # physical pages, logical order
+    blocks: List[int]  # physical pages: logical order (absolute mode) or
+    #                    ring-slot order with -1 unmapped (ring mode)
+    abs_blocks: Optional[List[int]] = None  # ring mode: absolute block
+    #                    currently held per ring slot (-1 = never entered)
+    first_owned: int = 0  # first absolute block NOT prefix-shared (the
+    #                       prefill scatter writes from here)
+    hwm: int = 0  # most pages this request ever mapped at once
 
 
 class PagedCacheManager:
@@ -150,9 +180,15 @@ class PagedCacheManager:
       ``admit(slot, tokens)``        admission control + prefix sharing
       ``prefill_block_ids(slot, …)`` per-logical-block destinations for
                                      the direct-to-page prefill scatter
-      ``ensure_appendable(slot)``    map/CoW the page ``length`` falls in
+      ``ensure_appendable(slot)``    map/recycle/CoW the page ``length``
+                                     falls in
       ``advance(slot)`` / ``release(slot)``
     and per decode step ``device_cache()`` / ``update_pools(new_cache)``.
+
+    With a sliding window, tables are bounded rings of ``ring`` slots and
+    out-of-window pages are recycled (module docstring); ``ring_bound`` /
+    ``request_page_hwm`` expose the per-request page cap and the measured
+    high-water marks.
     """
 
     def __init__(self, cfg: ModelConfig, *, n_slots: int, max_len: int,
@@ -162,26 +198,45 @@ class PagedCacheManager:
         assert max_len % block_size == 0, (max_len, block_size)
         self.cfg = cfg
         self.bs = block_size
-        self.max_blocks = -(-max_len // block_size)  # table width
+        self.max_blocks = -(-max_len // block_size)  # admission bound
+        # table width: the ring bound when a sliding window makes it
+        # strictly smaller than the absolute table (kernels.paging derives
+        # ring addressing from this width — one rule for writer + readers)
+        self.table_blocks = paged_table_blocks(cfg, block_size, max_len)
+        self.ring = self.table_blocks if self.table_blocks < self.max_blocks \
+            else 0
         self.n_slots = n_slots
         cache = init_paged_cache(cfg, n_blocks, block_size, n_slots, max_len)
         self.k, self.v = cache.k, cache.v
-        self.tables = np.full((n_slots, self.max_blocks), -1, np.int32)
+        self.tables = np.full((n_slots, self.table_blocks), -1, np.int32)
         self.lengths = np.zeros((n_slots,), np.int32)
         self.allocator = BlockAllocator(n_blocks)
         self._slots: Dict[int, _SlotInfo] = {}
+        self.request_page_hwm: List[int] = []  # hwm of each released slot
         # prefix registry: token prefix -> physical page holding its tail
         # block; _block_keys is the reverse map for cleanup on free.
         self._registry: Dict[Tuple[int, ...], int] = {}
         self._block_keys: Dict[int, List[Tuple[int, ...]]] = {}
 
+    @property
+    def ring_bound(self) -> int:
+        """Most pages one request may ever hold: ``ceil(window/bs)+1``
+        under a sliding window, else the full table."""
+        return self.ring or self.max_blocks
+
     # -- device view ----------------------------------------------------
 
     def device_cache(self) -> PagedDecodeCache:
+        # COPY the host bookkeeping before handing it to the device:
+        # jax's CPU backend zero-copies suitably-aligned numpy arrays, so
+        # jnp.asarray(self.tables) would ALIAS a buffer this manager keeps
+        # mutating in place — an asynchronously-dispatched decode step
+        # could then read next step's table and scatter KV into the wrong
+        # physical page (timing-dependent corruption).
         return PagedDecodeCache(
             k=self.k, v=self.v,
-            block_tables=jnp.asarray(self.tables),
-            length=jnp.asarray(self.lengths))
+            block_tables=jnp.asarray(self.tables.copy()),
+            length=jnp.asarray(self.lengths.copy()))
 
     def update_pools(self, new: PagedDecodeCache) -> None:
         self.k, self.v = new.k, new.v
@@ -229,74 +284,150 @@ class PagedCacheManager:
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.bs)
 
+    def _first_live_block(self, n_tokens: int) -> int:
+        """First absolute block any FUTURE query can still attend: the
+        next decode query sits at position ``n_tokens`` and reaches back
+        to ``n_tokens - window + 1``; earlier blocks are dead at admit
+        time and never mapped (0 without a window)."""
+        if not self.ring:
+            return 0
+        return max(0, n_tokens - self.cfg.sliding_window + 1) // self.bs
+
     def admit(self, slot: int, tokens: np.ndarray) -> Optional[int]:
         """Try to map ``tokens`` into ``slot``.  Returns the number of
         prefix-SHARED pages (the engine skips writing those), or None when
         the prompt doesn't fit / the pool is exhausted (admission control —
-        the caller retries after other requests finish)."""
+        the caller retries after other requests finish).
+
+        Ring mode maps only the live window's blocks (module docstring);
+        a prompt longer than the window shares and registers nothing — a
+        prefix chain must start at block 0, which it no longer maps."""
         nb = self.blocks_for(len(tokens))
         if nb > self.max_blocks:
             raise ValueError(
                 f"prompt of {len(tokens)} tokens exceeds max_len "
                 f"({self.max_blocks * self.bs})")
-        shared = self._match_prefix(tokens)
-        fresh = self.allocator.alloc(nb - len(shared))
+        b_min = self._first_live_block(len(tokens))
+        shared = self._match_prefix(tokens) if b_min == 0 else []
+        fresh = self.allocator.alloc(nb - b_min - len(shared))
         if fresh is None:
             return None
         self.allocator.fork(shared)
-        blocks = shared + fresh
-        self._slots[slot] = _SlotInfo(blocks=blocks)
+        chain = shared + fresh  # absolute blocks b_min..nb-1, in order
+        if self.ring:
+            pages = [-1] * self.ring
+            absb = [-1] * self.ring
+            for i, bid in enumerate(chain):
+                pages[(b_min + i) % self.ring] = bid
+                absb[(b_min + i) % self.ring] = b_min + i
+            info = _SlotInfo(blocks=pages, abs_blocks=absb,
+                             first_owned=b_min + len(shared), hwm=len(chain))
+        else:
+            info = _SlotInfo(blocks=chain, first_owned=len(shared),
+                             hwm=len(chain))
+        self._slots[slot] = info
         self.tables[slot, :] = -1
-        self.tables[slot, :nb] = blocks
+        mapped = np.asarray(info.blocks, np.int32)
+        self.tables[slot, :len(mapped)] = mapped
         self.lengths[slot] = len(tokens)
-        self._register(tokens, blocks, len(shared))
+        if b_min == 0:
+            self._register(tokens, chain, len(shared))
         return len(shared)
 
-    def prefill_block_ids(self, slot: int, padded_len: int,
-                          n_shared: int) -> np.ndarray:
-        """Physical destination per logical block of a (bucket-padded)
-        prefill, for ``forward_prefill(pages=…)``'s direct-to-page scatter.
+    def prefill_block_ids(self, slot: int, padded_len: int) -> np.ndarray:
+        """Physical destination per logical (absolute) block of a (bucket-
+        padded) prefill, for ``forward_prefill(pages=…)``'s direct-to-page
+        scatter.  (The skip-shared start is the slot's own
+        ``first_owned`` recorded at admit — callers no longer pass it.)
 
         Entries are -1 (the scatter DROPS them) for (a) prefix-SHARED
         pages — they already hold the prefix, and their in-page tail may
         be another live request's decoded tokens, so they must never be
-        rewritten — and (b) bucket-padding blocks past the prompt, which
-        this slot doesn't own.
+        rewritten — (b) bucket-padding blocks past the prompt, which this
+        slot doesn't own, and (c) under a sliding window, prompt blocks
+        already out of every future query's window (never mapped).
         """
         info = self._slots[slot]
         nb = self.blocks_for(int(self.lengths[slot]))
         nbk = -(-padded_len // self.bs)
         assert nbk >= nb, (padded_len, self.lengths[slot])
         ids = np.full((nbk,), -1, np.int32)
-        ids[n_shared:nb] = info.blocks[n_shared:nb]
+        if self.ring:
+            for b in range(info.first_owned, nb):
+                ids[b] = info.blocks[b % self.ring]
+        else:
+            ids[info.first_owned:nb] = info.blocks[info.first_owned:nb]
         return ids
+
+    def _cow(self, slot: int, info: _SlotInfo, idx: int, *,
+             copy: bool) -> bool:
+        """Detach table entry ``idx`` from its shared page onto a fresh
+        one.  ``copy`` devices-copies the bytes (mid-block append: earlier
+        offsets are live shared content); a windowed recycle skips the
+        copy — every offset of the new block is rewritten before any query
+        can attend it."""
+        bid = info.blocks[idx]
+        fresh = self.allocator.alloc(1)
+        if fresh is None:
+            return False
+        if copy:
+            self.k, self.v = copy_block(self.k, self.v,
+                                        jnp.int32(bid), jnp.int32(fresh[0]))
+        self.allocator.release([bid])
+        info.blocks[idx] = fresh[0]
+        self.tables[slot, idx] = fresh[0]
+        self.allocator.n_cow += 1
+        return True
 
     def ensure_appendable(self, slot: int) -> bool:
         """Make the page that position ``lengths[slot]`` falls into safely
-        writable: map it if unmapped, copy-on-write if prefix-shared.
-        Returns False when the pool is exhausted (caller preempts)."""
+        writable: map it if unmapped, copy-on-write if prefix-shared, and
+        under a sliding window RECYCLE the ring slot's out-of-window page
+        (in place when solely owned; detached via ``_cow`` when a prefix-
+        sharing peer still holds it).  Returns False when the pool is
+        exhausted (caller preempts)."""
         info = self._slots[slot]
-        li = int(self.lengths[slot]) // self.bs
+        li = int(self.lengths[slot]) // self.bs  # absolute block of write
         if li >= self.max_blocks:
             raise ValueError(f"slot {slot} hit max_len; request too long")
+        if self.ring:
+            rs = li % self.ring
+            bid = info.blocks[rs]
+            if bid < 0:  # ring slot never entered: map a fresh page
+                fresh = self.allocator.alloc(1)
+                if fresh is None:
+                    return False
+                info.blocks[rs] = fresh[0]
+                info.abs_blocks[rs] = li
+                self.tables[slot, rs] = fresh[0]
+                info.hwm = max(info.hwm,
+                               sum(1 for p in info.blocks if p >= 0))
+                return True
+            if info.abs_blocks[rs] == li:  # current block: append in place
+                if self.allocator.ref[bid] > 1 and \
+                        not self._cow(slot, info, rs, copy=True):
+                    return False
+                return True
+            # window rolled past the slot's old block: recycle
+            if self.allocator.ref[bid] > 1:
+                if not self._cow(slot, info, rs, copy=False):
+                    return False
+            else:
+                self._drop_registry(bid)  # bytes no longer hold the prefix
+            self.allocator.n_recycled += 1
+            info.abs_blocks[rs] = li
+            return True
         if li >= len(info.blocks):
             fresh = self.allocator.alloc(1)
             if fresh is None:
                 return False
             info.blocks.append(fresh[0])
             self.tables[slot, li] = fresh[0]
+            info.hwm = max(info.hwm, len(info.blocks))
             return True
-        bid = info.blocks[li]
-        if self.allocator.ref[bid] > 1:  # shared page: copy before writing
-            fresh = self.allocator.alloc(1)
-            if fresh is None:
-                return False
-            self.k, self.v = copy_block(self.k, self.v,
-                                        jnp.int32(bid), jnp.int32(fresh[0]))
-            self.allocator.release([bid])
-            info.blocks[li] = fresh[0]
-            self.tables[slot, li] = fresh[0]
-            self.allocator.n_cow += 1
+        if self.allocator.ref[info.blocks[li]] > 1:
+            # shared page: copy before writing
+            return self._cow(slot, info, li, copy=True)
         return True
 
     def advance(self, slot: int) -> None:
@@ -308,7 +439,8 @@ class PagedCacheManager:
         info = self._slots.pop(slot, None)
         if info is None:
             return
-        for bid in self.allocator.release(info.blocks):
+        self.request_page_hwm.append(info.hwm)
+        for bid in self.allocator.release([p for p in info.blocks if p >= 0]):
             self._drop_registry(bid)
         self.tables[slot, :] = -1
         self.lengths[slot] = 0

@@ -18,8 +18,15 @@ from repro.models import (DensePrefillDest, PagedPrefillDest, backends,
                           init_paged_cache, init_params, prefill_style_key,
                           serving_style_key)
 from repro.serving import Engine, PagedCacheAdapter, ServeConfig
+from repro.serving.paged_kv_cache import PagedCacheManager
 
 MAX_NEW = 4
+WIN = 3           # sliding window of the windowed grid axis
+WIN_BLOCK = 2     # paged block size there -> ring bound ceil(3/2)+1 = 3
+WIN_MAX_NEW = 5   # rolls the ring over a RECYCLED page by the 4th decoded
+#                   token: the 7-token prompt maps blocks 2..3 (0..1 are
+#                   dead at admit), decode maps block 4 fresh, then block 5
+#                   lands on block 2's ring slot -> in-place recycle
 
 
 @pytest.fixture(scope="module")
@@ -87,6 +94,125 @@ def test_cross_product_matches_unmerged_dense_xla_oracle(
     outs = eng.generate(prompts, max_new_tokens=MAX_NEW)
     for p, o, want in zip(prompts, outs, oracle):
         assert o == want, (cache_kind, style, impl, list(p[:3]))
+
+
+@pytest.fixture(scope="module")
+def setup_windowed():
+    """The sliding-window axis of both serving grids: same base model and
+    merged rewrites as ``setup`` but with a window SMALLER than the first
+    prompt, so every cell must window-mask at prefill and decode, and the
+    paged cells must ring-recycle out-of-window pages
+    (ceil(WIN/WIN_BLOCK)+1 = 3 table slots)."""
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        n_kv_heads=4, sliding_window=WIN)
+    assert cfg.kp_vp_removal_applicable
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    params["embed"]["table"] = params["embed"]["table"] * 50.0
+
+    models = {"generic": (cfg, params)}
+    for variant in ("qp", "kp", "vp"):
+        mp, mc = merge_skipless(params, cfg, variant)
+        models[variant] = (mc, mp)
+
+    # one prompt LONGER than the window (its head is out of window before
+    # decode even starts) and one shorter
+    prompts = [np.arange(7) % cfg.vocab_size,
+               (np.arange(2) * 7 + 2) % cfg.vocab_size]
+
+    def greedy_oracle(prompt, n):
+        toks = list(prompt)
+        out = []
+        for _ in range(n):
+            lg, _, _ = forward_seq(params, cfg,
+                                   jnp.asarray(toks, jnp.int32)[None])
+            t = int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))
+            out.append(t)
+            toks.append(t)
+        return out
+
+    oracle = [greedy_oracle(p, WIN_MAX_NEW) for p in prompts]
+    return models, prompts, oracle
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("style", ["generic", "qp", "kp", "vp"])
+@pytest.mark.parametrize("cache_kind", ["dense", "paged"])
+def test_windowed_cross_product_matches_unmerged_dense_xla_oracle(
+        setup_windowed, cache_kind, style, impl):
+    """The acceptance grid with ``sliding_window > 0``: every cache ×
+    style × impl cell — dense window-sized ring buffers AND paged bounded
+    ring tables with in-place page recycling — stays greedy-token-
+    identical to the unmerged dense XLA oracle, including the prompt
+    longer than the window."""
+    models, prompts, oracle = setup_windowed
+    cfg, params = models[style]
+    sc = ServeConfig(n_slots=2, max_len=32)
+    cache = PagedCacheAdapter(block_size=WIN_BLOCK) if cache_kind == "paged" \
+        else "dense"
+    eng = Engine(cfg, params, sc, impl=impl, cache=cache)
+    outs = eng.generate(prompts, max_new_tokens=WIN_MAX_NEW)
+    for p, o, want in zip(prompts, outs, oracle):
+        assert o == want, (cache_kind, style, impl, list(p[:3]))
+    if cache_kind == "paged":
+        pm = eng.pm
+        assert pm.ring == -(-WIN // WIN_BLOCK) + 1 == pm.ring_bound
+        assert pm.allocator.n_recycled > 0, (
+            "the 7-token prompt + decode must roll the ring over a "
+            "recycled page — otherwise this grid isn't testing recycling")
+        assert max(pm.request_page_hwm) <= pm.ring_bound, (
+            "a windowed request held more pages than ceil(window/block)+1")
+
+
+def _greedy_windowed_paged(cfg, params, prompt, n, impl):
+    """Greedy-decode through the dispatchers against a RING paged cache,
+    with ``PagedCacheManager`` doing the table bookkeeping the engine
+    normally drives (admit → direct-to-page prefill → ensure_appendable/
+    advance around each step)."""
+    pm = PagedCacheManager(cfg, n_slots=1, max_len=32,
+                           block_size=WIN_BLOCK, n_blocks=16)
+    toks = np.asarray(prompt, np.int32)
+    n_shared = pm.admit(0, toks)
+    assert n_shared is not None
+    ids = pm.prefill_block_ids(0, len(toks))
+    lg, (k, v) = forward_prefill(
+        params, cfg, jnp.asarray(toks, jnp.int32)[None],
+        PagedPrefillDest(pm.k, pm.v, jnp.asarray(ids, jnp.int32)), impl=impl)
+    pm.k, pm.v = k, v
+    out = [int(jnp.argmax(lg[0, :cfg.vocab_size]))]
+    for _ in range(n - 1):
+        assert pm.ensure_appendable(0)
+        lg, cache = forward_step(params, cfg,
+                                 jnp.asarray(out[-1:], jnp.int32),
+                                 pm.device_cache(), impl=impl)
+        pm.update_pools(cache)
+        pm.advance(0)
+        out.append(int(jnp.argmax(lg[0, :cfg.vocab_size])))
+    assert max(int((pm.tables[0] >= 0).sum()), pm._slots[0].hwm) \
+        <= pm.ring_bound
+    return out
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("style", ["generic", "qp", "kp", "vp"])
+@pytest.mark.parametrize("cache_kind", ["dense", "paged"])
+def test_windowed_prefill_grid_matches_unmerged_dense_xla_oracle(
+        setup_windowed, cache_kind, style, impl):
+    """The PREFILL acceptance grid with ``sliding_window > 0``: prefill
+    through the dispatcher into a window-ring dense cache / a bounded ring
+    block table (live-window blocks only), then decode continuation —
+    every cell must emit the unmerged dense XLA oracle's exact stream,
+    including the prompt longer than the window (whose dead head blocks
+    are never even mapped on the paged side)."""
+    models, prompts, oracle = setup_windowed
+    cfg, params = models[style]
+    for p, want in zip(prompts, oracle):
+        if cache_kind == "dense":
+            got = _greedy_via_prefill_and_step(cfg, params, p, WIN_MAX_NEW,
+                                               "dense", impl)
+        else:
+            got = _greedy_windowed_paged(cfg, params, p, WIN_MAX_NEW, impl)
+        assert got == want, (cache_kind, style, impl, list(p[:3]))
 
 
 def _greedy_via_prefill_and_step(cfg, params, prompt, n, cache_kind, impl):

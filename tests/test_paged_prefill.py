@@ -125,3 +125,48 @@ def test_direct_prefill_skips_shared_pages_of_live_requests():
     assert ra.out_tokens == want, "A's stream was corrupted by B's prefill"
     assert rb.out_tokens == want
     assert eng.pm.allocator.n_cow >= 1, "B's first append must CoW the tail"
+
+
+def test_window_rollover_detaches_shared_page_from_live_peer():
+    """Ring-phase regression on the PAGED side (the paged sibling of PR 2's
+    dense ring-phase family): two prefix-SHARING windowed streams decode
+    staggered, and the faster one's window rolls over a ring slot that
+    still holds a page the slower peer reads.  The recycle must DETACH
+    (CoW-without-copy: release our reference, take a fresh page) — reusing
+    the shared page in place would overwrite the peer's live window and
+    corrupt its stream mid-flight.  Both streams must stay oracle-exact
+    through detaches, in-place recycles, and the shared-tail CoW."""
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(sliding_window=16)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = (np.arange(12) * 5 + 1) % cfg.vocab_size  # 1 full + partial page
+    want = _greedy_oracle(params, cfg, prompt, 24)
+
+    eng = Engine(cfg, params, ServeConfig(n_slots=2, max_len=64),
+                 cache=PagedCacheAdapter(block_size=8, n_blocks=32))
+    pm = eng.pm
+    assert pm.ring == 3, "window 16 / block 8 must ring at 3 table slots"
+    ra = Request(prompt=prompt, max_new_tokens=24)
+    assert eng.submit(ra)
+    for _ in range(3):  # A gets a head start (the stagger)
+        eng.step()
+    rb = Request(prompt=prompt.copy(), max_new_tokens=16)
+    assert eng.submit(rb)
+    assert pm.allocator.n_shared_hits >= 2, "B must share A's prompt pages"
+    while eng.active:
+        eng.step()
+
+    assert ra.out_tokens == want, (
+        "the faster stream's rollover corrupted its own window")
+    assert rb.out_tokens == want[:16], (
+        "peer's stream changed when the faster stream's window rolled "
+        "over their shared page — recycle must detach, not reuse")
+    # the scenario actually exercised all three recycle flavors:
+    # B's tail CoW + A's shared-page detach …
+    assert pm.allocator.n_cow >= 2, "expected tail CoW + rollover detach"
+    # … and at least one solely-owned page recycled in place
+    assert pm.allocator.n_recycled >= 1
+    # the headline bound: no windowed request ever held more pages than
+    # ceil(window/block) + 1
+    assert pm.request_page_hwm and \
+        max(pm.request_page_hwm) <= pm.ring_bound == 3
+    assert pm.allocator.n_used == 0, "drained engine must free the pool"

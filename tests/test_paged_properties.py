@@ -1,0 +1,201 @@
+"""Model-based property suite for the paged serving manager.
+
+Hypothesis drives random request-lifecycle traces — admit (with prompt
+duplication so prefix sharing and page forking fire), decode steps
+(ensure_appendable + advance, the path that maps, copy-on-writes and
+ring-recycles pages), preempt/release — against ``PagedCacheManager``
+with a deliberately tiny pool, and checks after EVERY op:
+
+  * no double-free: the free list holds no duplicates and is disjoint
+    from every page any live slot maps;
+  * refcounts match live sharers: ``allocator.ref[p]`` equals the number
+    of slots currently mapping page ``p``, for every page;
+  * conservation: ``n_free + n_used == n_blocks`` always;
+  * windowed ring bound: a slot never holds more than
+    ``ceil(window/block_size) + 1`` pages — checked both against the
+    manager's own table and against an INDEPENDENT pure-python model of
+    the ring-slot set a request's (prompt length, decoded tokens) implies;
+  * drained pool: once every slot is released, ``n_used == 0`` and the
+    prefix registry is empty.
+
+Marked ``property``: the CI ``property`` job runs this file with a raised
+example budget (``PROPERTY_EXAMPLES``); tier-1 keeps the fast default and
+skips cleanly when hypothesis is absent (tests/_hypothesis_stub.py).
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import get_config, reduce_config
+from repro.kernels.paging import paged_ring_blocks
+from repro.serving.paged_kv_cache import PagedCacheManager
+
+pytestmark = pytest.mark.property
+
+MAX_EXAMPLES = int(os.environ.get("PROPERTY_EXAMPLES", "25"))
+
+MAX_LEN = 64
+BLOCK = 8
+N_BLOCKS = 10  # tiny on purpose: admission failures and preemption fire
+N_SLOTS = 4
+
+
+class RefSlot:
+    """Independent model of ONE request's page footprint: the set of
+    table slots its (prompt length, decode steps) implies.  Knows nothing
+    about the allocator — only the ring arithmetic the bound rests on."""
+
+    def __init__(self, n_tokens: int, window: int):
+        self.len = n_tokens
+        self.ring = paged_ring_blocks(window, BLOCK)
+        if self.ring >= -(-MAX_LEN // BLOCK):
+            self.ring = 0  # window covers the table: absolute addressing
+        nb = -(-n_tokens // BLOCK)
+        first = max(0, n_tokens - window + 1) // BLOCK if self.ring else 0
+        self.mapped = {b % self.ring if self.ring else b
+                       for b in range(first, nb)}
+
+    def step(self) -> None:
+        li = self.len // BLOCK
+        self.mapped.add(li % self.ring if self.ring else li)
+        self.len += 1
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.mapped)
+
+
+def _check_invariants(pm: PagedCacheManager, model: dict) -> None:
+    alloc = pm.allocator
+    free = list(alloc._free)
+    assert len(set(free)) == len(free), "double-free: duplicate free pages"
+    assert alloc.n_free + alloc.n_used == alloc.n_blocks
+
+    holders = np.zeros((alloc.n_blocks,), np.int64)
+    for slot, info in pm._slots.items():
+        live = [p for p in info.blocks if p >= 0]
+        assert len(set(live)) == len(live), "slot maps a page twice"
+        assert not set(live) & set(free), "live page is on the free list"
+        holders[live] += 1
+        # the ring bound, against the manager's own table …
+        assert len(live) <= pm.ring_bound, (slot, live)
+        assert info.hwm <= pm.ring_bound
+        # … and against the independent ring-slot model
+        assert len(live) == model[slot].n_pages, (slot, live)
+        assert int(pm.lengths[slot]) == model[slot].len
+    np.testing.assert_array_equal(
+        alloc.ref, holders,
+        err_msg="refcounts must equal the number of live sharers")
+
+
+def _trace_strategy():
+    # (op selector, slot/prompt selector, length selector); "step" is
+    # over-weighted so traces actually decode across block boundaries
+    return st.lists(
+        st.tuples(
+            st.sampled_from(["admit", "step", "step", "step", "step",
+                             "release"]),
+            st.integers(min_value=0, max_value=7),
+            st.integers(min_value=1, max_value=40),
+        ),
+        min_size=1, max_size=60)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(window=st.sampled_from([0, 5, 16]), trace=_trace_strategy())
+def test_manager_trace_invariants(window, trace):
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(
+        sliding_window=window)
+    pm = PagedCacheManager(cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
+                           block_size=BLOCK, n_blocks=N_BLOCKS)
+    model: dict = {}
+
+    for op, sel, n in trace:
+        active = sorted(model)
+        if op == "admit" and len(model) < N_SLOTS:
+            slot = min(set(range(N_SLOTS)) - set(active))
+            # three prompt families sharing prefixes (sel picks one), so
+            # identical admits fork pages instead of allocating
+            toks = (np.arange(n, dtype=np.int32) + (sel % 3) * 100) \
+                % cfg.vocab_size
+            if pm.admit(slot, toks) is not None:
+                model[slot] = RefSlot(n, window)
+                # the engine prefills right after admit; the manager-level
+                # trace only needs the table/length bookkeeping
+                pm.prefill_block_ids(slot, len(toks))
+        elif op == "step" and active:
+            slot = active[sel % len(active)]
+            if int(pm.lengths[slot]) + 1 >= MAX_LEN:
+                continue
+            if pm.ensure_appendable(slot):
+                pm.advance(slot)
+                model[slot].step()
+            else:  # pool exhausted: the engine would preempt this slot
+                pm.release(slot)
+                del model[slot]
+        elif op == "release" and active:
+            slot = active[sel % len(active)]
+            pm.release(slot)
+            del model[slot]
+        _check_invariants(pm, model)
+
+    for slot in sorted(model):
+        pm.release(slot)
+    assert pm.allocator.n_used == 0, "drained pool must free every page"
+    assert pm._registry == {} and pm._block_keys == {}
+    assert all(h <= pm.ring_bound for h in pm.request_page_hwm)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(window=st.sampled_from([5, 16]),
+       n_prompt=st.integers(min_value=1, max_value=40),
+       n_decode=st.integers(min_value=0, max_value=23))
+def test_windowed_request_never_exceeds_ring_bound(window, n_prompt,
+                                                   n_decode):
+    """The acceptance bound in isolation: ONE windowed request, any
+    (prompt, decode) split, never maps more than ceil(window/block)+1
+    pages — while an unwindowed request of the same total length may."""
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(
+        sliding_window=window)
+    pm = PagedCacheManager(cfg, n_slots=1, max_len=MAX_LEN,
+                           block_size=BLOCK, n_blocks=N_BLOCKS)
+    assert pm.admit(0, np.arange(n_prompt, dtype=np.int32)) is not None
+    bound = -(-window // BLOCK) + 1
+    assert pm.ring_bound == bound
+    for _ in range(n_decode):
+        assert pm.ensure_appendable(0)
+        pm.advance(0)
+        mapped = int((pm.tables[0] >= 0).sum())
+        assert mapped <= bound, (n_prompt, n_decode, mapped)
+    pm.release(0)
+    assert pm.request_page_hwm[-1] <= bound
+    assert pm.allocator.n_used == 0
+
+
+def test_hypothesis_is_exercised():
+    """Tier-1 sanity: the trace interpreter runs even without hypothesis
+    (one fixed trace), so a stubbed environment still covers the path."""
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(sliding_window=16)
+    pm = PagedCacheManager(cfg, n_slots=2, max_len=MAX_LEN,
+                           block_size=BLOCK, n_blocks=N_BLOCKS)
+    model = {}
+    for slot, n in ((0, 20), (1, 20)):  # identical prompts: forked pages
+        assert pm.admit(slot, np.arange(n, dtype=np.int32)) is not None
+        model[slot] = RefSlot(n, 16)
+        _check_invariants(pm, model)
+    for _ in range(24):  # roll both windows across recycled blocks
+        for slot in (0, 1):
+            if pm.ensure_appendable(slot):
+                pm.advance(slot)
+                model[slot].step()
+            _check_invariants(pm, model)
+    assert pm.allocator.n_recycled > 0 or pm.allocator.n_cow > 0
+    for slot in (0, 1):
+        pm.release(slot)
+    assert pm.allocator.n_used == 0
