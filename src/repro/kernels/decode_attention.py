@@ -91,9 +91,9 @@ def _online_softmax_block(ik, q, k, v, kpos, qpos, m_scr, l_scr, acc_scr,
 
 
 def _finish_output(l_scr, acc_scr):
-    l = l_scr[:, :1]
-    l = jnp.where(l == 0.0, 1.0, l)
-    return acc_scr[...] / l
+    denom = l_scr[:, :1]
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    return acc_scr[...] / denom
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,

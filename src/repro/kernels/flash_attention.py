@@ -99,9 +99,9 @@ def _flash_body(iq, ik, load_q, load_k, load_v, m_scr, l_scr, acc_scr, *,
 
 
 def _flash_finish(l_scr, acc_scr):
-    l = l_scr[:, :1]
-    l = jnp.where(l == 0.0, 1.0, l)
-    return acc_scr[...] / l
+    denom = l_scr[:, :1]
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    return acc_scr[...] / denom
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,

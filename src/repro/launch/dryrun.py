@@ -108,7 +108,8 @@ def _lower_compile(cfg, shape, mesh, rules, *, grad_accum, remat, unroll,
     pshape = steps_lib.param_specs(cfg)
     ppspec = shd.evenly(shd.param_pspecs(pshape, rules), pshape, mesh)
     psh = jax.tree.map(lambda s: NamedSharding(mesh, s), ppspec)
-    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+    n_params = sum(int(np.prod(leaf.shape))
+                   for leaf in jax.tree.leaves(pshape))
 
     logits_sh = None
     if shard_logits:

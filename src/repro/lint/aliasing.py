@@ -1,0 +1,214 @@
+"""Host-aliasing race detector: the PR 5 bug class as a check.
+
+jax's CPU backend ZERO-COPIES an aligned, dtype-matching numpy array into
+a device array (``np.shares_memory(np.asarray(jnp.asarray(x)), x)`` is
+True), and dispatch is async — so a numpy buffer that an ``Engine`` /
+``PagedCacheManager`` keeps mutating (block tables, lengths, last-token
+row) can be read by an in-flight step AFTER the host has already moved on
+to the next step's state.  PR 5 shipped exactly that bug (a step decoding
+against the *next* step's block table); PR 5's fix was a ``.copy()`` and
+a postmortem.  This module is the check that makes the class un-shippable:
+
+``audit_engine(engine)`` drives a real serve loop and applies three
+deterministic sub-checks — no timing, no sleeps:
+
+  1. **jit-boundary spy** — wraps the engine's decode and prefill jitted
+     callables and, at every call, tests each array argument for shared
+     memory with every buffer the serving stack declares host-mutable
+     (``host_mutable_buffers()`` hooks on ``Engine`` / adapters /
+     ``PagedCacheManager``) and with the caller-owned prompt buffers.
+  2. **ingestion seam** — the engine funnels every host→device transfer
+     through ``Engine.host_to_device``; the audit verifies that seam
+     actually copies (an alias here races the caller's own buffer
+     against the async prefill that reads it).
+  3. **host-held device views** — after exercising preemption, every
+     numpy buffer the engine handed back to a request (``key_state``)
+     must OWN its memory; a read-only ``np.asarray`` view of a device
+     array pins a live device buffer into host state (and breaks
+     callers that mutate it).
+
+Each hit is a :class:`repro.lint.rules.Finding`, same currency as the
+jaxpr rules, so ``tools/jaxlint.py`` reports both in one sweep.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.lint.rules import Finding
+
+RULE_JIT_INPUT = "NoAliasedJitInput"
+RULE_INGEST = "HostToDeviceCopies"
+RULE_HOST_VIEW = "NoHostViewOfDeviceBuffer"
+
+
+def _np_view(x) -> Optional[np.ndarray]:
+    """A numpy view of ``x`` WITHOUT copying, or None.
+
+    For a CPU jax array, ``np.asarray`` is a zero-copy export whenever
+    one is possible — exactly the window through which aliasing with host
+    state is observable.  (When jax must copy, the result trivially
+    shares nothing and the check is a clean no-op.)"""
+    if isinstance(x, np.ndarray):
+        return x
+    if isinstance(x, jax.Array):
+        try:
+            return np.asarray(x)
+        except Exception:  # non-exportable layout/sharding: nothing shared
+            return None
+    return None
+
+
+def check_shared(args: Any, named_buffers: Dict[str, np.ndarray],
+                 context: str) -> List[Finding]:
+    """Flag every array leaf of ``args`` sharing memory with any named
+    host-mutable buffer."""
+    findings: List[Finding] = []
+    leaves = jax.tree_util.tree_flatten_with_path(args)[0]
+    for path, leaf in leaves:
+        view = _np_view(leaf)
+        if view is None or view.size == 0:
+            continue
+        for name, buf in named_buffers.items():
+            if buf is None or not isinstance(buf, np.ndarray):
+                continue
+            if np.shares_memory(view, buf):
+                findings.append(Finding(
+                    rule=RULE_JIT_INPUT, target=context,
+                    message=f"jit input arg{jax.tree_util.keystr(path)} "
+                            f"shares memory with host-mutable buffer "
+                            f"{name!r} — an async step can read state the "
+                            f"host has already advanced (the PR 5 race)",
+                    detail={"arg": jax.tree_util.keystr(path),
+                            "buffer": name}))
+    return findings
+
+
+def check_ingestion(host_to_device: Callable, context: str) -> List[Finding]:
+    """Verify the host→device seam copies: its output must not share
+    memory with its input.  The probe is 64-byte ALIGNED (jax's CPU
+    zero-copy import requirement, cf. ``serving.hostbufs``) so a
+    non-copying seam aliases it deterministically, not per malloc's
+    mood."""
+    from repro.serving import hostbufs
+    probe = hostbufs.aligned_empty((64,), np.int32)
+    probe[:] = np.arange(64)
+    out = _np_view(host_to_device(probe, np.int32))
+    if out is not None and np.shares_memory(out, probe):
+        return [Finding(
+            rule=RULE_INGEST, target=context,
+            message="host_to_device zero-copies its input: the async "
+                    "prefill/step reads the CALLER's buffer after submit "
+                    "returns — callers reusing their prompt buffer corrupt "
+                    "an in-flight program")]
+    return []
+
+
+def check_host_views(named: Dict[str, Any], context: str) -> List[Finding]:
+    """Flag host-side numpy state that does not own its memory — e.g. a
+    ``np.asarray`` view of a device array (read-only, memoryview-backed)
+    stashed into a request's ``key_state``."""
+    findings: List[Finding] = []
+    for name, arr in named.items():
+        if not isinstance(arr, np.ndarray):
+            continue
+        owned = arr.base is None and arr.flags.writeable
+        if not owned:
+            why = ("read-only" if not arr.flags.writeable else
+                   f"view of {type(arr.base).__name__}")
+            findings.append(Finding(
+                rule=RULE_HOST_VIEW, target=context,
+                message=f"{name} is a {why} numpy buffer — host state "
+                        f"holding a view of (and pinning) a device buffer "
+                        f"instead of owning a copy",
+                detail={"buffer": name, "why": why}))
+    return findings
+
+
+@contextlib.contextmanager
+def _spy(obj, attr: str, buffers_fn: Callable[[], Dict[str, np.ndarray]],
+         findings: List[Finding], context: str):
+    """Temporarily wrap callable ``obj.attr`` with a shared-memory check
+    on every call's arguments."""
+    orig = getattr(obj, attr)
+
+    def wrapped(*args, **kwargs):
+        findings.extend(check_shared((args, kwargs), buffers_fn(), context))
+        return orig(*args, **kwargs)
+
+    setattr(obj, attr, wrapped)
+    try:
+        yield
+    finally:
+        setattr(obj, attr, orig)
+
+
+def _default_prompts(engine, n: int = 3) -> List[np.ndarray]:
+    # bucket-exact int32 ALIGNED prompts: the exact shape/dtype/alignment
+    # for which numpy padding is a no-op and jax zero-copy ingestion is
+    # certain — the worst case, made deterministic (serving.hostbufs)
+    from repro.serving import hostbufs
+    vocab = engine.cfg.vocab_size
+    prompts = []
+    for i in range(n):
+        p = hostbufs.aligned_empty((8,), np.int32)
+        p[:] = (np.arange(8) * (i + 3)) % vocab
+        prompts.append(p)
+    return prompts
+
+
+def audit_engine(engine, prompts: Optional[Sequence[np.ndarray]] = None,
+                 max_new_tokens: int = 4,
+                 exercise_preempt: bool = True) -> List[Finding]:
+    """Serve a few requests through ``engine`` with the aliasing spies
+    armed; returns every confirmed finding (empty == clean).
+
+    Drives the REAL path — ``submit`` then ``step`` to completion, plus a
+    forced preemption — so the buffers checked are the buffers production
+    passes, not synthetic ones."""
+    from repro.serving.engine import Request  # local: lint imports stay light
+
+    findings: List[Finding] = []
+    if prompts is None:
+        prompts = _default_prompts(engine)
+    prompt_bufs = {f"prompt[{i}]": np.asarray(p)
+                   for i, p in enumerate(prompts)}
+
+    def buffers() -> Dict[str, np.ndarray]:
+        named = dict(engine.host_mutable_buffers())
+        named.update(prompt_bufs)
+        return named
+
+    findings.extend(check_ingestion(engine.host_to_device,
+                                    "engine.host_to_device"))
+
+    reqs = [Request(prompt=p, max_new_tokens=max_new_tokens)
+            for p in prompts]
+    with _spy(engine, "_decode", buffers, findings, "engine._decode"), \
+         _spy(engine.kv, "_prefill", buffers, findings,
+              "engine.kv._prefill"):
+        pending = list(reqs)
+        pending = [r for r in pending if not engine.submit(r)]
+        for _ in range(max_new_tokens + 2):
+            if not engine.active:
+                break
+            engine.step()
+            pending = [r for r in pending if not engine.submit(r)]
+        if exercise_preempt and engine.active:
+            slot = next(iter(engine.active))
+            engine._preempt(slot)
+        # drain: preempted requests re-prefill through the spied path too
+        while engine.active or engine.preempted:
+            for r in list(engine.preempted):
+                if engine.submit(r):
+                    engine.preempted.remove(r)
+            if engine.active:
+                engine.step()
+
+    key_states = {f"request[{r.rid}].key_state": r.key_state
+                  for r in reqs if r.key_state is not None}
+    findings.extend(check_host_views(key_states, "engine._preempt"))
+    return findings

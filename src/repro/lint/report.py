@@ -1,0 +1,63 @@
+"""Render lint results: human report to a stream, structured dict for
+JSON — one format for the sweep, the aliasing audit, or both combined
+(what ``tools/jaxlint.py`` emits)."""
+from __future__ import annotations
+
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.lint.rules import Finding, all_rules
+from repro.lint.sweep import SweepReport
+
+
+def render_sweep(report: SweepReport, out=None, verbose: bool = False
+                 ) -> None:
+    out = out or sys.stdout
+    n_rules = sum(len(t.rules_run) for t in report.targets)
+    print(f"repro.lint sweep: {report.n_decode_targets} decode + "
+          f"{report.n_prefill_targets} prefill backends "
+          f"(registry: {report.n_decode_backends} + "
+          f"{report.n_prefill_backends}), {n_rules} rule runs",
+          file=out)
+    for t in report.targets:
+        mark = "FAIL" if any(f.severity == "error" for f in t.findings) \
+            else "ok"
+        if verbose or mark != "ok" or t.notes:
+            notes = f"  [{'; '.join(t.notes)}]" if t.notes else ""
+            print(f"  {mark:>4}  {t.key:<40} "
+                  f"rules: {', '.join(t.rules_run) or '-'}{notes}",
+                  file=out)
+        for f in t.findings:
+            print(f"        {f}", file=out)
+    print(f"sweep: {'CLEAN' if report.ok else 'VIOLATIONS'} "
+          f"({len(report.findings)} findings)", file=out)
+
+
+def render_findings(title: str, findings: List[Finding], out=None) -> None:
+    out = out or sys.stdout
+    status = "CLEAN" if not findings else f"{len(findings)} findings"
+    print(f"{title}: {status}", file=out)
+    for f in findings:
+        print(f"  {f}", file=out)
+
+
+def render_rules(out=None) -> None:
+    out = out or sys.stdout
+    for rule in all_rules():
+        print(f"  {rule.name:<26} {rule.description}", file=out)
+
+
+def to_json_dict(sweep: Optional[SweepReport] = None,
+                 aliasing: Optional[List[Finding]] = None
+                 ) -> Dict[str, Any]:
+    doc: Dict[str, Any] = {"rules": {r.name: r.description
+                                     for r in all_rules()}}
+    ok = True
+    if sweep is not None:
+        doc["sweep"] = sweep.to_dict()
+        ok = ok and sweep.ok
+    if aliasing is not None:
+        doc["aliasing"] = [f.to_dict() for f in aliasing]
+        ok = ok and not any(f.severity == "error" for f in aliasing)
+    doc["ok"] = ok
+    return doc

@@ -1,0 +1,154 @@
+"""Lint rule framework: targets, findings, and the rule registry.
+
+Mirrors the ``models.backends`` registry design: rules register under a
+name (latest wins, so a downstream repo can swap a tuned rule in without
+forking), lookups of unknown rules fail loudly with the registered list,
+and the sweep driver (``repro.lint.sweep``) enumerates every registered
+rule against every registered backend combo — a new rule or a new backend
+is linted with zero new test code.
+
+A rule checks ONE invariant of a :class:`LintTarget` — a lowered serving
+program plus the metadata needed to judge it (its registry key, the cache
+spec it serves, the unmerged source program for merged targets, the
+declared donations for jit-boundary checks).  ``applies(target)`` scopes
+the rule (e.g. ``NoOversizedBuffer`` only judges paged prefill);
+``check(target)`` returns :class:`Finding`s, empty when clean.
+
+Registering a custom rule::
+
+    from repro.lint import LintRule, register_rule
+
+    class NoGiantConstant(LintRule):
+        name = "NoGiantConstant"
+        description = "no >1MiB constant baked into a serving program"
+
+        def applies(self, t):
+            return True
+
+        def check(self, t):
+            big = [a for a in walker.iter_avals(t.jaxpr)
+                   if getattr(a, "size", 0) > 1 << 18]
+            return [self.finding(t, f"{len(big)} oversized consts")] \\
+                if big else []
+
+    register_rule(NoGiantConstant())
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation: which rule, on which program, what went wrong.
+
+    ``severity`` is "error" (the CLI exits non-zero) or "warning"
+    (reported, not gating).  ``detail`` carries structured context for the
+    JSON report (offending shapes, counts, primitive names, …)."""
+    rule: str
+    target: str
+    message: str
+    severity: str = "error"
+    detail: Optional[Dict[str, Any]] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "target": self.target,
+                "message": self.message, "severity": self.severity,
+                "detail": self.detail or {}}
+
+    def __str__(self) -> str:
+        return f"[{self.severity}] {self.target}: {self.rule}: {self.message}"
+
+
+@dataclasses.dataclass
+class LintTarget:
+    """One serving program under analysis.
+
+    ``phase`` is "decode" or "prefill"; (``cache_kind``, ``style``,
+    ``impl``) is the backend-registry key the program was built from.
+    ``jaxpr`` is the traced program; merged-style targets also carry
+    ``source_jaxpr`` — the SAME phase/cache/impl program of the unmerged
+    source model, the baseline ``NoForbiddenMatmul`` diffs against.
+    ``lowered`` (when the impl lowers on this backend) is the jitted
+    program lowered WITH its production donation declaration;
+    ``donated_flat`` are the flat argument positions declared donated.
+    ``max_len`` / ``cache_shapes`` / ``cache_dtype`` describe the cache
+    the program serves, for buffer-shape rules."""
+    phase: str
+    cache_kind: str
+    style: str
+    impl: str
+    jaxpr: Any
+    cfg: Any = None
+    source_jaxpr: Any = None
+    lowered: Any = None
+    donated_flat: Tuple[int, ...] = ()
+    max_len: Optional[int] = None
+    cache_shapes: Tuple[Tuple[int, ...], ...] = ()
+    cache_dtype: Any = None
+
+    @property
+    def key(self) -> str:
+        return f"{self.phase}:{self.cache_kind}/{self.style}/{self.impl}"
+
+
+class LintRule:
+    """Base class: subclass, set ``name``/``description``, implement
+    ``applies`` and ``check``."""
+
+    name: str = "?"
+    description: str = "?"
+
+    def applies(self, target: LintTarget) -> bool:
+        raise NotImplementedError
+
+    def check(self, target: LintTarget) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, target: LintTarget, message: str, *,
+                severity: str = "error",
+                detail: Optional[Dict[str, Any]] = None) -> Finding:
+        return Finding(rule=self.name, target=target.key, message=message,
+                       severity=severity, detail=detail)
+
+
+_RULES: Dict[str, LintRule] = {}
+
+
+def register_rule(rule: LintRule) -> None:
+    """Register ``rule`` under ``rule.name`` (latest wins, exactly like
+    the backend registries — swap, don't fork)."""
+    _RULES[rule.name] = rule
+
+
+def get_rule(name: str) -> LintRule:
+    try:
+        return _RULES[name]
+    except KeyError:
+        raise KeyError(
+            f"no lint rule registered under {name!r}; registered rules: "
+            f"{registered_rules()}") from None
+
+
+def registered_rules() -> List[str]:
+    return sorted(_RULES)
+
+
+def all_rules() -> List[LintRule]:
+    return [_RULES[n] for n in registered_rules()]
+
+
+def run_rules(target: LintTarget,
+              rules: Optional[List[LintRule]] = None
+              ) -> Tuple[List[str], List[Finding]]:
+    """Run every applicable rule on ``target``.  Returns (names of rules
+    that ran, findings)."""
+    ran: List[str] = []
+    findings: List[Finding] = []
+    for rule in (all_rules() if rules is None else rules):
+        if not rule.applies(target):
+            continue
+        ran.append(rule.name)
+        findings.extend(rule.check(target))
+    return ran, findings

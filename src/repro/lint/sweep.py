@@ -1,0 +1,331 @@
+"""Registry-wide invariant sweep: lint every registered backend combo.
+
+``sweep()`` enumerates the LIVE ``models.backends`` registries — every
+registered ``(cache_kind, style, impl)`` decode AND prefill backend —
+builds each combo's serving program at reduced shape through the same
+dispatchers the engine serves with (``forward_step`` /
+``forward_prefill``), and runs every applicable registered rule on it.
+Registering a new backend combo therefore gets it linted with ZERO new
+test code; registering a new rule sweeps the whole grid with zero new
+per-combo code.
+
+Programs are traced at **bfloat16** (not the reduced configs' float32):
+``NoDtypePromotionDrift`` hunts accidental fp32 shadows of the cache, a
+class that is invisible when the cache itself is fp32.
+
+Coverage is loud, not best-effort: a registered cache kind or style the
+sweep has no target builder for yields an ERROR finding (rather than a
+silently-unlinted combo), and the sweep asserts its target count equals
+the registry size.  New cache kinds extend the sweep via
+``register_sweep_builders(cache_kind, decode=…, prefill=…)`` — the lint
+face of the same seam that registers the backend itself.
+
+Shapes: ``SWEEP_MAX_LEN`` is chosen (as in tests/test_paged_prefill) to
+collide with no model or pool dimension, so any max_len-sized aval a rule
+finds is a real worst-case intermediate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import merge_skipless
+from repro.lint import walker
+from repro.lint.rules import (Finding, LintRule, LintTarget, all_rules,
+                              run_rules)
+from repro.models import (DensePrefillDest, PagedPrefillDest, backends,
+                          forward_prefill, forward_step, init_cache,
+                          init_paged_cache, init_params)
+
+SWEEP_DTYPE = "bfloat16"   # sub-fp32 so promotion drift is observable
+SWEEP_MAX_LEN = 160        # collides with no model/pool dim (cf. tests)
+SWEEP_BLOCK = 8
+SWEEP_POOL_BLOCKS = 21     # 21*8 = 168 != SWEEP_MAX_LEN
+SWEEP_BUCKET = 16
+SWEEP_DECODE_LEN = 32
+
+
+@dataclasses.dataclass
+class TargetReport:
+    """One swept combo: which rules ran, what they found."""
+    key: str
+    phase: str
+    cache_kind: str
+    style: str
+    impl: str
+    rules_run: List[str]
+    findings: List[Finding]
+    notes: List[str]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"key": self.key, "phase": self.phase,
+                "cache_kind": self.cache_kind, "style": self.style,
+                "impl": self.impl, "rules_run": self.rules_run,
+                "findings": [f.to_dict() for f in self.findings],
+                "notes": self.notes}
+
+
+@dataclasses.dataclass
+class SweepReport:
+    targets: List[TargetReport]
+    n_decode_backends: int
+    n_prefill_backends: int
+
+    @property
+    def findings(self) -> List[Finding]:
+        return [f for t in self.targets for f in t.findings]
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    @property
+    def n_decode_targets(self) -> int:
+        return sum(1 for t in self.targets if t.phase == "decode")
+
+    @property
+    def n_prefill_targets(self) -> int:
+        return sum(1 for t in self.targets if t.phase == "prefill")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"targets": [t.to_dict() for t in self.targets],
+                "n_decode_backends": self.n_decode_backends,
+                "n_prefill_backends": self.n_prefill_backends,
+                "ok": self.ok}
+
+
+# ---------------------------------------------------------------------------
+# target builders, keyed by cache_kind — the extension point new cache
+# kinds register alongside their adapter/backends
+# ---------------------------------------------------------------------------
+
+# builder(cfg, params, impl) -> dict of LintTarget fields
+#   {"jaxpr": …, "lowered": …, "donated_flat": …, "max_len": …,
+#    "cache_shapes": …, "cache_dtype": …}
+TargetBuilder = Callable[..., Dict[str, Any]]
+
+_DECODE_BUILDERS: Dict[str, TargetBuilder] = {}
+_PREFILL_BUILDERS: Dict[str, TargetBuilder] = {}
+
+
+def register_sweep_builders(cache_kind: str, *,
+                            decode: Optional[TargetBuilder] = None,
+                            prefill: Optional[TargetBuilder] = None) -> None:
+    """Register how the sweep builds ``cache_kind``'s reduced-shape
+    programs (latest wins, like every registry here)."""
+    if decode is not None:
+        _DECODE_BUILDERS[cache_kind] = decode
+    if prefill is not None:
+        _PREFILL_BUILDERS[cache_kind] = prefill
+
+
+def _float_cache_fields(cache_shape) -> Tuple[Tuple[Tuple[int, ...], ...],
+                                              Any]:
+    """(shapes, dtype) of the cache tree's float leaves — what
+    ``NoDtypePromotionDrift`` guards against wider shadows of."""
+    leaves = [leaf for leaf in jax.tree.leaves(cache_shape)
+              if hasattr(leaf, "dtype")
+              and jnp.issubdtype(leaf.dtype, jnp.floating)]
+    shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+    dtype = leaves[0].dtype if leaves else None
+    return shapes, dtype
+
+
+def _try_lower(fn, donate_argnums, example_args):
+    """Lower ``jit(fn, donate_argnums=…)`` for the example args; returns
+    (lowered, donated_flat, note).  Impls that can't lower on this
+    backend (un-interpreted Pallas on CPU) degrade to a note, not a
+    crash — jaxpr-level rules still run."""
+    try:
+        lowered = jax.jit(fn, donate_argnums=donate_argnums).lower(
+            *example_args)
+    except Exception as e:  # pragma: no cover - backend-dependent
+        return None, (), (f"lowering unavailable on this backend "
+                          f"({type(e).__name__}); jaxpr rules only")
+    flat = tuple(walker.donated_flat_indices(example_args, donate_argnums))
+    return lowered, flat, None
+
+
+def _build_decode_dense(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1,), jnp.int32)
+    cshape = jax.eval_shape(
+        lambda: init_cache(cfg, 1, SWEEP_DECODE_LEN))
+
+    def fn(p, t, c):
+        return forward_step(p, cfg, t, c, impl=impl)
+
+    jaxpr = jax.make_jaxpr(fn)(ps, toks, cshape)
+    # the engine donates the cache (serve_step donate_argnums=(2,))
+    lowered, donated, note = _try_lower(fn, (2,), (ps, toks, cshape))
+    shapes, dtype = _float_cache_fields(cshape)
+    return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
+            "cache_shapes": shapes, "cache_dtype": dtype,
+            "notes": [note] if note else []}
+
+
+def _build_decode_paged(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1,), jnp.int32)
+    cshape = jax.eval_shape(
+        lambda: init_paged_cache(cfg, SWEEP_POOL_BLOCKS, SWEEP_BLOCK, 1,
+                                 SWEEP_DECODE_LEN))
+
+    def fn(p, t, c):
+        return forward_step(p, cfg, t, c, impl=impl)
+
+    jaxpr = jax.make_jaxpr(fn)(ps, toks, cshape)
+    lowered, donated, note = _try_lower(fn, (2,), (ps, toks, cshape))
+    shapes, dtype = _float_cache_fields(cshape)
+    return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
+            "cache_shapes": shapes, "cache_dtype": dtype,
+            "notes": [note] if note else []}
+
+
+def _build_prefill_dense(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1, SWEEP_BUCKET), jnp.int32)
+    tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+
+    def fn(p, t, n):
+        return forward_prefill(p, cfg, t, DensePrefillDest(SWEEP_DECODE_LEN),
+                               impl=impl, true_len=n)
+
+    jaxpr = jax.make_jaxpr(fn)(ps, toks, tl)
+    cshape = jax.eval_shape(lambda: init_cache(cfg, 1, SWEEP_DECODE_LEN))
+    shapes, dtype = _float_cache_fields(cshape)
+    # dense prefill declares no donation (it BUILDS the fresh cache)
+    return {"jaxpr": jaxpr, "cache_shapes": shapes, "cache_dtype": dtype}
+
+
+def _build_prefill_paged(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1, SWEEP_BUCKET), jnp.int32)
+    tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+    pool = jax.eval_shape(
+        lambda: init_paged_cache(cfg, SWEEP_POOL_BLOCKS, SWEEP_BLOCK, 1,
+                                 SWEEP_MAX_LEN))
+    kp = pool.k
+    vp = pool.v
+    bids = jax.ShapeDtypeStruct((SWEEP_BUCKET // SWEEP_BLOCK,), jnp.int32)
+
+    def fn(p, t, n, k, v, b):
+        return forward_prefill(p, cfg, t, PagedPrefillDest(k, v, b),
+                               impl=impl, true_len=n)
+
+    args = (ps, toks, tl, kp, vp, bids)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    # the paged adapter donates the pools (build_prefill donate=(3, 4))
+    lowered, donated, note = _try_lower(fn, (3, 4), args)
+    shapes, dtype = _float_cache_fields(pool)
+    return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
+            "max_len": SWEEP_MAX_LEN, "cache_shapes": shapes,
+            "cache_dtype": dtype, "notes": [note] if note else []}
+
+
+register_sweep_builders("dense", decode=_build_decode_dense,
+                        prefill=_build_prefill_dense)
+register_sweep_builders("paged", decode=_build_decode_paged,
+                        prefill=_build_prefill_paged)
+
+
+# ---------------------------------------------------------------------------
+# the sweep driver
+# ---------------------------------------------------------------------------
+
+def sweep_models() -> Dict[str, Tuple[Any, Any]]:
+    """style-key -> (cfg, params) at reduced shape, traced-dtype
+    ``SWEEP_DTYPE``: "generic" is the unmerged skipless model, "merged"
+    its qp (Q/P-free) rewrite — the same recipe as the equivalence
+    grids."""
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", n_kv_heads=4,
+        dtype=SWEEP_DTYPE, param_dtype=SWEEP_DTYPE)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mparams, mcfg = merge_skipless(params, cfg, "qp")
+    return {"generic": (cfg, params), "merged": (mcfg, mparams)}
+
+
+def _uncovered(phase: str, key: Tuple[str, str, str], why: str
+               ) -> TargetReport:
+    ck, st, impl = key
+    t = TargetReport(key=f"{phase}:{ck}/{st}/{impl}", phase=phase,
+                     cache_kind=ck, style=st, impl=impl, rules_run=[],
+                     findings=[Finding(
+                         rule="SweepCoverage",
+                         target=f"{phase}:{ck}/{st}/{impl}",
+                         message=f"registered backend NOT linted: {why} — "
+                                 f"register a sweep builder/model so this "
+                                 f"combo is covered",
+                     )], notes=[])
+    return t
+
+
+def _sweep_phase(phase: str, keys: List[Tuple[str, str, str]],
+                 models: Dict[str, Tuple[Any, Any]],
+                 builders: Dict[str, TargetBuilder],
+                 rules: Optional[List[LintRule]],
+                 progress: Optional[Callable[[str], None]]
+                 ) -> List[TargetReport]:
+    # trace each (cache_kind, style, impl) program once, keeping the
+    # generic programs around as the merged targets' diff baselines
+    out: List[TargetReport] = []
+    generic_jaxprs: Dict[Tuple[str, str], Any] = {}
+    for ck, st, impl in sorted(keys, key=lambda k: (k[0], k[2], k[1])):
+        if st not in models:
+            out.append(_uncovered(phase, (ck, st, impl),
+                                  f"no sweep model for style {st!r}"))
+            continue
+        if ck not in builders:
+            out.append(_uncovered(phase, (ck, st, impl),
+                                  f"no sweep builder for cache kind {ck!r}"))
+            continue
+        cfg, params = models[st]
+        if progress:
+            progress(f"{phase}:{ck}/{st}/{impl}")
+        built = builders[ck](cfg, params, impl)
+        notes = built.pop("notes", [])
+        if st == "generic":
+            generic_jaxprs[(ck, impl)] = built["jaxpr"]
+        target = LintTarget(phase=phase, cache_kind=ck, style=st, impl=impl,
+                            cfg=cfg,
+                            source_jaxpr=generic_jaxprs.get((ck, impl)),
+                            **built)
+        ran, findings = run_rules(target, rules)
+        out.append(TargetReport(key=target.key, phase=phase, cache_kind=ck,
+                                style=st, impl=impl, rules_run=ran,
+                                findings=findings, notes=notes))
+    return out
+
+
+def sweep(rules: Optional[List[LintRule]] = None,
+          progress: Optional[Callable[[str], None]] = None) -> SweepReport:
+    """Lint every registered decode and prefill backend.
+
+    ``rules`` defaults to every registered rule; ``progress`` (if given)
+    is called with each target key as it is traced.  The returned report
+    covers EXACTLY the live registries — one target per registered combo,
+    asserted — with loud findings for combos the sweep cannot build."""
+    import repro.lint.builtin  # noqa: F401  (ensure built-ins registered)
+    models = sweep_models()
+    dkeys = backends.registered_backends()
+    pkeys = backends.registered_prefill_backends()
+    targets = _sweep_phase("decode", dkeys, models, _DECODE_BUILDERS,
+                           rules, progress)
+    targets += _sweep_phase("prefill", pkeys, models, _PREFILL_BUILDERS,
+                            rules, progress)
+    report = SweepReport(targets=targets, n_decode_backends=len(dkeys),
+                         n_prefill_backends=len(pkeys))
+    assert report.n_decode_targets == len(dkeys), (
+        report.n_decode_targets, len(dkeys))
+    assert report.n_prefill_targets == len(pkeys), (
+        report.n_prefill_targets, len(pkeys))
+    return report

@@ -1170,7 +1170,8 @@ def forward_step(params, cfg: ModelConfig, token, cache, *,
     if kv_pos is not None:
         Sc = kv_pos.shape[1]
         slot = (cache.length % Sc).astype(jnp.int32)
-        kv_pos = jax.vmap(lambda pr, s, l: pr.at[s].set(l))(kv_pos, slot, cache.length)
+        kv_pos = jax.vmap(lambda pr, s, ln: pr.at[s].set(ln))(
+            kv_pos, slot, cache.length)
     ctx = {"length": cache.length, "kv_pos": kv_pos, "impl": impl,
            "qkv_sharding": qkv_sharding, "backend": backend}
 

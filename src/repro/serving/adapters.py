@@ -26,7 +26,7 @@ cache layout is a new adapter plus its registered attention backends
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -113,6 +113,12 @@ class KVCacheAdapter:
         traffic, e.g. dense-vs-paged TTFT bytes)."""
         raise NotImplementedError
 
+    def host_mutable_buffers(self) -> Dict[str, np.ndarray]:
+        """Named host-side numpy buffers this adapter mutates across steps
+        (``repro.lint.aliasing`` checks jit inputs against them).  Dense
+        caches live entirely on device: nothing to declare."""
+        return {}
+
 
 class DenseCacheAdapter(KVCacheAdapter):
     """Worst-case-length slot cache: every slot owns a ``max_len`` stretch
@@ -129,9 +135,12 @@ class DenseCacheAdapter(KVCacheAdapter):
                       cache_shardings=None, qkv_sharding=None):
         cfg = self.cfg
         dest = DensePrefillDest(cache_len=self.sc.max_len)
-        fn = lambda p, tk, vs, tl: forward_prefill(
-            p, cfg, tk, dest, vision=vs, impl=impl, true_len=tl,
-            qkv_sharding=qkv_sharding)
+
+        def fn(p, tk, vs, tl):
+            return forward_prefill(
+                p, cfg, tk, dest, vision=vs, impl=impl, true_len=tl,
+                qkv_sharding=qkv_sharding)
+
         if mesh is not None:
             self._prefill = jax.jit(
                 fn, in_shardings=(params_sharding, None, None, None))
@@ -200,9 +209,12 @@ class PagedCacheAdapter(KVCacheAdapter):
     def build_prefill(self, impl, mesh=None, params_sharding=None,
                       cache_shardings=None, qkv_sharding=None):
         cfg = self.cfg
-        fn = lambda p, tk, tl, kp, vp, bids: forward_prefill(
-            p, cfg, tk, PagedPrefillDest(kp, vp, bids), impl=impl,
-            true_len=tl, qkv_sharding=qkv_sharding)
+
+        def fn(p, tk, tl, kp, vp, bids):
+            return forward_prefill(
+                p, cfg, tk, PagedPrefillDest(kp, vp, bids), impl=impl,
+                true_len=tl, qkv_sharding=qkv_sharding)
+
         if mesh is not None:
             pool_k, pool_v = cache_shardings.k, cache_shardings.v
             self._prefill = jax.jit(
@@ -218,6 +230,9 @@ class PagedCacheAdapter(KVCacheAdapter):
 
     def update(self, new):
         self.pm.update_pools(new)
+
+    def host_mutable_buffers(self):
+        return self.pm.host_mutable_buffers()
 
     @property
     def cache_bytes(self):

@@ -67,6 +67,7 @@ from repro.configs.base import ModelConfig
 from repro.distribution import sharding as shd
 from repro.models import (backends, forward_step, prefill_style_key,
                           serving_style_key)
+from repro.serving import hostbufs
 from repro.serving.adapters import KVCacheAdapter, make_adapter
 
 
@@ -183,7 +184,9 @@ class Engine:
         self.kv.init(cfg, sc)
         self._build_steps()
 
-        self._last_token = np.zeros((sc.n_slots,), np.int32)
+        # aligned: deterministically on jax's zero-copy path, so a missing
+        # copy at ingestion fails every run (serving.hostbufs rationale)
+        self._last_token = hostbufs.aligned_zeros((sc.n_slots,), np.int32)
         if sc.temperature > 0:
             self._sample_rows = jax.jit(partial(
                 _sample_rows, temperature=sc.temperature, top_k=sc.top_k,
@@ -211,8 +214,10 @@ class Engine:
                                shd.evenly(self.kv.pspecs(rules), cshape,
                                           mesh))
 
-        fwd = lambda p, t, c: forward_step(p, self.cfg, t, c, impl=impl,
-                                           qkv_sharding=qkv_sh)
+        def fwd(p, t, c):
+            return forward_step(p, self.cfg, t, c, impl=impl,
+                                qkv_sharding=qkv_sh)
+
         if mesh is not None:
             self._decode = jax.jit(
                 fwd, donate_argnums=(2,),
@@ -226,6 +231,26 @@ class Engine:
         self._prefill = self.kv._prefill
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def host_to_device(x, dtype=None) -> jnp.ndarray:
+        """The ONE host→device ingestion seam: always copies.
+
+        ``jnp.asarray`` of an aligned dtype-matching numpy array is
+        ZERO-copy on CPU, and dispatch is async — ingesting a
+        caller-owned buffer (a prompt) or engine-mutated state without a
+        copy lets an in-flight program read memory the owner has since
+        rewritten.  ``repro.lint.aliasing`` audits this seam; keep every
+        numpy→device conversion of externally-owned data routed here."""
+        return jnp.asarray(np.array(x, dtype=dtype, copy=True))
+
+    def host_mutable_buffers(self) -> Dict[str, np.ndarray]:
+        """Named host-side numpy buffers this engine mutates across steps
+        — the ``repro.lint.aliasing`` detector checks every jitted call's
+        inputs for shared memory with these."""
+        named = {"engine._last_token": self._last_token}
+        named.update(self.kv.host_mutable_buffers())
+        return named
+
     @property
     def paged(self) -> bool:
         return self.kv.kind == "paged"
@@ -329,9 +354,14 @@ class Engine:
         self.free_slots.pop(0)
 
         padded, n = self._bucket_pad(toks)
-        vs = None if vision is None else jnp.asarray(vision)[None]
+        # host_to_device (copy), NOT jnp.asarray: for a bucket-exact int32
+        # prompt, `padded` IS the caller's buffer, and the async prefill
+        # would read it after submit() returns — a caller reusing its
+        # prompt array corrupts an in-flight program (the PR 5 race, at
+        # the engine's public boundary)
+        vs = None if vision is None else self.host_to_device(vision)[None]
         logits = self.kv.prefill(self.params, slot,
-                                 jnp.asarray(padded, jnp.int32)[None],
+                                 self.host_to_device(padded, np.int32)[None],
                                  n, n_shared, vs)
 
         if req.rid < 0:
@@ -366,9 +396,9 @@ class Engine:
         self._make_appendable()
         if not self.active:
             return {}
-        # copy: jax CPU zero-copies numpy buffers, and _last_token is
-        # mutated in place right after this step is dispatched
-        tokens = jnp.asarray(self._last_token.copy(), jnp.int32)
+        # host_to_device copies: jax CPU zero-copies numpy buffers, and
+        # _last_token is mutated in place right after this step dispatches
+        tokens = self.host_to_device(self._last_token, np.int32)
         logits, new_cache = self._decode(self.params, tokens,
                                          self.kv.device_cache())
         self.kv.update(new_cache)
@@ -413,7 +443,10 @@ class Engine:
         self.kv.release(slot)
         self.free_slots.append(slot)
         req.slot = -2
-        req.key_state = np.asarray(self._slot_keys[slot])  # resume in place
+        # np.array (copy), NOT np.asarray: asarray of a device array is a
+        # READ-ONLY view that pins the device buffer into host state — the
+        # request must own its resume key (lint: NoHostViewOfDeviceBuffer)
+        req.key_state = np.array(self._slot_keys[slot])  # resume in place
         self.preempted.append(req)
         self.stats["n_preempted"] += 1
 

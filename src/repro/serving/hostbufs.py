@@ -1,0 +1,46 @@
+"""64-byte-aligned host buffer allocation.
+
+jax's CPU backend zero-copies a numpy array into a device buffer ONLY
+when the host buffer is 64-byte aligned (and dtype/layout match);
+otherwise it silently copies.  numpy's own allocator gives whatever
+malloc gives, so whether a host buffer aliases device state is decided
+by the allocator — the nastiest possible failure mode for the aliasing
+bug class: a missing ``.copy()`` corrupts serving state only on the runs
+where malloc happened to hand back an aligned block.
+
+Allocating every host-MUTABLE serving buffer (block tables, lengths,
+refcounts, last-token row) through this module pins that coin-flip:
+zero-copy ingestion of these buffers always happens when the code path
+permits it, so (a) a latent missing-copy bug fails on the FIRST run, not
+the unlucky one, and (b) the ``repro.lint.aliasing`` audit's
+shared-memory checks are deterministic.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+ALIGN = 64  # bytes: XLA CPU's zero-copy import requirement
+
+
+def aligned_empty(shape, dtype) -> np.ndarray:
+    """An uninitialized C-contiguous array whose data pointer is 64-byte
+    aligned (a view into a slightly-overallocated byte buffer)."""
+    dtype = np.dtype(dtype)
+    shape = tuple(int(s) for s in np.atleast_1d(np.asarray(shape)).ravel()) \
+        if not np.isscalar(shape) else (int(shape),)
+    nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    raw = np.empty(nbytes + ALIGN, np.uint8)
+    start = (-raw.ctypes.data) % ALIGN
+    return raw[start:start + nbytes].view(dtype).reshape(shape)
+
+
+def aligned_zeros(shape, dtype) -> np.ndarray:
+    out = aligned_empty(shape, dtype)
+    out[...] = 0
+    return out
+
+
+def aligned_full(shape, fill, dtype) -> np.ndarray:
+    out = aligned_empty(shape, dtype)
+    out[...] = fill
+    return out

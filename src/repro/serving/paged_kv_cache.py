@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.serving import hostbufs
 from repro.models.transformer import (PagedDecodeCache, init_paged_cache,
                                       layer_plan, paged_table_blocks)
 
@@ -114,7 +115,7 @@ class BlockAllocator:
     def __init__(self, n_blocks: int):
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(n_blocks))
-        self.ref = np.zeros((n_blocks,), np.int32)
+        self.ref = hostbufs.aligned_zeros((n_blocks,), np.int32)
         # observability: the benchmark and tests read these
         self.peak_used = 0
         self.n_cow = 0
@@ -208,8 +209,12 @@ class PagedCacheManager:
         self.n_slots = n_slots
         cache = init_paged_cache(cfg, n_blocks, block_size, n_slots, max_len)
         self.k, self.v = cache.k, cache.v
-        self.tables = np.full((n_slots, self.table_blocks), -1, np.int32)
-        self.lengths = np.zeros((n_slots,), np.int32)
+        # aligned: host-mutable state always HITS jax's zero-copy path, so
+        # a missing .copy() at device ingestion fails deterministically
+        # (serving.hostbufs) instead of only on lucky malloc alignments
+        self.tables = hostbufs.aligned_full(
+            (n_slots, self.table_blocks), -1, np.int32)
+        self.lengths = hostbufs.aligned_zeros((n_slots,), np.int32)
         self.allocator = BlockAllocator(n_blocks)
         self._slots: Dict[int, _SlotInfo] = {}
         self.request_page_hwm: List[int] = []  # hwm of each released slot
@@ -240,6 +245,13 @@ class PagedCacheManager:
 
     def update_pools(self, new: PagedDecodeCache) -> None:
         self.k, self.v = new.k, new.v
+
+    def host_mutable_buffers(self):
+        """Named numpy buffers this manager mutates in place between steps
+        — the ones ``device_cache`` must copy before device ingestion and
+        ``repro.lint.aliasing`` checks every jit input against."""
+        return {"pm.tables": self.tables, "pm.lengths": self.lengths,
+                "pm.allocator.ref": self.allocator.ref}
 
     @property
     def pool_bytes(self) -> int:

@@ -30,7 +30,9 @@ class AdamW:
     clip_norm: float = 1.0
 
     def init(self, params) -> AdamWState:
-        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        def z(p):
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
         return AdamWState(step=jnp.zeros((), jnp.int32),
                           mu=jax.tree.map(z, params),
                           nu=jax.tree.map(z, params))

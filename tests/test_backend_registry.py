@@ -17,6 +17,7 @@ from repro.models import (DensePrefillDest, PagedPrefillDest, backends,
                           forward_prefill, forward_seq, forward_step,
                           init_paged_cache, init_params, prefill_style_key,
                           serving_style_key)
+from repro.lint import walker as lint_walker
 from repro.serving import Engine, PagedCacheAdapter, ServeConfig
 from repro.serving.paged_kv_cache import PagedCacheManager
 
@@ -351,26 +352,9 @@ def test_prefill_shim_and_dispatcher_are_token_identical(setup):
 
 
 def _count_dot_generals(jaxpr) -> int:
-    """dot_general eqns in a (closed) jaxpr, recursing into inner jaxprs
-    (scan bodies, pallas_call kernels, …)."""
-    n = 0
-
-    def walk(jx):
-        nonlocal n
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "dot_general":
-                n += 1
-            for p in eqn.params.values():
-                for sub in jax.tree.leaves(
-                        p, is_leaf=lambda x: isinstance(
-                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
-                    if isinstance(sub, jax.core.ClosedJaxpr):
-                        walk(sub.jaxpr)
-                    elif isinstance(sub, jax.core.Jaxpr):
-                        walk(sub)
-
-    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
-    return n
+    """dot_general eqns anywhere in the program — the shared repro.lint
+    walker (one recursion for the whole repo, not a per-test copy)."""
+    return lint_walker.count_primitive(jaxpr, "dot_general")
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
@@ -413,6 +397,13 @@ def test_merged_prefill_lowers_no_q_projection_matmul(setup, cache_kind,
     assert n_m == n_g - 2, (
         f"merged prefill must drop exactly the wq and wp matmuls: generic "
         f"has {n_g} dot_generals, merged has {n_m}")
+    # same invariant as a lint rule — what repro.lint.sweep() enforces for
+    # every registered combo without this test
+    from repro.lint import LintTarget, NoForbiddenMatmul
+    target = LintTarget(phase="prefill", cache_kind=cache_kind,
+                        style="merged", impl=impl, jaxpr=jx_m,
+                        source_jaxpr=jx_g)
+    assert NoForbiddenMatmul().check(target) == []
 
 
 def test_registry_covers_the_serving_grid():

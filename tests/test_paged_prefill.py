@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_config
+from repro.lint import walker as lint_walker
 from repro.models import forward_prefill, forward_seq, init_params
 from repro.serving import Engine, PagedCacheAdapter, Request, ServeConfig
 
@@ -19,27 +20,9 @@ N_BLOCKS = 21
 
 
 def _all_avals(jaxpr):
-    """Every var aval in a (closed) jaxpr, recursing into inner jaxprs."""
-    seen = []
-
-    def walk(jx):
-        for v in list(jx.invars) + list(jx.outvars) + list(jx.constvars):
-            seen.append(v.aval)
-        for eqn in jx.eqns:
-            for v in list(eqn.invars) + list(eqn.outvars):
-                if hasattr(v, "aval"):
-                    seen.append(v.aval)
-            for p in eqn.params.values():
-                for sub in jax.tree.leaves(
-                        p, is_leaf=lambda x: isinstance(
-                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
-                    if isinstance(sub, jax.core.ClosedJaxpr):
-                        walk(sub.jaxpr)
-                    elif isinstance(sub, jax.core.Jaxpr):
-                        walk(sub)
-
-    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
-    return seen
+    """Every var aval anywhere in the program — the shared repro.lint
+    walker (one recursion for the whole repo, not a per-test copy)."""
+    return list(lint_walker.iter_avals(jaxpr))
 
 
 def test_paged_prefill_allocates_no_worst_case_buffer():

@@ -26,16 +26,22 @@ python -c "import pytest" 2>/dev/null || {
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
 
-# lint: pyflakes-class checks only (F = undefined names, unused imports,
-# redefinitions) over src/, exactly what CI's `lint` job runs.  ruff comes
+# static analysis: the registry-wide program sweep + host-aliasing audit,
+# exactly what CI's `analysis` job gates (tools/jaxlint.py exits non-zero
+# on any violation or coverage hole)
+python tools/jaxlint.py --sweep --aliasing
+echo "[check] jaxlint clean"
+
+# lint: pyflakes (F), comparison/lambda/identifier pitfalls (E7), and
+# bugbear (B) over src/, exactly what CI's `lint` job runs.  ruff comes
 # from the same requirements-dev.txt install as pytest; if that install
 # SUCCEEDED yet ruff is still missing, the environment is misconfigured —
 # fail loudly rather than silently skipping what CI will gate.  Only a
 # failed (offline) install downgrades to a loud skip, since tier-1's tests
 # must still run in network-less containers.
 if python -m ruff --version >/dev/null 2>&1; then
-    python -m ruff check --select F --isolated src
-    echo "[check] ruff --select F clean"
+    python -m ruff check --select F,E7,B --isolated src
+    echo "[check] ruff --select F,E7,B clean"
 elif [ "$DEV_DEPS_OK" = 1 ]; then
     echo "[check] FATAL: dev-dep install succeeded but ruff is missing —" >&2
     echo "[check] lint did NOT run; CI's lint job WILL run it" >&2

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""jaxlint: static analysis over the repo's serving programs.
+
+    tools/jaxlint.py --sweep        lint every registered backend combo
+    tools/jaxlint.py --aliasing     host-aliasing audit of real engines
+    tools/jaxlint.py                both (the CI `analysis` job's gate)
+    tools/jaxlint.py --list-rules   registered rule names + descriptions
+    tools/jaxlint.py --json out.json  also write the structured report
+
+Exit status is non-zero iff any error-severity finding fired (or a
+registered combo could not be linted — coverage holes are errors too).
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+
+def _run_sweep(args):
+    from repro.lint import report, sweep
+    progress = None
+    if args.verbose:
+        def progress(key):
+            print(f"[jaxlint] trace {key}", flush=True)
+    rep = sweep(progress=progress)
+    report.render_sweep(rep, verbose=args.verbose)
+    return rep
+
+
+def _run_aliasing(args):
+    """Audit one dense and one paged engine at reduced shape — the real
+    submit/step/preempt path with the aliasing spies armed."""
+    import jax
+    from repro.configs import get_config, reduce_config
+    from repro.lint import aliasing, report
+    from repro.models import init_params
+    from repro.serving import Engine, ServeConfig
+
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    findings = []
+    for kind in ("dense", "paged"):
+        eng = Engine(cfg, params, ServeConfig(n_slots=2, max_len=48),
+                     cache=kind)
+        findings += aliasing.audit_engine(eng)
+    report.render_findings("aliasing audit (dense + paged engines)",
+                           findings)
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="jaxlint", description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="lint every registered backend combo")
+    ap.add_argument("--aliasing", action="store_true",
+                    help="host-aliasing audit of dense+paged engines")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered rules and exit")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the structured report to PATH")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.lint import report
+
+    if args.list_rules:
+        report.render_rules()
+        return 0
+
+    run_sweep = args.sweep or not (args.sweep or args.aliasing)
+    run_alias = args.aliasing or not (args.sweep or args.aliasing)
+
+    sweep_rep = _run_sweep(args) if run_sweep else None
+    alias_findings = _run_aliasing(args) if run_alias else None
+
+    doc = report.to_json_dict(sweep=sweep_rep, aliasing=alias_findings)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2)
+        print(f"[jaxlint] JSON report: {args.json}")
+
+    if not doc["ok"]:
+        print("[jaxlint] FAIL: violations above", file=sys.stderr)
+        return 1
+    print("[jaxlint] clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
