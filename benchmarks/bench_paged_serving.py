@@ -43,10 +43,17 @@ bound for EVERY request, and reports the admitted-streams and
 pages-per-request deltas (ring vs the unbounded absolute tables the paged
 cache used before recycling).
 
+A fifth section re-runs the paged serve INSTRUMENTED (``repro.obs``) and
+emits ``BENCH_serving_obs.json`` — p50/p99 TTFT, the decode-step latency
+histogram, pool-occupancy high-water, and the recycle/CoW/preempt
+counters — the first entry of the run-to-run perf trajectory.
+
   PYTHONPATH=src python -m benchmarks.bench_paged_serving
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -95,7 +102,7 @@ def _workload_windowed(vocab: int):
     return prompts
 
 
-def _make_engine(cfg, params, cache_kind: str) -> Engine:
+def _make_engine(cfg, params, cache_kind: str, obs: bool = False) -> Engine:
     # equal HBM on both sides of each section: a dense slot costs a
     # max_len (windowless) or window-sized (windowed) KV stretch, and the
     # paged pool gets exactly the same bytes as fixed-size pages
@@ -105,10 +112,10 @@ def _make_engine(cfg, params, cache_kind: str) -> Engine:
     n_blocks = DENSE_SLOTS * sc_dense // bs
     if cache_kind == "paged":
         # same bytes, but slots are just batch rows: admission is by pages
-        sc = ServeConfig(n_slots=N_REQ, max_len=MAX_LEN)
+        sc = ServeConfig(n_slots=N_REQ, max_len=MAX_LEN, obs=obs)
         cache = PagedCacheAdapter(block_size=bs, n_blocks=n_blocks)
     else:
-        sc = ServeConfig(n_slots=DENSE_SLOTS, max_len=MAX_LEN)
+        sc = ServeConfig(n_slots=DENSE_SLOTS, max_len=MAX_LEN, obs=obs)
         cache = "dense"
     return Engine(cfg, params, sc, cache=cache)
 
@@ -143,6 +150,40 @@ def _serve(cfg, params, cache_kind: str):
             row["pages_unbounded"] = max(
                 -(-(len(p) + MAX_NEW - 1) // eng2.pm.bs) for p in prompts)
     return row, outs
+
+
+def _serve_obs(cfg, params):
+    """Instrumented paged serve over the mixed workload: the
+    ``BENCH_serving_obs.json`` payload (p50/p99 TTFT, decode-step latency
+    histogram, pool high-water, recycle/CoW/preempt counters), with the
+    Perfetto export validated structurally on the way out."""
+    from repro.obs import serving_obs_doc, validate_perfetto
+    eng = _make_engine(cfg, params, "paged", obs=True)
+    eng.generate(_workload(cfg.vocab_size)[:1], max_new_tokens=2)  # warm
+    eng = _make_engine(cfg, params, "paged", obs=True)
+    prompts = _workload(cfg.vocab_size)
+    outs = eng.generate(prompts, max_new_tokens=MAX_NEW)
+    doc = serving_obs_doc(eng, extra={
+        "workload": {"n_requests": N_REQ, "max_new": MAX_NEW,
+                     "block_size": BLOCK, "max_len": MAX_LEN,
+                     "n_tokens": sum(len(o) for o in outs)}})
+    validate_perfetto(eng.obs.trace.to_perfetto())
+    for key in ("ttft_p50_ms", "ttft_p99_ms", "decode_step_p50_ms",
+                "decode_step_p99_ms", "pool_peak_used", "pool_recycled",
+                "pool_cow", "preempted"):
+        assert doc["headline"].get(key) is not None, key
+    return doc
+
+
+def write_obs_doc(doc, path: str = "") -> str:
+    """Persist the obs payload (default: benchmarks/BENCH_serving_obs.json
+    next to this module) — the file the perf trajectory accumulates."""
+    path = path or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_serving_obs.json")
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
 
 
 def _prefill_traffic(dense: Engine, paged: Engine, bucket: int):
@@ -282,11 +323,14 @@ def run():
             "windowed paged pool must sustain more concurrent streams than "
             f"window-sized dense slots at equal HBM: {r['peak_streams']} "
             f"vs {d['peak_streams']}")
-    return rows, prefill, merged_prefill, rows_w
+
+    # fifth section: the instrumented serve the perf trajectory records
+    obs_doc = _serve_obs(base, params)
+    return rows, prefill, merged_prefill, rows_w, obs_doc
 
 
 def main():
-    rows, prefill, merged_prefill, rows_w = run()
+    rows, prefill, merged_prefill, rows_w, obs_doc = run()
     print(f"{N_REQ} requests, prompts 4..28 tok, +{MAX_NEW} new; equal "
           f"cache HBM ({rows[0]['cache_bytes']/1e6:.2f} MB)")
     hdr = ("weights", "cache", "peak_streams", "tok_s", "ttft_ms",
@@ -344,6 +388,18 @@ def main():
           f"request would pin without recycling")
     print("all four windowed greedy streams token-identical; page "
           "high-water <= ring bound OK")
+
+    h = obs_doc["headline"]
+    path = write_obs_doc(obs_doc)
+    print(f"\ninstrumented serve (repro.obs) -> {path}:")
+    print(f"  TTFT p50/p99 {h['ttft_p50_ms']:.1f}/{h['ttft_p99_ms']:.1f} ms"
+          f" | decode step p50/p99 {h['decode_step_p50_ms']:.2f}/"
+          f"{h['decode_step_p99_ms']:.2f} ms")
+    print(f"  pool peak {h['pool_peak_used']} pages, recycled "
+          f"{h['pool_recycled']}, cow {h['pool_cow']}, prefix hits "
+          f"{h['pool_prefix_hits']}, preempted {h['preempted']}, "
+          f"deferred {h['deferred']}")
+    print("Perfetto export validated; BENCH_serving_obs.json written")
 
 
 if __name__ == "__main__":

@@ -51,8 +51,10 @@ def main() -> None:
                            f"{m['prefill_bytes_saved_frac']:.3f}")
             elif name.startswith("paged_serving"):
                 # run() -> (serve rows, prefill rows, merged-prefill rows,
-                #           windowed serve rows)
-                rows, prefill, merged_prefill, rows_w = rows
+                #           windowed serve rows, instrumented obs doc)
+                rows, prefill, merged_prefill, rows_w, obs_doc = rows
+                # persist the perf-trajectory payload (repro.obs)
+                obs_path = bench_paged_serving.write_obs_doc(obs_doc)
                 dn = next(r for r in rows if r["weights"] == "merged_qp"
                           and r["cache"] == "dense")
                 pg = next(r for r in rows if r["weights"] == "merged_qp"
@@ -65,6 +67,7 @@ def main() -> None:
                           and r["cache"] == "dense")
                 wp = next(r for r in rows_w if r["weights"] == "merged_qp"
                           and r["cache"] == "paged")
+                h = obs_doc["headline"]
                 derived = (f"streams_paged_vs_dense="
                            f"{pg['peak_streams']}v{dn['peak_streams']}"
                            f";prefill_bytes_saved={saved:.3f}"
@@ -72,7 +75,9 @@ def main() -> None:
                            f";windowed_streams="
                            f"{wp['peak_streams']}v{wd['peak_streams']}"
                            f";windowed_page_hwm={wp['page_hwm']}"
-                           f"of{wp['ring_bound']}")
+                           f"of{wp['ring_bound']}"
+                           f";obs_ttft_p99_ms={h['ttft_p99_ms']:.1f}"
+                           f";obs_json={obs_path}")
             elif name.startswith("numerics"):
                 o = next(r for r in rows if r["init"] == "orthogonal"
                          and r["dtype"] == "float32")

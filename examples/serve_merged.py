@@ -61,9 +61,9 @@ def main():
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, size=(rng.randint(6, 24),))
                for _ in range(args.requests)]
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: NTP steps can't skew a duration
     outs = eng.generate(prompts, max_new_tokens=args.max_new)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     n_tok = sum(len(o) for o in outs)
     ttfts = [o.ttft_s for o in outs]
     print(f"{args.requests} requests, {n_tok} tokens in {dt:.2f}s "

@@ -76,9 +76,9 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, cfg.vocab_size, size=(args.prompt_len,))
                for _ in range(args.requests)]
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: NTP steps can't skew a duration
     outs = eng.generate(prompts, max_new_tokens=args.max_new)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total_tokens = sum(len(o) for o in outs)
     ttfts = [o.ttft_s for o in outs]
     print(f"served {args.requests} requests, {total_tokens} tokens "
@@ -93,8 +93,10 @@ def main(argv=None):
               f"deferred {eng.stats['n_deferred']}, "
               f"preempted {eng.stats['n_preempted']}", flush=True)
     for i, o in enumerate(outs[:4]):
+        # decode_tok_s is None for single-token requests (no decode phase)
+        rate = "n/a" if o.decode_tok_s is None else f"{o.decode_tok_s:.1f}"
         print(f"  req{i}: {list(o[:12])}{'…' if len(o) > 12 else ''} "
-              f"(ttft {o.ttft_s:.3f}s, {o.decode_tok_s:.1f} tok/s decode)")
+              f"(ttft {o.ttft_s:.3f}s, {rate} tok/s decode)")
 
 
 if __name__ == "__main__":

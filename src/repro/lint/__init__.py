@@ -20,6 +20,7 @@ before a single token is decoded.  This package checks them:
 from repro.lint import aliasing, report, walker  # noqa: F401
 from repro.lint.builtin import (BUILTIN_RULES, DonationEffective,  # noqa: F401
                                 NoDtypePromotionDrift, NoForbiddenMatmul,
+                                NoHostTransferInObsHooks,
                                 NoHostTransferInStepLoop, NoOversizedBuffer)
 from repro.lint.rules import (Finding, LintRule, LintTarget,  # noqa: F401
                               all_rules, get_rule, register_rule,

@@ -24,6 +24,12 @@ classes this repo has actually shipped, each as a checkable invariant.
                           callback / infeed primitive — one host
                           round-trip in the per-token loop serializes
                           every stream in the batch
+  NoHostTransferInObsHooks  re-tracing a serving program with the
+                          repro.obs observer ACTIVE adds zero
+                          host-transfer/callback primitives — the obs
+                          subsystem's zero-overhead-on-device guarantee
+                          (hooks are host-side; nothing may stage a
+                          callback into the compiled program)
 """
 from __future__ import annotations
 
@@ -197,9 +203,53 @@ class NoHostTransferInStepLoop(LintRule):
         return []
 
 
+def _host_transfer_counts(jaxpr) -> dict:
+    counts: dict = {}
+    for eqn in walker.iter_eqns(jaxpr):
+        n = eqn.primitive.name
+        if n in HOST_TRANSFER_PRIMITIVES:
+            counts[n] = counts.get(n, 0) + 1
+    return counts
+
+
+class NoHostTransferInObsHooks(LintRule):
+    """Instrumentation must never reach into the compiled program.
+
+    The obs subsystem's discipline is host-side-only hooks at the
+    engine's python seams; the temptation it guards against is a kernel
+    or forward path consulting ``repro.obs.get_active()`` and staging a
+    ``debug_print``/callback when observability is on — which would turn
+    "obs on" into a per-token host round-trip.  The sweep re-traces every
+    serving program with an ACTIVE observer (``obs.activated(...)``) into
+    ``instrumented_jaxpr``; this rule diffs host-transfer primitive
+    counts against the uninstrumented trace and demands ZERO new ones.
+    (Count-diff, not absence: a program legitimately carrying such a
+    primitive is ``NoHostTransferInStepLoop``'s business, not ours.)"""
+
+    name = "NoHostTransferInObsHooks"
+    description = ("active-observer re-trace adds zero host-transfer "
+                   "primitives to the serving program")
+
+    def applies(self, t: LintTarget) -> bool:
+        return t.instrumented_jaxpr is not None
+
+    def check(self, t: LintTarget) -> List[Finding]:
+        base = _host_transfer_counts(t.jaxpr)
+        instr = _host_transfer_counts(t.instrumented_jaxpr)
+        new = {n: c - base.get(n, 0) for n, c in instr.items()
+               if c > base.get(n, 0)}
+        if new:
+            return [self.finding(
+                t, f"instrumented program stages host-transfer primitives "
+                   f"the plain program does not: {new} — obs hooks must "
+                   f"stay host-side",
+                detail={"new": new, "base": base, "instrumented": instr})]
+        return []
+
+
 BUILTIN_RULES = (NoForbiddenMatmul(), NoOversizedBuffer(),
                  DonationEffective(), NoDtypePromotionDrift(),
-                 NoHostTransferInStepLoop())
+                 NoHostTransferInStepLoop(), NoHostTransferInObsHooks())
 
 for _rule in BUILTIN_RULES:
     register_rule(_rule)

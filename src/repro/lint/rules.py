@@ -74,7 +74,11 @@ class LintTarget:
     program lowered WITH its production donation declaration;
     ``donated_flat`` are the flat argument positions declared donated.
     ``max_len`` / ``cache_shapes`` / ``cache_dtype`` describe the cache
-    the program serves, for buffer-shape rules."""
+    the program serves, for buffer-shape rules.  ``instrumented_jaxpr``
+    is the SAME program re-traced with the repro.obs observer ACTIVE
+    (``obs.activated(...)``) — ``NoHostTransferInObsHooks`` diffs it
+    against ``jaxpr`` to prove instrumentation stages nothing into the
+    compiled program."""
     phase: str
     cache_kind: str
     style: str
@@ -87,6 +91,7 @@ class LintTarget:
     max_len: Optional[int] = None
     cache_shapes: Tuple[Tuple[int, ...], ...] = ()
     cache_dtype: Any = None
+    instrumented_jaxpr: Any = None
 
     @property
     def key(self) -> str:

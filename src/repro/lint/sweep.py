@@ -139,6 +139,22 @@ def _float_cache_fields(cache_shape) -> Tuple[Tuple[Tuple[int, ...], ...],
     return shapes, dtype
 
 
+def _instrumented_jaxpr(fn, *args):
+    """Re-trace ``fn`` with the repro.obs observer ACTIVE: what the
+    program compiles to in an instrumented serve.  Any forward-path code
+    consulting ``obs.get_active()`` takes its obs-on branch here, so
+    ``NoHostTransferInObsHooks`` can diff the result against the plain
+    trace and prove instrumentation stages nothing into the program.
+
+    The fresh lambda is load-bearing: jax caches traces on (function
+    identity, avals), and every builder traces ``fn`` on these same avals
+    FIRST — re-tracing the same object would return the cached
+    uninstrumented jaxpr and the rule could never fire."""
+    from repro.obs import Observer, activated
+    with activated(Observer(trace_capacity=64)):
+        return jax.make_jaxpr(lambda *a: fn(*a))(*args)
+
+
 def _try_lower(fn, donate_argnums, example_args):
     """Lower ``jit(fn, donate_argnums=…)`` for the example args; returns
     (lowered, donated_flat, note).  Impls that can't lower on this
@@ -169,6 +185,7 @@ def _build_decode_dense(cfg, params, impl) -> Dict[str, Any]:
     shapes, dtype = _float_cache_fields(cshape)
     return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
             "cache_shapes": shapes, "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, ps, toks, cshape),
             "notes": [note] if note else []}
 
 
@@ -187,6 +204,7 @@ def _build_decode_paged(cfg, params, impl) -> Dict[str, Any]:
     shapes, dtype = _float_cache_fields(cshape)
     return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
             "cache_shapes": shapes, "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, ps, toks, cshape),
             "notes": [note] if note else []}
 
 
@@ -203,7 +221,8 @@ def _build_prefill_dense(cfg, params, impl) -> Dict[str, Any]:
     cshape = jax.eval_shape(lambda: init_cache(cfg, 1, SWEEP_DECODE_LEN))
     shapes, dtype = _float_cache_fields(cshape)
     # dense prefill declares no donation (it BUILDS the fresh cache)
-    return {"jaxpr": jaxpr, "cache_shapes": shapes, "cache_dtype": dtype}
+    return {"jaxpr": jaxpr, "cache_shapes": shapes, "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, ps, toks, tl)}
 
 
 def _build_prefill_paged(cfg, params, impl) -> Dict[str, Any]:
@@ -228,7 +247,9 @@ def _build_prefill_paged(cfg, params, impl) -> Dict[str, Any]:
     shapes, dtype = _float_cache_fields(pool)
     return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
             "max_len": SWEEP_MAX_LEN, "cache_shapes": shapes,
-            "cache_dtype": dtype, "notes": [note] if note else []}
+            "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, *args),
+            "notes": [note] if note else []}
 
 
 register_sweep_builders("dense", decode=_build_decode_dense,

@@ -119,6 +119,13 @@ class KVCacheAdapter:
         caches live entirely on device: nothing to declare."""
         return {}
 
+    def obs_gauges(self):
+        """name -> (zero-arg callable, help) of this cache's telemetry,
+        lifted into ``Engine.metrics`` as LAZY gauges — evaluated only at
+        ``collect()`` time, never on the serving path.  Dense caches have
+        no pool to report."""
+        return {}
+
 
 class DenseCacheAdapter(KVCacheAdapter):
     """Worst-case-length slot cache: every slot owns a ``max_len`` stretch
@@ -269,6 +276,20 @@ class PagedCacheAdapter(KVCacheAdapter):
         nbk = -(-bucket_len // self.pm.bs)
         bids = jax.ShapeDtypeStruct((nbk,), jnp.int32)
         return self._prefill.lower(pshape, tk, tl, kp, vp, bids).compile()
+
+    def obs_gauges(self):
+        a = self.pm.allocator
+        return {
+            "pool_blocks_used": (lambda: a.n_used, "pages mapped now"),
+            "pool_blocks_free": (lambda: a.n_free, "pages on the free list"),
+            "pool_peak_used": (lambda: a.peak_used,
+                               "pool occupancy high-water (pages)"),
+            "pool_recycled": (lambda: a.n_recycled,
+                              "ring pages recycled in place"),
+            "pool_cow": (lambda: a.n_cow, "copy-on-write page splits"),
+            "pool_prefix_hits": (lambda: a.n_shared_hits,
+                                 "prefix pages shared at admit"),
+        }
 
 
 def make_adapter(kind: str, sc) -> KVCacheAdapter:

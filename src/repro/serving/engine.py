@@ -67,6 +67,7 @@ from repro.configs.base import ModelConfig
 from repro.distribution import sharding as shd
 from repro.models import (backends, forward_step, prefill_style_key,
                           serving_style_key)
+from repro.obs import NULL, MetricsRegistry, Observer
 from repro.serving import hostbufs
 from repro.serving.adapters import KVCacheAdapter, make_adapter
 
@@ -83,6 +84,12 @@ class ServeConfig:
     block_size: int = 16  # paged: tokens per physical page
     n_blocks: int = 0  # paged pool size; 0 => dense-equivalent HBM
     bucket_prompts: bool = True  # pad prompts to power-of-two buckets
+    # observability (repro.obs).  False (default) => the engine's observer
+    # is the shared NullObserver: every hook a no-op, clock() == 0.0 — the
+    # zero-overhead-off guarantee.  True => a fresh Observer (metrics +
+    # trace ring); an Observer instance is adopted as-is (its registry
+    # becomes Engine.metrics).
+    obs: Any = False
 
 
 @dataclasses.dataclass
@@ -107,12 +114,13 @@ class RequestResult(list):
       prompt_len    tokens in the submitted prompt
       new_tokens    tokens generated (== len(self))
       ttft_s        arrival -> first token, queueing + prefill included
-      decode_tok_s  steady-state decode rate after the first token
-                    (0.0 for single-token requests)
+      decode_tok_s  steady-state decode rate after the first token —
+                    None for single-token requests (there IS no steady
+                    state to measure; a 0.0 here would pollute means)
     """
 
     def __init__(self, tokens, *, prompt_len: int, ttft_s: float,
-                 decode_tok_s: float):
+                 decode_tok_s: Optional[float]):
         super().__init__(tokens)
         self.prompt_len = prompt_len
         self.new_tokens = len(tokens)
@@ -125,14 +133,24 @@ class RequestResult(list):
                 "ttft_s": self.ttft_s, "decode_tok_s": self.decode_tok_s}
 
 
-def _result_of(req: Request) -> RequestResult:
+def _timings_of(req: Request) -> Tuple[float, Optional[float]]:
+    """(ttft_s, decode_tok_s) from a request's host timestamps.
+
+    decode_tok_s is None — NOT 0.0 — when there is no decode phase to
+    rate (single-token requests, missing timestamps): the histogram
+    excludes it (``n_excluded``) instead of averaging in a zero."""
     ttft = (req.t_first - req.t_arrival
             if req.t_first is not None and req.t_arrival is not None else 0.0)
     n = len(req.out_tokens)
-    tok_s = 0.0
+    tok_s = None
     if n > 1 and req.t_last is not None and req.t_first is not None \
             and req.t_last > req.t_first:
         tok_s = (n - 1) / (req.t_last - req.t_first)
+    return ttft, tok_s
+
+
+def _result_of(req: Request) -> RequestResult:
+    ttft, tok_s = _timings_of(req)
     return RequestResult(req.out_tokens, prompt_len=len(req.prompt),
                          ttft_s=ttft, decode_tok_s=tok_s)
 
@@ -171,7 +189,26 @@ class Engine:
         self.key = jax.random.PRNGKey(sc.seed)
         self._slot_keys = jnp.zeros((sc.n_slots, 2), jnp.uint32)
         self._rid = 0
-        self.stats = {"peak_active": 0, "n_preempted": 0, "n_deferred": 0}
+        # observability: the engine ALWAYS owns a MetricsRegistry (the
+        # always-on scheduler counters below cost one attribute update,
+        # same as the dict they replaced — Engine.stats reads through
+        # them).  Heavier telemetry (timestamps, histograms, spans) is
+        # the Observer's, off by default (NULL: every hook a no-op).
+        if isinstance(sc.obs, Observer):
+            self.obs = sc.obs
+            self.metrics = sc.obs.metrics
+        elif sc.obs:
+            self.obs = Observer()
+            self.metrics = self.obs.metrics
+        else:
+            self.obs = NULL
+            self.metrics = MetricsRegistry()
+        self._g_peak = self.metrics.gauge(
+            "serve_peak_active", "most slots concurrently decoding")
+        self._c_preempted = self.metrics.counter(
+            "serve_preempted", "requests evicted mid-decode")
+        self._c_deferred = self.metrics.counter(
+            "serve_deferred", "admissions deferred (pool exhausted)")
         # bucketing needs positions to be paddable: causal attention masks
         # padded tails, but SSM prefill state is not position-masked, and a
         # dense sliding-window cache is a window-sized ring that would drop
@@ -191,6 +228,16 @@ class Engine:
             self._sample_rows = jax.jit(partial(
                 _sample_rows, temperature=sc.temperature, top_k=sc.top_k,
                 vocab_size=cfg.vocab_size))
+        # lifts the adapter/pool telemetry in as LAZY gauges (no-op off)
+        self.obs.attach_engine(self)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Read-through view of the always-on scheduler counters (the
+        pre-obs ``Engine.stats`` dict, now backed by ``self.metrics``)."""
+        return {"peak_active": int(self._g_peak.high_water),
+                "n_preempted": int(self._c_preempted.value),
+                "n_deferred": int(self._c_deferred.value)}
 
     # ------------------------------------------------------------------
     def _build_steps(self):
@@ -293,13 +340,32 @@ class Engine:
         traffic."""
         pshape = jax.eval_shape(lambda: self.params)
         tshape = jax.ShapeDtypeStruct((self.sc.n_slots,), jnp.int32)
-        return self._decode.lower(pshape, tshape, self.kv.spec()).compile()
+        t0 = self.obs.clock()
+        compiled = self._decode.lower(pshape, tshape, self.kv.spec()).compile()
+        self._compile_event("decode", None, compiled, t0)
+        return compiled
 
     def compiled_prefill(self, bucket_len: int):
         """Lower + compile this engine's prefill program for one prompt
         bucket (no execution) — e.g. to read the prefill HBM bytes that
         direct-to-page paged prefill saves over dense."""
-        return self.kv.compiled_prefill(self.params, bucket_len)
+        t0 = self.obs.clock()
+        compiled = self.kv.compiled_prefill(self.params, bucket_len)
+        self._compile_event("prefill", bucket_len, compiled, t0)
+        return compiled
+
+    def _compile_event(self, phase: str, bucket_len: Optional[int],
+                       compiled, t0: float) -> None:
+        """Emit a compile metric/span — obs-on only (``as_text`` is
+        expensive; the off path must never pay for it)."""
+        if not self.obs.enabled:
+            return
+        t1 = self.obs.clock()
+        try:
+            hlo_bytes = len(compiled.as_text())
+        except Exception:
+            hlo_bytes = 0  # backends without HLO text introspection
+        self.obs.compile_event(phase, bucket_len, hlo_bytes, t1 - t0)
 
     # ------------------------------------------------------------------
     def _bucket_pad(self, toks: np.ndarray) -> Tuple[np.ndarray, int]:
@@ -349,9 +415,10 @@ class Engine:
         slot = self.free_slots[0]
         n_shared = self.kv.admit(slot, toks)
         if n_shared is None:
-            self.stats["n_deferred"] += 1
+            self._c_deferred.inc()
             return False
         self.free_slots.pop(0)
+        t_p0 = self.obs.clock()  # slot granted: queued span ends here
 
         padded, n = self._bucket_pad(toks)
         # host_to_device (copy), NOT jnp.asarray: for a bucket-exact int32
@@ -385,14 +452,29 @@ class Engine:
             req.t_first = req.t_last = now
         self.active[slot] = req
         self._last_token[slot] = int(tok)
-        self.stats["peak_active"] = max(self.stats["peak_active"],
-                                        len(self.active))
+        self._g_peak.set_max(len(self.active))
+        self.obs.request_admitted(req, slot, n_shared=n_shared,
+                                  resume=resume, bucket_len=len(padded),
+                                  t_prefill0=t_p0)
+        if not resume and (req.remaining <= 0 or tok == self.sc.eos_token):
+            # the prefill-sampled token already satisfied the budget (or
+            # is EOS): finish now — a decode step would overshoot
+            # max_new_tokens by one
+            self.kv.release(slot)
+            req.slot = -1
+            del self.active[slot]
+            self.free_slots.append(slot)
+            if self.obs.enabled:  # terminal hook: exactly once
+                ttft, tok_s = _timings_of(req)
+                self.obs.request_finished(req, decode_tok_s=tok_s,
+                                          ttft_s=ttft)
         return True
 
     def step(self) -> Dict[int, int]:
         """One batched decode step for all active slots; returns slot->token."""
         if not self.active:
             return {}
+        t0 = self.obs.clock()  # step span includes appendability/preempts
         self._make_appendable()
         if not self.active:
             return {}
@@ -420,6 +502,12 @@ class Engine:
                 req.slot = -1
                 del self.active[slot]
                 self.free_slots.append(slot)
+                if self.obs.enabled:  # terminal hook: exactly once
+                    ttft, tok_s = _timings_of(req)
+                    self.obs.request_finished(req, decode_tok_s=tok_s,
+                                              ttft_s=ttft)
+        self.obs.step_done(t0, self.obs.clock(), n_active=len(self.active),
+                           n_tokens=len(emitted))
         return emitted
 
     def _make_appendable(self):
@@ -448,7 +536,8 @@ class Engine:
         # request must own its resume key (lint: NoHostViewOfDeviceBuffer)
         req.key_state = np.array(self._slot_keys[slot])  # resume in place
         self.preempted.append(req)
-        self.stats["n_preempted"] += 1
+        self._c_preempted.inc()
+        self.obs.request_preempted(req, slot)
 
     def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int = 32,
                  vision: Optional[Sequence[np.ndarray]] = None
@@ -458,6 +547,7 @@ class Engine:
         Returns one :class:`RequestResult` per prompt — the generated
         token ids (list semantics preserved) plus prompt_len / new_tokens
         / ttft_s / decode_tok_s."""
+        t_gen0 = self.obs.clock()
         t_arrival = time.perf_counter()
         pending = [Request(prompt=np.asarray(p, np.int32),
                            max_new_tokens=max_new_tokens,
@@ -469,6 +559,7 @@ class Engine:
         vis = list(vision) if vision is not None else [None] * len(pending)
         vqueue = list(vis)
         while queue or self.active or self.preempted:
+            self.obs.queue_depth(len(queue) + len(self.preempted))
             while self.free_slots:
                 if self.preempted:  # resumes have progress: highest priority
                     if not self.submit(self.preempted[0]):
@@ -492,6 +583,13 @@ class Engine:
                 if r.slot == -1:  # finished (not preempted, not active)
                     results[order[id(r)]] = _result_of(r)
                     inflight.remove(r)
+        for r in inflight:  # finished at submit time on the final pass
+            if r.slot == -1:
+                results[order[id(r)]] = _result_of(r)
+        if self.obs.enabled:
+            self.obs.generate_done(
+                t_gen0, self.obs.clock(), n_requests=len(pending),
+                n_tokens=sum(r.new_tokens for r in results if r is not None))
         return results  # type: ignore
 
     # ------------------------------------------------------------------

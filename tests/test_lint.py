@@ -12,9 +12,9 @@ import pytest
 from repro.configs import get_config, reduce_config
 from repro.lint import (DonationEffective, Finding, LintRule, LintTarget,
                         NoDtypePromotionDrift, NoForbiddenMatmul,
-                        NoHostTransferInStepLoop, NoOversizedBuffer, aliasing,
-                        get_rule, register_rule, registered_rules, run_rules,
-                        sweep, walker)
+                        NoHostTransferInObsHooks, NoHostTransferInStepLoop,
+                        NoOversizedBuffer, aliasing, get_rule, register_rule,
+                        registered_rules, run_rules, sweep, walker)
 from repro.lint.builtin import HOST_TRANSFER_PRIMITIVES
 from repro.models import backends, init_params
 from repro.serving import Engine, ServeConfig
@@ -182,6 +182,49 @@ def test_host_transfer_fires_on_debug_print_in_step():
     assert NoHostTransferInStepLoop().check(_target(jaxpr=clean)) == []
 
 
+def test_obs_hooks_rule_fires_on_instrumentation_staged_into_program():
+    """A program that consults the active observer and stages a
+    debug_print when obs is on: the count DIFF between the plain and
+    instrumented traces is what must fire, not mere presence."""
+    from repro.obs import Observer, activated, get_active
+
+    def f(x):
+        if get_active().enabled:  # the forbidden temptation
+            jax.debug.print("tok {}", x[0])
+        return x * 2
+
+    plain = jax.make_jaxpr(f)(jnp.zeros((3,)))
+    with activated(Observer(trace_capacity=16)):
+        # fresh lambda: defeat jax's (fn identity, avals) trace cache,
+        # exactly as the sweep's _instrumented_jaxpr must
+        instr = jax.make_jaxpr(lambda x: f(x))(jnp.zeros((3,)))
+    t = _target(jaxpr=plain, instrumented_jaxpr=instr)
+    findings = NoHostTransferInObsHooks().check(t)
+    assert findings and findings[0].rule == "NoHostTransferInObsHooks"
+    assert findings[0].detail["new"], findings[0].detail
+    assert "host-side" in findings[0].message
+
+
+def test_obs_hooks_rule_quiet_on_identical_and_preexisting_transfers():
+    # identical traces: clean
+    clean = jax.make_jaxpr(lambda x: x * 2)(jnp.zeros((3,)))
+    assert NoHostTransferInObsHooks().check(
+        _target(jaxpr=clean, instrumented_jaxpr=clean)) == []
+
+    # a host transfer present in BOTH traces is NoHostTransferInStepLoop's
+    # business — the count diff is zero, so this rule stays quiet
+    def leaky(x):
+        jax.debug.print("tok {}", x[0])
+        return x * 2
+
+    jx = jax.make_jaxpr(leaky)(jnp.zeros((3,)))
+    assert NoHostTransferInObsHooks().check(
+        _target(jaxpr=jx, instrumented_jaxpr=jx)) == []
+
+    # no instrumented trace recorded -> rule does not apply
+    assert not NoHostTransferInObsHooks().applies(_target(jaxpr=clean))
+
+
 def test_run_rules_scopes_by_applies():
     jx = jax.make_jaxpr(lambda x: x + 1)(jnp.zeros((2,)))
     ran, findings = run_rules(_target(phase="prefill", jaxpr=jx))
@@ -213,6 +256,9 @@ def test_sweep_covers_every_registered_backend(sweep_report):
         if t.phase == "decode":
             assert "NoHostTransferInStepLoop" in t.rules_run, t.key
         assert "NoDtypePromotionDrift" in t.rules_run, t.key
+        # every builder re-traces under an active observer, so the obs
+        # host-transfer diff must have run everywhere
+        assert "NoHostTransferInObsHooks" in t.rules_run, t.key
         if t.impl in ("xla", "pallas_interpret") and (
                 t.phase == "decode" or t.cache_kind == "paged"):
             # production donates the cache/pools; the sweep must prove

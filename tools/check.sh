@@ -32,6 +32,13 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
 python tools/jaxlint.py --sweep --aliasing
 echo "[check] jaxlint clean"
 
+# observability self-check: metrics math, trace-ring semantics, a real
+# instrumented micro-serve, and structural validation of the Perfetto
+# export (tools/obsdump.py is the same CLI CI's analysis job uses to
+# produce its uploaded trace artifacts)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tools/obsdump.py --selftest
+echo "[check] obsdump selftest clean"
+
 # lint: pyflakes (F), comparison/lambda/identifier pitfalls (E7), and
 # bugbear (B) over src/, exactly what CI's `lint` job runs.  ruff comes
 # from the same requirements-dev.txt install as pytest; if that install

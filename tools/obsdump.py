@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""obsdump: run a short instrumented serve and dump its observability.
+
+  PYTHONPATH=src python tools/obsdump.py                  # summary table
+  PYTHONPATH=src python tools/obsdump.py --json m.json    # metrics JSON
+  PYTHONPATH=src python tools/obsdump.py --perfetto t.json  # trace for
+                                           https://ui.perfetto.dev
+  PYTHONPATH=src python tools/obsdump.py --prometheus -   # text format
+  PYTHONPATH=src python tools/obsdump.py --selftest       # CI smoke
+
+The serve is a reduced-shape model (init_params weights — observability
+is about the ENGINE's behavior, not the logits) over a mixed-length
+prompt batch sized to exercise queueing; ``--cache paged`` (default)
+also exercises pool admission.  ``--selftest`` runs a tiny serve and
+structurally validates every export path (metrics JSON, Prometheus
+text, Perfetto trace_event document, trace invariants) plus the
+off-by-default NullObserver contract — the obs smoke ``tools/check.sh``
+and CI run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def build_engine(args):
+    import jax
+    from repro.configs import get_config, reduce_config
+    from repro.models import init_params
+    from repro.serving import Engine, PagedCacheAdapter, ServeConfig
+
+    cfg = reduce_config(get_config(args.arch))
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    sc = ServeConfig(n_slots=args.slots, max_len=args.max_len, obs=True,
+                     seed=args.seed)
+    cache = (PagedCacheAdapter(block_size=args.block_size,
+                               n_blocks=args.n_blocks or None)
+             if args.cache == "paged" else "dense")
+    return Engine(cfg, params, sc, cache=cache), cfg
+
+
+def run_serve(eng, cfg, args):
+    import numpy as np
+    rng = np.random.RandomState(args.seed)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           size=(int(rng.randint(4, args.max_len // 3)),))
+               for _ in range(args.requests)]
+    return eng.generate(prompts, max_new_tokens=args.max_new)
+
+
+def summarize(eng) -> str:
+    from repro.obs import serving_obs_doc
+    doc = serving_obs_doc(eng)
+    lines = ["obs summary (instrumented serve)", "-" * 34]
+    for k in sorted(doc["headline"]):
+        v = doc["headline"][k]
+        lines.append(f"  {k:<22} {v if v is not None else 'n/a'}")
+    tr = eng.obs.trace
+    lines.append(f"  trace_events           {len(tr)} "
+                 f"(dropped {tr.n_dropped}, open {len(tr.open_spans())})")
+    return "\n".join(lines)
+
+
+def selftest() -> int:
+    """End-to-end structural validation of every obs surface."""
+    import numpy as np
+    from repro import obs as O
+
+    # pillar 1/2 units first: no engine needed, fails fast and cheap
+    m = O.MetricsRegistry()
+    h = m.histogram("h", lo=1e-3, hi=1e3)
+    for v in (0.01, 0.1, 0.1, 1.0):
+        h.observe(v)
+    h.observe(None)  # the excluded single-token marker
+    assert h.collect()["n_excluded"] == 1 and h.count == 4
+    assert h.vmin <= h.percentile(0.5) <= h.vmax
+    assert "h_bucket{le=" in m.to_prometheus()
+    tr = O.TraceBuffer(capacity=8)
+    tr.begin(O.request_track(0), "decode", t=0.0)
+    for i in range(20):  # overflow the ring: open span must survive
+        tr.instant(O.engine_track(), f"i{i}", t=float(i))
+    assert tr.n_dropped > 0 and tr.open_spans() == [(("request", 0),
+                                                    "decode")]
+    O.validate_perfetto(tr.to_perfetto())
+
+    # pillar 3: a real (tiny) serve, obs on, then the off contract
+    ns = argparse.Namespace(arch="llama3.2-1b", seed=0, slots=2, max_len=64,
+                            cache="paged", block_size=8, n_blocks=0,
+                            requests=4, max_new=4)
+    eng, cfg = build_engine(ns)
+    outs = run_serve(eng, cfg, ns)
+    assert len(outs) == 4 and all(len(o) > 0 for o in outs)
+    doc = O.serving_obs_doc(eng)
+    json.loads(json.dumps(doc))
+    for key in ("ttft_p50_ms", "ttft_p99_ms", "decode_step_p50_ms",
+                "decode_step_p99_ms", "pool_peak_used", "preempted",
+                "deferred"):
+        assert key in doc["headline"], key
+    counts = O.validate_perfetto(eng.obs.trace.to_perfetto())
+    assert counts.get("X", 0) > 0 and counts.get("M", 0) > 0
+    for r in range(4):  # exactly one terminal event per request
+        evs = O.request_events(eng.obs.trace, r)
+        assert sum(e["name"] == "finish" for e in evs) == 1, (r, evs)
+
+    from repro.serving.engine import Engine  # off mode: NULL observer
+    assert O.NULL.enabled is False and O.NULL.clock() == 0.0
+    assert O.get_active() is O.NULL
+    del Engine
+    print("obsdump selftest OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--selftest", action="store_true",
+                    help="structural validation of every export (CI smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the serving obs doc (metrics + headline)")
+    ap.add_argument("--perfetto", metavar="PATH",
+                    help="write the Perfetto trace_event JSON")
+    ap.add_argument("--prometheus", metavar="PATH",
+                    help="write Prometheus text format ('-' for stdout)")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--cache", default="paged", choices=("dense", "paged"))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--n-blocks", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        return selftest()
+
+    from repro import obs as O
+    eng, cfg = build_engine(args)
+    run_serve(eng, cfg, args)
+    if args.json:
+        O.write_json(args.json, O.serving_obs_doc(eng))
+        print(f"wrote {args.json}")
+    if args.perfetto:
+        doc = eng.obs.trace.to_perfetto()
+        O.validate_perfetto(doc)
+        O.write_json(args.perfetto, doc)
+        print(f"wrote {args.perfetto} (open at https://ui.perfetto.dev)")
+    if args.prometheus:
+        text = eng.metrics.to_prometheus()
+        if args.prometheus == "-":
+            sys.stdout.write(text)
+        else:
+            with open(args.prometheus, "w") as fh:
+                fh.write(text)
+            print(f"wrote {args.prometheus}")
+    print(summarize(eng))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
