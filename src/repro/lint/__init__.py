@@ -13,11 +13,13 @@ before a single token is decoded.  This package checks them:
               DonationEffective, NoDtypePromotionDrift,
               NoHostTransferInStepLoop)
   sweep       sweep() — lint EVERY registered (cache_kind, style, impl)
-              decode/prefill backend combo, zero per-combo code
+              decode/prefill/chunk backend combo, zero per-combo code
   aliasing    audit_engine() — the host-aliasing race detector
+  submitpath  audit_submit_path() — NoSyncPrefillInSubmit: the scheduled
+              engine's submit must enqueue only (with positive control)
   report      human/JSON rendering (tools/jaxlint.py is the CLI)
 """
-from repro.lint import aliasing, report, walker  # noqa: F401
+from repro.lint import aliasing, report, submitpath, walker  # noqa: F401
 from repro.lint.builtin import (BUILTIN_RULES, DonationEffective,  # noqa: F401
                                 NoDtypePromotionDrift, NoForbiddenMatmul,
                                 NoHostTransferInObsHooks,
@@ -28,3 +30,4 @@ from repro.lint.rules import (Finding, LintRule, LintTarget,  # noqa: F401
 from repro.lint.sweep import (SweepReport, TargetReport,  # noqa: F401
                               register_sweep_builders, sweep, sweep_models)
 from repro.lint.aliasing import audit_engine  # noqa: F401
+from repro.lint.submitpath import audit_submit_path  # noqa: F401

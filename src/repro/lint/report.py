@@ -15,9 +15,11 @@ def render_sweep(report: SweepReport, out=None, verbose: bool = False
     out = out or sys.stdout
     n_rules = sum(len(t.rules_run) for t in report.targets)
     print(f"repro.lint sweep: {report.n_decode_targets} decode + "
-          f"{report.n_prefill_targets} prefill backends "
+          f"{report.n_prefill_targets} prefill + "
+          f"{report.n_chunk_targets} chunk backends "
           f"(registry: {report.n_decode_backends} + "
-          f"{report.n_prefill_backends}), {n_rules} rule runs",
+          f"{report.n_prefill_backends} + {report.n_chunk_backends}), "
+          f"{n_rules} rule runs",
           file=out)
     for t in report.targets:
         mark = "FAIL" if any(f.severity == "error" for f in t.findings) \
@@ -48,7 +50,8 @@ def render_rules(out=None) -> None:
 
 
 def to_json_dict(sweep: Optional[SweepReport] = None,
-                 aliasing: Optional[List[Finding]] = None
+                 aliasing: Optional[List[Finding]] = None,
+                 submit: Optional[List[Finding]] = None
                  ) -> Dict[str, Any]:
     doc: Dict[str, Any] = {"rules": {r.name: r.description
                                      for r in all_rules()}}
@@ -59,5 +62,8 @@ def to_json_dict(sweep: Optional[SweepReport] = None,
     if aliasing is not None:
         doc["aliasing"] = [f.to_dict() for f in aliasing]
         ok = ok and not any(f.severity == "error" for f in aliasing)
+    if submit is not None:
+        doc["submit"] = [f.to_dict() for f in submit]
+        ok = ok and not any(f.severity == "error" for f in submit)
     doc["ok"] = ok
     return doc

@@ -1,0 +1,141 @@
+"""NoSyncPrefillInSubmit: the admission-stall class as a check.
+
+The pre-scheduler ``Engine.submit`` ran a whole-prompt, batch-of-1
+prefill SYNCHRONOUSLY at admission — every arrival froze all in-flight
+decode streams for a bucket-compiled prefill (the stall
+``repro.serving.sched`` exists to remove).  This audit makes the class
+un-shippable, the way ``repro.lint.aliasing`` did for zero-copy races:
+
+``audit_submit_path()`` builds reduced-shape ``ScheduledEngine``s (dense
+and paged), wraps every device-dispatching callable the adapter owns
+(prefill program, chunk program, decode step) with a call-counting spy,
+drives ``submit`` for fresh prompts, and asserts ZERO dispatches — the
+scheduled submit path must only enqueue.  A POSITIVE CONTROL then runs
+the same spy over the synchronous ``Engine.submit``, which MUST fire the
+prefill program: if it doesn't, the spy is not observing the seam and
+the audit fails itself rather than passing vacuously.
+
+Each hit is a :class:`repro.lint.rules.Finding` (rule
+``NoSyncPrefillInSubmit``), the same currency as the jaxpr rules, so
+``tools/jaxlint.py --submit`` reports it in the one sweep.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.lint.rules import Finding
+
+RULE_SUBMIT = "NoSyncPrefillInSubmit"
+
+# every adapter attribute that, when called, dispatches a device program
+_DISPATCH_ATTRS = ("_prefill", "_chunk")
+
+
+@contextlib.contextmanager
+def _counting_spies(engine, counts: Dict[str, int]):
+    """Wrap the engine's device-dispatching callables with counters.
+    ``counts`` maps seam name -> calls observed while armed."""
+    holders = []  # (obj, attr, original)
+
+    def arm(obj, attr, name):
+        if not hasattr(obj, attr):
+            return
+        orig = getattr(obj, attr)
+        counts.setdefault(name, 0)
+
+        def wrapped(*args, __name=name, __orig=orig, **kwargs):
+            counts[__name] += 1
+            return __orig(*args, **kwargs)
+
+        holders.append((obj, attr, orig))
+        setattr(obj, attr, wrapped)
+
+    for attr in _DISPATCH_ATTRS:
+        arm(engine.kv, attr, f"kv.{attr}")
+    arm(engine, "_decode", "engine._decode")
+    try:
+        yield
+    finally:
+        for obj, attr, orig in holders:
+            setattr(obj, attr, orig)
+
+
+def _prompts(engine, n: int = 3) -> List[np.ndarray]:
+    vocab = engine.cfg.vocab_size
+    return [(np.arange(8, dtype=np.int32) * (i + 3)) % vocab
+            for i in range(n)]
+
+
+def audit_submit(engine, context: str) -> List[Finding]:
+    """Drive ``engine.submit`` with the spies armed; any device dispatch
+    on the submit path is a finding.  The engine is expected to be a
+    ScheduledEngine (or anything whose submit only enqueues)."""
+    from repro.serving.engine import Request  # local: lint imports stay light
+
+    counts: Dict[str, int] = {}
+    with _counting_spies(engine, counts):
+        for p in _prompts(engine):
+            engine.submit(Request(prompt=p, max_new_tokens=4))
+    findings = []
+    for name, n in sorted(counts.items()):
+        if n:
+            findings.append(Finding(
+                rule=RULE_SUBMIT, target=context,
+                message=f"submit dispatched {name} {n}x — admission must "
+                        f"only enqueue; a synchronous prefill at submit "
+                        f"freezes every in-flight decode stream for a "
+                        f"whole-prompt program (the stall class "
+                        f"repro.serving.sched removes)",
+                detail={"seam": name, "calls": n}))
+    return findings
+
+
+def positive_control(engine, context: str) -> List[Finding]:
+    """The synchronous ``Engine.submit`` MUST fire its prefill program
+    under the same spies — otherwise the audit observes nothing and a
+    clean report would be vacuous."""
+    from repro.serving.engine import Request
+
+    counts: Dict[str, int] = {}
+    with _counting_spies(engine, counts):
+        engine.submit(Request(prompt=_prompts(engine, 1)[0],
+                              max_new_tokens=4))
+    if not counts.get("kv._prefill"):
+        return [Finding(
+            rule=RULE_SUBMIT, target=context,
+            message="positive control FAILED: the synchronous engine's "
+                    "submit fired no prefill through the spied seam — the "
+                    "audit is not observing dispatches and cannot certify "
+                    "the scheduled path",
+            detail={"counts": dict(counts)})]
+    return []
+
+
+def audit_submit_path(cfg=None, params=None) -> List[Finding]:
+    """Build reduced dense + paged ScheduledEngines and one synchronous
+    Engine; returns every confirmed finding (empty == clean)."""
+    import jax
+
+    from repro.configs import get_config, reduce_config
+    from repro.models import init_params
+    from repro.serving import Engine, ServeConfig
+    from repro.serving.sched import SchedConfig, ScheduledEngine
+
+    if cfg is None:
+        cfg = reduce_config(get_config("llama3.2-1b"))
+    if params is None:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+    findings: List[Finding] = []
+    scfg = SchedConfig(token_budget=32, chunk_tokens=16)
+    for kind in ("dense", "paged"):
+        eng = ScheduledEngine(cfg, params,
+                              ServeConfig(n_slots=2, max_len=48),
+                              scfg=scfg, cache=kind)
+        findings += audit_submit(eng, f"ScheduledEngine[{kind}].submit")
+    sync = Engine(cfg, params, ServeConfig(n_slots=2, max_len=48),
+                  cache="dense")
+    findings += positive_control(sync, "Engine[dense].submit")
+    return findings

@@ -37,9 +37,10 @@ from repro.core import merge_skipless
 from repro.lint import walker
 from repro.lint.rules import (Finding, LintRule, LintTarget, all_rules,
                               run_rules)
-from repro.models import (DensePrefillDest, PagedPrefillDest, backends,
-                          forward_prefill, forward_step, init_cache,
-                          init_paged_cache, init_params)
+from repro.models import (DenseChunkDest, DensePrefillDest, PagedChunkDest,
+                          PagedPrefillDest, backends, forward_prefill,
+                          forward_prefill_chunk, forward_step, init_cache,
+                          init_paged_cache, init_params, paged_table_blocks)
 
 SWEEP_DTYPE = "bfloat16"   # sub-fp32 so promotion drift is observable
 SWEEP_MAX_LEN = 160        # collides with no model/pool dim (cf. tests)
@@ -47,6 +48,10 @@ SWEEP_BLOCK = 8
 SWEEP_POOL_BLOCKS = 21     # 21*8 = 168 != SWEEP_MAX_LEN
 SWEEP_BUCKET = 16
 SWEEP_DECODE_LEN = 32
+SWEEP_CHUNK = 8            # chunk width (ring paged pins it to the block)
+SWEEP_CHUNK_LEN = 16       # dense chunk cache len: == the reduced configs'
+#                            sliding window, so the window is NON-binding
+#                            and dense chunking is legal (cf. adapters)
 
 
 @dataclasses.dataclass
@@ -74,6 +79,7 @@ class SweepReport:
     targets: List[TargetReport]
     n_decode_backends: int
     n_prefill_backends: int
+    n_chunk_backends: int = 0
 
     @property
     def findings(self) -> List[Finding]:
@@ -95,10 +101,15 @@ class SweepReport:
     def n_prefill_targets(self) -> int:
         return sum(1 for t in self.targets if t.phase == "prefill")
 
+    @property
+    def n_chunk_targets(self) -> int:
+        return sum(1 for t in self.targets if t.phase == "chunk")
+
     def to_dict(self) -> Dict[str, Any]:
         return {"targets": [t.to_dict() for t in self.targets],
                 "n_decode_backends": self.n_decode_backends,
                 "n_prefill_backends": self.n_prefill_backends,
+                "n_chunk_backends": self.n_chunk_backends,
                 "ok": self.ok}
 
 
@@ -114,17 +125,21 @@ TargetBuilder = Callable[..., Dict[str, Any]]
 
 _DECODE_BUILDERS: Dict[str, TargetBuilder] = {}
 _PREFILL_BUILDERS: Dict[str, TargetBuilder] = {}
+_CHUNK_BUILDERS: Dict[str, TargetBuilder] = {}
 
 
 def register_sweep_builders(cache_kind: str, *,
                             decode: Optional[TargetBuilder] = None,
-                            prefill: Optional[TargetBuilder] = None) -> None:
+                            prefill: Optional[TargetBuilder] = None,
+                            chunk: Optional[TargetBuilder] = None) -> None:
     """Register how the sweep builds ``cache_kind``'s reduced-shape
     programs (latest wins, like every registry here)."""
     if decode is not None:
         _DECODE_BUILDERS[cache_kind] = decode
     if prefill is not None:
         _PREFILL_BUILDERS[cache_kind] = prefill
+    if chunk is not None:
+        _CHUNK_BUILDERS[cache_kind] = chunk
 
 
 def _float_cache_fields(cache_shape) -> Tuple[Tuple[Tuple[int, ...], ...],
@@ -252,10 +267,64 @@ def _build_prefill_paged(cfg, params, impl) -> Dict[str, Any]:
             "notes": [note] if note else []}
 
 
+def _build_chunk_dense(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1, SWEEP_CHUNK), jnp.int32)
+    s = jax.ShapeDtypeStruct((1,), jnp.int32)
+    tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+    slot = jax.ShapeDtypeStruct((1,), jnp.int32)
+    cshape = jax.eval_shape(lambda: init_cache(cfg, 1, SWEEP_CHUNK_LEN))
+
+    def fn(p, t, st, n, sl, c):
+        return forward_prefill_chunk(p, cfg, t, DenseChunkDest(c, sl),
+                                     start=st, true_len=n, impl=impl,
+                                     max_len=SWEEP_CHUNK_LEN)
+
+    args = (ps, toks, s, tl, slot, cshape)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    # the dense adapter donates the cache (build_chunk donate=(5,))
+    lowered, donated, note = _try_lower(fn, (5,), args)
+    shapes, dtype = _float_cache_fields(cshape)
+    return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
+            "cache_shapes": shapes, "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, *args),
+            "notes": [note] if note else []}
+
+
+def _build_chunk_paged(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1, SWEEP_CHUNK), jnp.int32)
+    s = jax.ShapeDtypeStruct((1,), jnp.int32)
+    tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+    pool = jax.eval_shape(
+        lambda: init_paged_cache(cfg, SWEEP_POOL_BLOCKS, SWEEP_BLOCK, 1,
+                                 SWEEP_MAX_LEN))
+    kp, vp = pool.k, pool.v
+    mb = paged_table_blocks(cfg, SWEEP_BLOCK, SWEEP_MAX_LEN)
+    trow = jax.ShapeDtypeStruct((1, mb), jnp.int32)
+    bids = jax.ShapeDtypeStruct((SWEEP_CHUNK // SWEEP_BLOCK,), jnp.int32)
+
+    def fn(p, t, st, n, k, v, tr, b):
+        return forward_prefill_chunk(p, cfg, t, PagedChunkDest(k, v, tr, b),
+                                     start=st, true_len=n, impl=impl)
+
+    args = (ps, toks, s, tl, kp, vp, trow, bids)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    # the paged adapter donates the pools (build_chunk donate=(4, 5))
+    lowered, donated, note = _try_lower(fn, (4, 5), args)
+    shapes, dtype = _float_cache_fields(pool)
+    return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
+            "cache_shapes": shapes, "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, *args),
+            "notes": [note] if note else []}
+
+
 register_sweep_builders("dense", decode=_build_decode_dense,
-                        prefill=_build_prefill_dense)
+                        prefill=_build_prefill_dense,
+                        chunk=_build_chunk_dense)
 register_sweep_builders("paged", decode=_build_decode_paged,
-                        prefill=_build_prefill_paged)
+                        prefill=_build_prefill_paged,
+                        chunk=_build_chunk_paged)
 
 
 # ---------------------------------------------------------------------------
@@ -339,14 +408,20 @@ def sweep(rules: Optional[List[LintRule]] = None,
     models = sweep_models()
     dkeys = backends.registered_backends()
     pkeys = backends.registered_prefill_backends()
+    ckeys = backends.registered_chunk_backends()
     targets = _sweep_phase("decode", dkeys, models, _DECODE_BUILDERS,
                            rules, progress)
     targets += _sweep_phase("prefill", pkeys, models, _PREFILL_BUILDERS,
                             rules, progress)
+    targets += _sweep_phase("chunk", ckeys, models, _CHUNK_BUILDERS,
+                            rules, progress)
     report = SweepReport(targets=targets, n_decode_backends=len(dkeys),
-                         n_prefill_backends=len(pkeys))
+                         n_prefill_backends=len(pkeys),
+                         n_chunk_backends=len(ckeys))
     assert report.n_decode_targets == len(dkeys), (
         report.n_decode_targets, len(dkeys))
     assert report.n_prefill_targets == len(pkeys), (
         report.n_prefill_targets, len(pkeys))
+    assert report.n_chunk_targets == len(ckeys), (
+        report.n_chunk_targets, len(ckeys))
     return report

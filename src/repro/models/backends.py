@@ -50,8 +50,18 @@ a new merged variant) is::
 
     backends.register_prefill_backend("mykind", "generic", my_prefill)
 
+A third phase shares the key space: *chunk* — a fixed-size slice of a
+prompt prefilled in place (``ChunkBackend`` behind
+``models.transformer.forward_prefill_chunk``).  Chunked prefill is what the
+continuous-batching scheduler (``repro.serving.sched``) interleaves with
+decode: one compiled program per cache kind processes chunk ``[start,
+start+C)`` of a single stream against the batched cache/pool, so admission
+never stalls in a whole-prompt prefill.  Register with
+``register_chunk_backend("mykind", "generic", my_chunk_run)`` where
+``my_chunk_run(params, cfg, chunk, dest, ctx) -> (last_logits, dest')``.
+
 Steps take ``impl`` from ``ctx`` so one function usually serves every impl
-key; both ``register_*`` helpers register all three impls by default.
+key; all ``register_*`` helpers register all three impls by default.
 Lookups of unregistered combinations fail loudly with the list of
 registered keys — there is no silent fallback path.
 """
@@ -182,3 +192,67 @@ def get_prefill_backend(cache_kind: str, style: str,
 
 def registered_prefill_backends() -> List[Tuple[str, str, str]]:
     return sorted(_PREFILL_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# chunk: fixed-size prompt-slice prefill programs, same key space
+# ---------------------------------------------------------------------------
+
+# run(params, cfg, chunk, dest, ctx) -> (last_logits, filled destination)
+ChunkFn = Callable[..., Tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkBackend:
+    """One registered (cache_kind, style, impl) chunked-prefill route.
+
+    A chunk backend runs the stack over ONE fixed-size slice ``[start,
+    start+C)`` of a single prompt, attending to everything the slot has
+    accumulated so far (earlier chunks + the slice itself), and writes the
+    slice's KV into the batched cache / pool pages in place.  The static
+    chunk width C means one compiled program serves every chunk of every
+    prompt — the scheduler never pays a bucket compile at admission.
+    ``fast_path`` is True when the program reads no Q or P weights (the
+    merged qp layout cashed in chunk-by-chunk).
+    """
+    cache_kind: str
+    style: str
+    impl: str
+    run: ChunkFn
+    fast_path: bool = False
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        return (self.cache_kind, self.style, self.impl)
+
+
+_CHUNK_REGISTRY: Dict[Tuple[str, str, str], ChunkBackend] = {}
+
+
+def register_chunk_backend(cache_kind: str, style: str, run: ChunkFn, *,
+                           impls: Tuple[str, ...] = IMPLS,
+                           fast_path: bool = False) -> None:
+    """Register ``run`` under (cache_kind, style) for each impl in
+    ``impls``.  Re-registration overwrites (latest wins)."""
+    for impl in impls:
+        _CHUNK_REGISTRY[(cache_kind, style, impl)] = ChunkBackend(
+            cache_kind=cache_kind, style=style, impl=impl, run=run,
+            fast_path=fast_path)
+
+
+def get_chunk_backend(cache_kind: str, style: str, impl: str) -> ChunkBackend:
+    """Look up the chunk backend for one combo; unknown combos raise
+    KeyError naming the offending key and every registered one (no silent
+    fallback)."""
+    key = (cache_kind, style, impl)
+    try:
+        return _CHUNK_REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"no ChunkBackend registered for (cache_kind={cache_kind!r}, "
+            f"style={style!r}, impl={impl!r}); registered chunk combos: "
+            f"{registered_chunk_backends()}") from None
+
+
+def registered_chunk_backends() -> List[Tuple[str, str, str]]:
+    return sorted(_CHUNK_REGISTRY)

@@ -1409,3 +1409,325 @@ def forward_decode_paged(params, cfg: ModelConfig, token,
         "registry", DeprecationWarning, stacklevel=2)
     return forward_step(params, cfg, token, cache, impl=impl, unroll=unroll,
                         qkv_sharding=qkv_sharding)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: fixed-size prompt slices against the SERVING cache — the
+# third phase of the backend registry (repro.serving.sched interleaves these
+# programs with decode steps inside one engine iteration)
+# ---------------------------------------------------------------------------
+
+# causal-mask sentinel for kv positions that must never be attended (empty
+# dense ring entries / unmapped pages): larger than any real position, so the
+# causal test kv_pos <= q_pos excludes them without a separate validity mask
+# (attention_core_merged has no kv_valid parameter)
+_CHUNK_POS_SENTINEL = jnp.int32(2 ** 30)
+
+
+class DenseChunkDest(NamedTuple):
+    """Destination of one dense prefill chunk: batch row ``slot`` of the
+    BATCHED serving ``DecodeCache`` (not a fresh single-request cache — the
+    chunk writes in place at positions [start, start+C) of that row, so the
+    caller should donate the cache).  ``slot`` is a (1,) int32 array
+    (traced, so one compiled program serves every slot)."""
+    cache: Any
+    slot: Any
+
+
+class PagedChunkDest(NamedTuple):
+    """Destination of one paged prefill chunk, written direct-to-page.
+
+    ``block_table`` is THIS slot's (1, MB) table row (true mapping, not the
+    shield-masked decode view); ``block_ids`` maps the chunk's C//bs
+    logical blocks to physical pages, -1 = drop the write (prefix-shared
+    pages already holding the prefix, and blocks past the prompt under
+    final-chunk padding — exactly the ``PagedPrefillDest.block_ids``
+    contract, per chunk)."""
+    k_pool: Any
+    v_pool: Any
+    block_table: Any
+    block_ids: Any
+
+
+def _chunk_last_logits(logits, start, true_len, C):
+    """Last REAL position's logits within the chunk: index true_len-1-start
+    clipped into [0, C) — meaningful on the final chunk (where the prompt's
+    last token lies in [start, start+C)), arbitrary-but-finite otherwise."""
+    idx = jnp.clip(true_len - 1 - start, 0, C - 1)  # (1,)
+    return jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0, :]
+
+
+def _chunk_block_scan(params, cfg: ModelConfig, h, chunk_attn, k_stack,
+                      v_stack, impl, qkv_sharding):
+    """Run the block stack over a chunk stream, scanning per-layer KV
+    stores exactly as ``forward_step`` does, with ``chunk_attn`` as the
+    attention route (``apply_block_step``'s backend seam is shape-agnostic
+    in the stream's sequence extent, so the whole block wiring — styles,
+    b_out, norms, FFN — is reused as-is)."""
+    ctx = {"impl": impl, "qkv_sharding": qkv_sharding,
+           "backend": backends.AttentionBackend(
+               cache_kind="chunk", style="chunk", impl=impl,
+               step=chunk_attn)}
+
+    def f(hh, xs):
+        lp, lc = xs
+        out, nc = apply_block_step(lp, cfg, "attn", hh, lc, ctx)
+        return out, nc
+
+    h, ncs = jax.lax.scan(f, h, (params["layers"],
+                                 {"k": k_stack, "v": v_stack}))
+    if "final_norm" in params:
+        h = apply_rmsnorm(params["final_norm"], h)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return apply_unembedding(table, h), ncs  # (1, C, V), {"k","v"} stacks
+
+
+def _chunk_rope(cfg: ModelConfig, q, k_new, positions):
+    q = apply_rope(q, positions, style=cfg.rope_style, theta=cfg.rope_theta,
+                   fraction=cfg.rope_fraction)
+    k_new = apply_rope(k_new, positions, style=cfg.rope_style,
+                       theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+    return q, k_new
+
+
+def _chunk_dense(params, cfg: ModelConfig, chunk, dest, ctx, *,
+                 merged_core: bool):
+    """Shared body of both dense chunk routes.
+
+    Per layer: write the chunk's K/V into the slot's rows at [start,
+    start+C) FIRST, then attend over the full row — the chunk attends to
+    itself and every earlier chunk, and overwrites the frontier-parked
+    garbage a concurrent batched decode step may have deposited (the
+    scheduler pins a mid-prefill slot's device length at the chunk
+    frontier, so that garbage never lands anywhere else).  Positions use
+    the XLA positions-based cores for every impl — the flash kernels
+    assume arange positions, so a fused chunk kernel is a follow-up
+    (ROADMAP) — and kv_pos validity rides the causal mask via a > max
+    position sentinel.  Padded final-chunk positions get kv_pos =
+    absolute position >= true_len: no earlier query attends to them and
+    decode overwrites them in order (the bucketed-prefill invariant)."""
+    cache, slot = dest.cache, dest.slot
+    start, true_len = ctx["start"], ctx["true_len"]
+    impl = ctx.get("impl", "xla")
+    C = chunk.shape[1]
+    s0, p0 = slot[0], start[0]
+    Sc = cache.k.shape[2]
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    merged = _is_merged(cfg.block_style)
+    pos = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (1,C)
+
+    kv_pos = jax.lax.dynamic_update_slice(cache.kv_pos, pos,
+                                          (s0, p0))
+    kv_row = jax.lax.dynamic_slice(kv_pos, (s0, jnp.int32(0)), (1, Sc))
+    kv_eff = jnp.where(kv_row >= 0, kv_row, _CHUNK_POS_SENTINEL)
+
+    def chunk_attn(lp, cfg_, x, k_layer, v_layer, actx):
+        q, k_new, v_new = _project_qkv(lp, cfg_, x, x, merged)
+        q, k_new, v_new = _qkv_reanchor(actx, q, k_new, v_new)
+        q, k_new = _chunk_rope(cfg_, q, k_new, pos)
+        k_layer = jax.lax.dynamic_update_slice(
+            k_layer, k_new.astype(k_layer.dtype), (s0, p0, 0, 0))
+        v_layer = jax.lax.dynamic_update_slice(
+            v_layer, v_new.astype(v_layer.dtype), (s0, p0, 0, 0))
+        k_row = jax.lax.dynamic_slice(k_layer, (s0, 0, 0, 0),
+                                      (1, Sc, Hkv, Dh))
+        v_row = jax.lax.dynamic_slice(v_layer, (s0, 0, 0, 0),
+                                      (1, Sc, Hkv, Dh))
+        if merged_core:
+            out = attn_mod.attention_core_merged(
+                q.reshape(1, C, cfg_.attn_dim), k_row, v_row,
+                q_positions=pos, kv_positions=kv_eff,
+                n_kv_heads=cfg_.n_kv_heads, causal=cfg_.causal,
+                sliding_window=cfg_.sliding_window, query_chunk=C,
+                impl="xla", cache_kind="dense")
+            return out, k_layer, v_layer
+        out = attn_mod.attention_core(
+            q, k_row, v_row, q_positions=pos, kv_positions=kv_eff,
+            causal=cfg_.causal, sliding_window=cfg_.sliding_window,
+            query_chunk=C, impl="xla")
+        return out.reshape(1, C, cfg_.attn_dim), k_layer, v_layer
+
+    h = embed_inputs(params, cfg, chunk)
+    logits, ncs = _chunk_block_scan(params, cfg, h, chunk_attn,
+                                    cache.k, cache.v, impl,
+                                    ctx.get("qkv_sharding"))
+    last = _chunk_last_logits(logits, start, true_len, C)
+    new_len = cache.length.at[s0].set(jnp.minimum(p0 + C, true_len[0]))
+    return last, cache._replace(k=ncs["k"], v=ncs["v"], kv_pos=kv_pos,
+                                length=new_len)
+
+
+def _chunk_paged(params, cfg: ModelConfig, chunk, dest, ctx, *,
+                 merged_core: bool):
+    """Shared body of both paged chunk routes: write the chunk's pages
+    (drop-scatter, ``PagedChunkDest.block_ids`` contract), then attend
+    over the slot's densified page view.  The gather materializes a
+    (1, MB*bs) view per layer — same extent as the XLA paged decode core;
+    a fused chunk kernel that walks the table is the follow-up
+    (``NoOversizedBuffer`` deliberately does not cover the chunk phase).
+    Ring (sliding-window) tables: the dispatcher pins C == block_size, so
+    the whole chunk lives in one ring slot and position reconstruction at
+    the chunk's last query is exact for every query in it."""
+    k_pool, v_pool, table, bids = dest
+    start, true_len = ctx["start"], ctx["true_len"]
+    impl = ctx.get("impl", "xla")
+    C = chunk.shape[1]
+    NB, bs = k_pool.shape[1], k_pool.shape[2]
+    MB = table.shape[1]
+    nbk = C // bs
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    merged = _is_merged(cfg.block_style)
+    pos = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (1,C)
+    ring = paging.paged_ring_active(cfg.sliding_window, bs, MB)
+    kvpos = attn_mod.paged_kv_positions(table, bs, start + (C - 1), ring)
+    kv_eff = jnp.where(kvpos >= 0, kvpos, _CHUNK_POS_SENTINEL)
+    safe = jnp.where(bids >= 0, bids, NB).astype(jnp.int32)  # (nbk,)
+
+    def chunk_attn(lp, cfg_, x, kp, vp, actx):
+        q, k_new, v_new = _project_qkv(lp, cfg_, x, x, merged)
+        q, k_new, v_new = _qkv_reanchor(actx, q, k_new, v_new)
+        q, k_new = _chunk_rope(cfg_, q, k_new, pos)
+        kb = k_new[0].astype(kp.dtype).reshape(nbk, bs, Hkv, Dh)
+        vb = v_new[0].astype(vp.dtype).reshape(nbk, bs, Hkv, Dh)
+        kp = kp.at[safe].set(kb, mode="drop")
+        vp = vp.at[safe].set(vb, mode="drop")
+        gk = attn_mod._paged_gather(kp, table)  # (1, MB*bs, Hkv, Dh)
+        gv = attn_mod._paged_gather(vp, table)
+        if merged_core:
+            out = attn_mod.attention_core_merged(
+                q.reshape(1, C, cfg_.attn_dim), gk, gv,
+                q_positions=pos, kv_positions=kv_eff,
+                n_kv_heads=cfg_.n_kv_heads, causal=cfg_.causal,
+                sliding_window=cfg_.sliding_window, query_chunk=C,
+                impl="xla", cache_kind="paged")
+            return out, kp, vp
+        out = attn_mod.attention_core(
+            q, gk, gv, q_positions=pos, kv_positions=kv_eff,
+            causal=cfg_.causal, sliding_window=cfg_.sliding_window,
+            query_chunk=C, impl="xla")
+        return out.reshape(1, C, cfg_.attn_dim), kp, vp
+
+    h = embed_inputs(params, cfg, chunk)
+    logits, ncs = _chunk_block_scan(params, cfg, h, chunk_attn,
+                                    k_pool, v_pool, impl,
+                                    ctx.get("qkv_sharding"))
+    last = _chunk_last_logits(logits, start, true_len, C)
+    return last, (ncs["k"], ncs["v"])
+
+
+# --- the four registered chunk routes ----------------------------------------
+
+def _chunk_dense_generic(params, cfg: ModelConfig, chunk, dest, ctx):
+    """Registered chunk backend ("dense", "generic")."""
+    return _chunk_dense(params, cfg, chunk, dest, ctx, merged_core=False)
+
+
+def _chunk_dense_merged(params, cfg: ModelConfig, chunk, dest, ctx):
+    """Registered chunk backend ("dense", "merged"): the Q/P-removed fast
+    path chunk-by-chunk — the chunk program reads no Q or P weights."""
+    return _chunk_dense(params, cfg, chunk, dest, ctx, merged_core=True)
+
+
+def _chunk_paged_generic(params, cfg: ModelConfig, chunk, dest, ctx):
+    """Registered chunk backend ("paged", "generic")."""
+    return _chunk_paged(params, cfg, chunk, dest, ctx, merged_core=False)
+
+
+def _chunk_paged_merged(params, cfg: ModelConfig, chunk, dest, ctx):
+    """Registered chunk backend ("paged", "merged"): stream-as-query
+    attention AND direct-to-page chunk writes."""
+    return _chunk_paged(params, cfg, chunk, dest, ctx, merged_core=True)
+
+
+backends.register_chunk_backend("dense", "generic", _chunk_dense_generic)
+backends.register_chunk_backend("dense", "merged", _chunk_dense_merged,
+                                fast_path=True)
+backends.register_chunk_backend("paged", "generic", _chunk_paged_generic)
+backends.register_chunk_backend("paged", "merged", _chunk_paged_merged,
+                                fast_path=True)
+
+
+def forward_prefill_chunk(params, cfg: ModelConfig, chunk, dest, *,
+                          start, true_len, impl: str = "xla",
+                          qkv_sharding=None, max_len: Optional[int] = None):
+    """One fixed-size prefill chunk against the SERVING cache — the single
+    dispatcher over the ``models.backends`` CHUNK registry.
+
+    ``chunk`` is (1, C) int32: tokens [start, start+C) of ONE stream's
+    prompt, right-padded past ``true_len`` on the final chunk.  ``start``
+    and ``true_len`` are (1,) int32 (traced — one compiled program serves
+    every chunk of every prompt).  Returns (last_logits (1, V) — the
+    prompt's last real position, meaningful on the final chunk — plus the
+    filled destination, mirroring ``forward_prefill``):
+
+    * ``DenseChunkDest(cache, slot)`` — writes rows [start, start+C) of
+      batch row ``slot`` in place and returns the updated ``DecodeCache``.
+      Sliding-window dense configs are rejected (the window-sized ring
+      cache can't hold a partial prompt at absolute positions; the
+      scheduler falls back to its monolithic whole-prompt path there).
+    * ``PagedChunkDest(k_pool, v_pool, block_table, block_ids)`` — writes
+      the chunk's pages and returns (k_pool, v_pool).  C must be a
+      multiple of the block size; ring (windowed) tables additionally pin
+      C == block_size so every chunk occupies exactly one ring slot.
+
+    Attention-only stacks only (ssm/hybrid state has no mid-prompt
+    checkpoint; vlm interleaves cross-attention).  MoE FFNs route
+    dropless, like decode.  The chunk programs use the positions-based
+    XLA attention cores internally for every impl — the flash kernels
+    assume arange positions — so a fused chunk kernel is follow-up work;
+    weight-side fast-path structure (no Q/P reads when merged) is intact
+    and jaxpr-asserted by the lint sweep's chunk phase.
+    """
+    B, C = int(chunk.shape[0]), int(chunk.shape[1])
+    if B != 1:
+        raise ValueError(f"chunked prefill feeds one stream at a time, got "
+                         f"batch size {B}")
+    plan = layer_plan(cfg)
+    if plan["kind"] != "attn":
+        raise ValueError(
+            f"chunked prefill supports attention-only stacks, not "
+            f"{plan['kind']!r} (family {cfg.family!r})")
+    if isinstance(dest, PagedChunkDest):
+        kind = "paged"
+        bs = int(dest.k_pool.shape[2])
+        MB = int(dest.block_table.shape[1])
+        if C % bs:
+            raise ValueError(f"chunk width {C} must be a multiple of the "
+                             f"page size {bs}")
+        if paging.paged_ring_active(cfg.sliding_window, bs, MB) and C != bs:
+            raise ValueError(
+                f"ring (sliding-window) paged chunks must be exactly one "
+                f"block: chunk width {C} != block size {bs}")
+        if int(dest.block_ids.shape[0]) != C // bs:
+            raise ValueError(
+                f"PagedChunkDest.block_ids maps {int(dest.block_ids.shape[0])} "
+                f"blocks; a {C}-token chunk over {bs}-token pages needs "
+                f"{C // bs}")
+    elif isinstance(dest, DenseChunkDest):
+        kind = "dense"
+        # a BINDING window (window < max_len) makes the dense cache a
+        # window-sized ring buffer, which can't park a partial prompt at
+        # absolute positions; a window >= max_len never masks or wraps
+        # anything and chunks exactly like window=0.  The cache alone
+        # can't distinguish the two (Sc = min(max_len, window)), so the
+        # static ``max_len`` hint carries the check — the serving adapter
+        # always passes it, and the scheduler routes binding-window dense
+        # requests through its monolithic whole-prompt fallback instead.
+        if cfg.sliding_window and max_len is not None \
+                and cfg.sliding_window < max_len:
+            raise ValueError(
+                "dense sliding-window chunked prefill is unsupported (the "
+                "window-sized ring cache can't park a partial prompt at "
+                "absolute positions); use the scheduler's monolithic "
+                "fallback or the paged cache")
+    else:
+        raise ValueError(
+            f"unknown chunk destination {type(dest).__name__!r}; expected "
+            "DenseChunkDest or PagedChunkDest (or register a ChunkBackend "
+            "for a new cache kind)")
+
+    backend = backends.get_chunk_backend(kind, prefill_style_key(cfg), impl)
+    ctx = {"start": jnp.asarray(start, jnp.int32).reshape(1),
+           "true_len": jnp.asarray(true_len, jnp.int32).reshape(1),
+           "impl": impl, "qkv_sharding": qkv_sharding}
+    return backend.run(params, cfg, chunk, dest, ctx)

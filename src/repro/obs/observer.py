@@ -60,6 +60,8 @@ class NullObserver:
     compile_event = _noop
     attach_engine = _noop
     generate_done = _noop
+    sched_iteration = _noop
+    chunk_done = _noop
 
     def clock(self) -> float:
         return 0.0
@@ -115,6 +117,18 @@ class Observer:
         self._c_compiles = m.counter("compile_events", "lower+compile calls")
         self._c_compile_bytes = m.counter(
             "compile_hlo_bytes", "compiled HLO text bytes, cumulative")
+        # continuous-batching scheduler (repro.serving.sched)
+        self._c_sched_iters = m.counter(
+            "sched_iterations", "scheduler iterations planned")
+        self._c_sched_chunks = m.counter(
+            "sched_chunks", "prefill chunks executed")
+        self._c_sched_chunk_tokens = m.counter(
+            "sched_chunk_tokens", "prompt tokens prefilled via chunks")
+        self._g_sched_budget = m.gauge(
+            "sched_budget_used", "tokens charged in the last iteration")
+        self._h_chunk = m.histogram(
+            "sched_chunk_seconds", "one chunk-prefill dispatch",
+            lo=1e-5, hi=1e2)
         self._engine = None
 
     # -- plumbing -------------------------------------------------------
@@ -204,6 +218,34 @@ class Observer:
 
     def queue_depth(self, n: int) -> None:
         self._g_queue.set(n)
+
+    # -- continuous-batching scheduler ----------------------------------
+    def sched_iteration(self, t0: float, t1: float, *, n_decode: int,
+                        n_chunks: int, n_chunk_tokens: int,
+                        budget_used: int) -> None:
+        """One ScheduledEngine iteration: the planned decode/prefill mix
+        and its budget charge, as an engine-track span + counters."""
+        self._c_sched_iters.inc()
+        self._c_sched_chunks.inc(n_chunks)
+        self._c_sched_chunk_tokens.inc(n_chunk_tokens)
+        self._g_sched_budget.set(budget_used)
+        et = tr.engine_track()
+        self.trace.complete(et, "sched_iteration", t0, t1,
+                            n_decode=n_decode, n_chunks=n_chunks,
+                            budget_used=budget_used)
+        self.trace.counter(et, "sched_budget_used", budget_used, t=t1)
+
+    def chunk_done(self, req, slot: int, start: int, n_tokens: int,
+                   t0: float, t1: float, *, final: bool) -> None:
+        """One chunk-prefill dispatch for ``req``: a span on both the
+        request's and the slot's track (the final chunk closes into the
+        regular prefill/decode lifecycle via ``request_admitted``)."""
+        self._h_chunk.observe(t1 - t0)
+        self.trace.complete(tr.request_track(req.rid), "chunk", t0, t1,
+                            slot=slot, start=start, n_tokens=n_tokens,
+                            final=final)
+        self.trace.complete(tr.slot_track(slot), "chunk", t0, t1,
+                            rid=req.rid, start=start)
 
     def generate_done(self, t0: float, t1: float, *, n_requests: int,
                       n_tokens: int) -> None:

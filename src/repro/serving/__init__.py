@@ -53,15 +53,24 @@ Selecting a shipped backend: ``Engine(..., cache="dense"|"paged")`` or an
 adapter instance (``PagedCacheAdapter(block_size=16, n_blocks=256)``).
 ``ServeConfig.cache_kind`` and ``models.forward_decode[_paged]`` remain as
 deprecated shims over this API.
+
+Continuous batching (``serving.sched``): ``ScheduledEngine`` replaces the
+synchronous whole-prompt prefill in ``submit`` with queue admission plus
+per-iteration token-budget plans that interleave fixed-width prefill
+CHUNKS (a third registered program per cache kind,
+``models.forward_prefill_chunk``) with the batched decode step —
+``SchedConfig(token_budget, chunk_tokens)`` are the knobs.
 """
 from repro.serving.engine import Engine, Request, RequestResult, ServeConfig
 from repro.serving.adapters import (DenseCacheAdapter, KVCacheAdapter,
                                     PagedCacheAdapter, make_adapter)
 from repro.serving import kv_cache
 from repro.serving import paged_kv_cache
+from repro.serving.sched import SchedConfig, Schedule, ScheduledEngine
 
 __all__ = [
     "Engine", "Request", "RequestResult", "ServeConfig",
     "KVCacheAdapter", "DenseCacheAdapter", "PagedCacheAdapter",
     "make_adapter", "kv_cache", "paged_kv_cache",
+    "SchedConfig", "Schedule", "ScheduledEngine",
 ]

@@ -23,6 +23,22 @@ Selecting a backend is then data, not code: ``Engine(cfg, params, sc,
 cache=PagedCacheAdapter(block_size=16))`` or ``cache="paged"`` — and a new
 cache layout is a new adapter plus its registered attention backends
 (``models.backends``), with zero engine changes.
+
+Chunked prefill (``repro.serving.sched``) adds a THIRD program per
+adapter: ``build_chunk`` compiles one fixed-width slice program
+(``models.forward_prefill_chunk``) and ``admit_chunked`` / ``chunk_ready``
+/ ``chunk_step`` / ``finish_chunked`` / ``unshield`` drive a prompt into
+the SHARED batched cache chunk by chunk while decode keeps stepping the
+other slots.  The mid-prefill safety contracts differ per kind:
+
+  * dense — the adapter keeps HOST lengths for every slot and overrides
+    ``device_cache().length`` from them, so the batched decode step's
+    write for a mid-prefill slot parks AT the chunk frontier (the next
+    chunk overwrites it) and never advances the slot;
+  * paged — the manager SHIELDS mid-prefill slots (their block-table rows
+    ship as -1, decode writes drop on the floor) while the chunk program
+    receives the true row; ``unshield`` flips the slot live only after
+    the activating decode step has dispatched.
 """
 from __future__ import annotations
 
@@ -34,8 +50,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distribution import sharding as shd
-from repro.models import (DensePrefillDest, PagedPrefillDest, forward_prefill,
-                          init_cache)
+from repro.models import (DenseChunkDest, DensePrefillDest, PagedChunkDest,
+                          PagedPrefillDest, forward_prefill,
+                          forward_prefill_chunk, init_cache)
+from repro.serving import hostbufs
 from repro.serving import kv_cache as kvc
 from repro.serving import paged_kv_cache as pkv
 
@@ -106,6 +124,64 @@ class KVCacheAdapter:
         """Return a finished/preempted request's cache resources."""
         raise NotImplementedError
 
+    # -- chunked prefill (repro.serving.sched) --------------------------
+    @property
+    def supports_chunked(self) -> bool:
+        """True when this adapter (as initialised) can run chunked
+        prefill.  False routes every request through the scheduler's
+        monolithic whole-prompt fallback (still asynchronous admission —
+        just one unsplittable job per prompt)."""
+        return False
+
+    def enable_chunked(self) -> None:
+        """Switch the adapter into chunked mode (host-side bookkeeping
+        only; must precede the first ``device_cache()`` the scheduled
+        engine ships)."""
+        raise NotImplementedError
+
+    def build_chunk(self, chunk_tokens: int, impl: str, mesh=None,
+                    params_sharding=None, cache_shardings=None,
+                    qkv_sharding=None) -> None:
+        """Compile-wrap this cache kind's fixed-width chunk program
+        (``models.forward_prefill_chunk``): ONE program serves chunk
+        ``[start, start+chunk_tokens)`` of every prompt."""
+        raise NotImplementedError
+
+    def admit_chunked(self, slot: int, tokens: np.ndarray) -> Optional[int]:
+        """Admission control for a chunked prefill: reserve ``slot`` for
+        ``tokens`` without running anything.  Returns prefix-shared pages
+        (0 where the concept doesn't apply) or None to DEFER."""
+        raise NotImplementedError
+
+    def chunk_ready(self, slot: int, start: int, end: int) -> bool:
+        """Make the chunk's write targets safely writable (paged: map the
+        covering pages / recycle ring pages); False means
+        resource-exhausted (the scheduler preempts)."""
+        return True
+
+    def chunk_step(self, params, slot: int, chunk_row, start: int,
+                   true_len: int):
+        """Run ONE chunk of ``slot``'s prompt through the compiled chunk
+        program; returns the chunk-local last real position's logits
+        (1, V) — meaningful only on the final chunk."""
+        raise NotImplementedError
+
+    def finish_chunked(self, slot: int, tokens: np.ndarray) -> None:
+        """All chunks landed: publish the slot's full length (paged:
+        register the prompt's pages for prefix sharing)."""
+        raise NotImplementedError
+
+    def unshield(self, slot: int) -> None:
+        """Expose the slot to batched decode writes (paged shield off).
+        Call AFTER the activating decode step has dispatched — a shared
+        trailing partial page must not take this slot's decode writes
+        while an in-flight program still reads it."""
+
+    def set_length(self, slot: int, n: int) -> None:
+        """Sync host-side length bookkeeping after a MONOLITHIC prefill
+        installed ``n`` tokens into ``slot`` (the scheduler's fallback
+        path for unsplittable prompts on a chunked adapter)."""
+
     # -- introspection --------------------------------------------------
     def compiled_prefill(self, params, bucket_len: int):
         """Lower + compile the prefill program for one prompt bucket (no
@@ -137,6 +213,7 @@ class DenseCacheAdapter(KVCacheAdapter):
     def init(self, cfg, sc):
         self.cfg, self.sc = cfg, sc
         self._cache = init_cache(cfg, sc.n_slots, sc.max_len)
+        self._chunked = False
 
     def build_prefill(self, impl, mesh=None, params_sharding=None,
                       cache_shardings=None, qkv_sharding=None):
@@ -155,7 +232,17 @@ class DenseCacheAdapter(KVCacheAdapter):
             self._prefill = jax.jit(fn)
 
     def device_cache(self):
-        return self._cache
+        if not self._chunked:
+            return self._cache
+        # chunked mode: HOST lengths are authoritative.  A mid-prefill
+        # slot's length is its chunk frontier, so the batched decode
+        # step's write for that slot parks AT the frontier (the next
+        # chunk overwrites it) instead of advancing past real positions.
+        # .copy() before ingestion: _lengths is engine-mutated host state
+        # and jnp.asarray of an aligned buffer is zero-copy (lint:
+        # aliasing audit).
+        return self._cache._replace(
+            length=jnp.asarray(self._lengths.copy()))
 
     def update(self, new):
         self._cache = new
@@ -174,8 +261,75 @@ class DenseCacheAdapter(KVCacheAdapter):
         self._cache = kvc.insert_request(self._cache, one, jnp.int32(slot))
         return logits
 
+    def advance(self, slot):
+        if self._chunked:
+            self._lengths[slot] += 1
+
     def release(self, slot):
         self._cache = kvc.clear_slot(self._cache, jnp.int32(slot))
+        if self._chunked:
+            self._lengths[slot] = 0
+
+    def host_mutable_buffers(self):
+        if self._chunked:
+            return {"dense._lengths": self._lengths}
+        return {}
+
+    # -- chunked prefill ------------------------------------------------
+    @property
+    def supports_chunked(self):
+        # a BINDING sliding window (window < max_len) makes the dense
+        # cache a window-sized ring that cannot hold a partial prompt at
+        # absolute positions; the scheduler falls back to monolithic
+        # whole-prompt jobs there.  Non-binding windows chunk exactly
+        # like window-free configs.
+        w = self.cfg.sliding_window
+        return not (w and w < self.sc.max_len)
+
+    def enable_chunked(self):
+        self._chunked = True
+        self._lengths = hostbufs.aligned_zeros((self.sc.n_slots,), np.int32)
+
+    def build_chunk(self, chunk_tokens, impl, mesh=None, params_sharding=None,
+                    cache_shardings=None, qkv_sharding=None):
+        cfg, max_len = self.cfg, self.sc.max_len
+        self._chunk_tokens = chunk_tokens
+
+        def fn(p, tk, s, tl, slot, cache):
+            return forward_prefill_chunk(
+                p, cfg, tk, DenseChunkDest(cache, slot), start=s,
+                true_len=tl, impl=impl, qkv_sharding=qkv_sharding,
+                max_len=max_len)
+
+        if mesh is not None:
+            self._chunk = jax.jit(
+                fn, donate_argnums=(5,),
+                in_shardings=(params_sharding, None, None, None, None,
+                              cache_shardings),
+                out_shardings=(None, cache_shardings))
+        else:
+            self._chunk = jax.jit(fn, donate_argnums=(5,))
+
+    def admit_chunked(self, slot, tokens):
+        self._lengths[slot] = 0
+        return 0
+
+    def chunk_step(self, params, slot, chunk_row, start, true_len):
+        s = jnp.full((1,), start, jnp.int32)
+        tl = jnp.full((1,), true_len, jnp.int32)
+        sl = jnp.full((1,), slot, jnp.int32)
+        logits, new_cache = self._chunk(params, chunk_row, s, tl, sl,
+                                        self.device_cache())
+        self._cache = new_cache
+        self._lengths[slot] = min(start + self._chunk_tokens, true_len)
+        return logits
+
+    def finish_chunked(self, slot, tokens):
+        self._lengths[slot] = len(tokens)
+
+    def set_length(self, slot, n):
+        if self._chunked:
+            self._lengths[slot] = n
 
     def compiled_prefill(self, params, bucket_len):
         pshape = jax.eval_shape(lambda: params)
@@ -266,6 +420,69 @@ class PagedCacheAdapter(KVCacheAdapter):
 
     def release(self, slot):
         self.pm.release(slot)
+
+    # -- chunked prefill ------------------------------------------------
+    @property
+    def supports_chunked(self):
+        return True
+
+    def enable_chunked(self):
+        pass  # shield/frontier machinery lives in the manager, always on
+
+    def build_chunk(self, chunk_tokens, impl, mesh=None, params_sharding=None,
+                    cache_shardings=None, qkv_sharding=None):
+        cfg = self.cfg
+        if chunk_tokens % self.pm.bs:
+            raise ValueError(
+                f"chunk_tokens ({chunk_tokens}) must be a multiple of the "
+                f"block size ({self.pm.bs})")
+        if self.pm.ring and chunk_tokens != self.pm.bs:
+            raise ValueError(
+                f"ring (windowed) paged chunking pins chunk_tokens to one "
+                f"block ({self.pm.bs}); got {chunk_tokens}")
+        self._chunk_tokens = chunk_tokens
+
+        def fn(p, tk, s, tl, kp, vp, trow, bids):
+            return forward_prefill_chunk(
+                p, cfg, tk, PagedChunkDest(kp, vp, trow, bids), start=s,
+                true_len=tl, impl=impl, qkv_sharding=qkv_sharding)
+
+        if mesh is not None:
+            pool_k, pool_v = cache_shardings.k, cache_shardings.v
+            self._chunk = jax.jit(
+                fn, donate_argnums=(4, 5),
+                in_shardings=(params_sharding, None, None, None, pool_k,
+                              pool_v, None, None),
+                out_shardings=(None, (pool_k, pool_v)))
+        else:
+            self._chunk = jax.jit(fn, donate_argnums=(4, 5))
+
+    def admit_chunked(self, slot, tokens):
+        return self.pm.admit_chunked(slot, tokens)
+
+    def chunk_ready(self, slot, start, end):
+        return self.pm.ensure_chunk(slot, start, end)
+
+    def chunk_step(self, params, slot, chunk_row, start, true_len):
+        C = self._chunk_tokens
+        bids = self.pm.chunk_block_ids(slot, start, start + C, true_len)
+        s = jnp.full((1,), start, jnp.int32)
+        tl = jnp.full((1,), true_len, jnp.int32)
+        # the TRUE table row (the decode view masks shielded slots to -1);
+        # .copy() before ingestion — tables is host-mutated (aliasing)
+        trow = jnp.asarray(self.pm.tables[slot:slot + 1].copy())
+        logits, (k, v) = self._chunk(params, chunk_row, s, tl,
+                                     self.pm.k, self.pm.v, trow,
+                                     jnp.asarray(bids))
+        self.pm.k, self.pm.v = k, v
+        self.pm.set_frontier(slot, min(start + C, true_len))
+        return logits
+
+    def finish_chunked(self, slot, tokens):
+        self.pm.finish_chunked(slot, tokens)
+
+    def unshield(self, slot):
+        self.pm.unshield(slot)
 
     def compiled_prefill(self, params, bucket_len):
         pshape = jax.eval_shape(lambda: params)

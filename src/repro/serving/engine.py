@@ -274,6 +274,9 @@ class Engine:
             self._decode = jax.jit(fwd, donate_argnums=(2,))
         self.kv.build_prefill(impl, mesh=mesh, params_sharding=psh,
                               cache_shardings=csh, qkv_sharding=qkv_sh)
+        # stashed for additional adapter programs (e.g. the scheduler's
+        # chunk program) built after construction
+        self._shardings = (psh, csh, qkv_sh)
         # introspection alias (tests count compiled prefill buckets here)
         self._prefill = self.kv._prefill
 

@@ -217,6 +217,11 @@ class PagedCacheManager:
         self.lengths = hostbufs.aligned_zeros((n_slots,), np.int32)
         self.allocator = BlockAllocator(n_blocks)
         self._slots: Dict[int, _SlotInfo] = {}
+        # slots mid-CHUNKED-prefill: their table rows are masked to -1 in
+        # device_cache() so concurrent batched decode steps drop their
+        # garbage KV write instead of corrupting half-prefilled or
+        # prefix-shared pages (repro.serving.sched)
+        self.shielded: set = set()
         self.request_page_hwm: List[int] = []  # hwm of each released slot
         # prefix registry: token prefix -> physical page holding its tail
         # block; _block_keys is the reverse map for cleanup on free.
@@ -238,9 +243,17 @@ class PagedCacheManager:
         # mutating in place — an asynchronously-dispatched decode step
         # could then read next step's table and scatter KV into the wrong
         # physical page (timing-dependent corruption).
+        tbl = self.tables.copy()
+        if self.shielded:
+            # mid-chunked-prefill slots: every decode-step write against
+            # them must DROP (blk -1 clamps out of range in the scatter),
+            # and whatever garbage the step attends for them is discarded
+            # by the engine — the true mapping stays host-side and feeds
+            # the chunk programs directly
+            tbl[sorted(self.shielded), :] = -1
         return PagedDecodeCache(
             k=self.k, v=self.v,
-            block_tables=jnp.asarray(self.tables.copy()),
+            block_tables=jnp.asarray(tbl),
             length=jnp.asarray(self.lengths.copy()))
 
     def update_pools(self, new: PagedDecodeCache) -> None:
@@ -391,6 +404,41 @@ class PagedCacheManager:
         self.allocator.n_cow += 1
         return True
 
+    def _ensure_ring_block(self, slot: int, info: _SlotInfo, b: int) -> bool:
+        """Make absolute block ``b``'s ring slot safely writable: map it if
+        never entered, CoW if shared at the same block, and RECYCLE the
+        slot's out-of-window page when the window rolled past it (in place
+        when solely owned; detached via ``_cow`` when a prefix-sharing
+        peer still holds it).  Shared by ``ensure_appendable`` (decode,
+        b = length // bs) and ``ensure_chunk`` (chunked prefill's
+        progressive ring mapping).  Returns False on pool exhaustion."""
+        rs = b % self.ring
+        bid = info.blocks[rs]
+        if bid < 0:  # ring slot never entered: map a fresh page
+            fresh = self.allocator.alloc(1)
+            if fresh is None:
+                return False
+            info.blocks[rs] = fresh[0]
+            info.abs_blocks[rs] = b
+            self.tables[slot, rs] = fresh[0]
+            info.hwm = max(info.hwm,
+                           sum(1 for p in info.blocks if p >= 0))
+            return True
+        if info.abs_blocks[rs] == b:  # current block: append in place
+            if self.allocator.ref[bid] > 1 and \
+                    not self._cow(slot, info, rs, copy=True):
+                return False
+            return True
+        # window rolled past the slot's old block: recycle
+        if self.allocator.ref[bid] > 1:
+            if not self._cow(slot, info, rs, copy=False):
+                return False
+        else:
+            self._drop_registry(bid)  # bytes no longer hold the prefix
+        self.allocator.n_recycled += 1
+        info.abs_blocks[rs] = b
+        return True
+
     def ensure_appendable(self, slot: int) -> bool:
         """Make the page that position ``lengths[slot]`` falls into safely
         writable: map it if unmapped, copy-on-write if prefix-shared, and
@@ -403,32 +451,7 @@ class PagedCacheManager:
         if li >= self.max_blocks:
             raise ValueError(f"slot {slot} hit max_len; request too long")
         if self.ring:
-            rs = li % self.ring
-            bid = info.blocks[rs]
-            if bid < 0:  # ring slot never entered: map a fresh page
-                fresh = self.allocator.alloc(1)
-                if fresh is None:
-                    return False
-                info.blocks[rs] = fresh[0]
-                info.abs_blocks[rs] = li
-                self.tables[slot, rs] = fresh[0]
-                info.hwm = max(info.hwm,
-                               sum(1 for p in info.blocks if p >= 0))
-                return True
-            if info.abs_blocks[rs] == li:  # current block: append in place
-                if self.allocator.ref[bid] > 1 and \
-                        not self._cow(slot, info, rs, copy=True):
-                    return False
-                return True
-            # window rolled past the slot's old block: recycle
-            if self.allocator.ref[bid] > 1:
-                if not self._cow(slot, info, rs, copy=False):
-                    return False
-            else:
-                self._drop_registry(bid)  # bytes no longer hold the prefix
-            self.allocator.n_recycled += 1
-            info.abs_blocks[rs] = li
-            return True
+            return self._ensure_ring_block(slot, info, li)
         if li >= len(info.blocks):
             fresh = self.allocator.alloc(1)
             if fresh is None:
@@ -449,6 +472,7 @@ class PagedCacheManager:
         """Return a finished/preempted request's pages (shared pages stay
         resident for their other holders)."""
         info = self._slots.pop(slot, None)
+        self.shielded.discard(slot)
         if info is None:
             return
         self.request_page_hwm.append(info.hwm)
@@ -456,3 +480,108 @@ class PagedCacheManager:
             self._drop_registry(bid)
         self.tables[slot, :] = -1
         self.lengths[slot] = 0
+
+    # -- chunked prefill (repro.serving.sched) ---------------------------
+
+    def admit_chunked(self, slot: int, tokens: np.ndarray) -> Optional[int]:
+        """Admission for CHUNKED prefill: like ``admit``, except
+
+        * ``lengths[slot]`` tracks the chunk FRONTIER (0 now, advanced by
+          ``set_frontier`` after each chunk, total at ``finish_chunked``);
+        * prefix REGISTRATION is deferred to ``finish_chunked`` — a sharer
+          admitted mid-prefill would attend pages whose chunks haven't run
+          (consequence: two identical prompts in flight simultaneously
+          don't share with each other, only with finished residents);
+        * ring (sliding-window) mode maps NOTHING up front — early chunks
+          need blocks that are dead at final-query time but live for their
+          own queries, so ``ensure_chunk`` maps each chunk's block
+          progressively and the ring recycles them as the window rolls;
+          ring mode neither shares nor registers (as at ``admit`` for
+          longer-than-window prompts, now for every chunked prompt);
+        * the slot is SHIELDED: ``device_cache`` masks its table row to -1
+          so interleaved batched decode steps drop their garbage write.
+          The scheduler unshields when it activates the slot for decode.
+
+        Returns the number of prefix-shared pages, or None when the pool
+        can't hold the prompt's fresh pages right now (caller re-queues).
+        """
+        nb = self.blocks_for(len(tokens))
+        if nb > self.max_blocks:
+            raise ValueError(
+                f"prompt of {len(tokens)} tokens exceeds max_len "
+                f"({self.max_blocks * self.bs})")
+        if self.ring:
+            info = _SlotInfo(blocks=[-1] * self.ring,
+                             abs_blocks=[-1] * self.ring,
+                             first_owned=0, hwm=0)
+            shared: List[int] = []
+        else:
+            shared = self._match_prefix(tokens)
+            fresh = self.allocator.alloc(nb - len(shared))
+            if fresh is None:
+                return None
+            self.allocator.fork(shared)
+            info = _SlotInfo(blocks=shared + fresh,
+                             first_owned=len(shared),
+                             hwm=nb)
+        self._slots[slot] = info
+        self.tables[slot, :] = -1
+        mapped = np.asarray(info.blocks, np.int32)
+        self.tables[slot, :len(mapped)] = mapped
+        self.lengths[slot] = 0  # chunk frontier
+        self.shielded.add(slot)
+        return len(shared)
+
+    def ensure_chunk(self, slot: int, start: int, end: int) -> bool:
+        """Make the pages for chunk [start, end) writable.  Absolute mode
+        maps the whole prompt at ``admit_chunked``, so this is a no-op;
+        ring mode maps/recycles each of the chunk's blocks in turn (the
+        scheduler pins the chunk width to one block, but the loop is
+        general).  Returns False on pool exhaustion (caller preempts)."""
+        info = self._slots[slot]
+        if not self.ring:
+            return True
+        for b in range(start // self.bs, -(-end // self.bs)):
+            if not self._ensure_ring_block(slot, info, b):
+                return False
+        return True
+
+    def chunk_block_ids(self, slot: int, start: int, end: int,
+                        n_tokens: int) -> np.ndarray:
+        """Physical destination per logical block of chunk [start, end) of
+        an ``n_tokens``-long prompt — the per-chunk slice of the
+        ``prefill_block_ids`` contract: -1 (the scatter DROPS the write)
+        for prefix-shared pages and for padding blocks wholly past the
+        prompt on a padded final chunk."""
+        info = self._slots[slot]
+        b0, b1 = start // self.bs, -(-end // self.bs)
+        nb = self.blocks_for(n_tokens)
+        ids = np.full((b1 - b0,), -1, np.int32)
+        for b in range(b0, min(b1, nb)):
+            if self.ring:
+                if info.abs_blocks[b % self.ring] == b:
+                    ids[b - b0] = info.blocks[b % self.ring]
+            elif b >= info.first_owned:
+                ids[b - b0] = info.blocks[b]
+        return ids
+
+    def set_frontier(self, slot: int, n: int) -> None:
+        """Advance the chunk frontier: tokens [0, n) of the slot's prompt
+        are now resident (= the next chunk's start)."""
+        self.lengths[slot] = n
+
+    def finish_chunked(self, slot: int, tokens: np.ndarray) -> None:
+        """Chunked prefill complete: publish the full length and (absolute
+        mode) register the now-fully-written pages for prefix sharing.
+        The shield stays ON — the scheduler drops it only when it
+        activates the slot for decode, so a decode step dispatched in the
+        same iteration still can't write into a shared trailing page."""
+        info = self._slots[slot]
+        self.lengths[slot] = len(tokens)
+        if not self.ring:
+            self._register(tokens, info.blocks, info.first_owned)
+
+    def unshield(self, slot: int) -> None:
+        """Expose the slot's true table row to decode steps again (called
+        at decode activation, after the iteration's decode dispatch)."""
+        self.shielded.discard(slot)

@@ -1,0 +1,15 @@
+"""Continuous-batching scheduler: token-budget iteration plans that
+interleave fixed-width chunk-prefill with batched decode (see
+``sched.plan`` for the policy, ``sched.engine`` for the execution)."""
+from repro.serving.sched.engine import ScheduledEngine
+from repro.serving.sched.plan import (ChunkPlan, PrefillJob, SchedConfig,
+                                      Schedule, plan_iteration)
+
+__all__ = [
+    "ChunkPlan",
+    "PrefillJob",
+    "SchedConfig",
+    "Schedule",
+    "ScheduledEngine",
+    "plan_iteration",
+]

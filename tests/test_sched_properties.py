@@ -1,0 +1,291 @@
+"""Model-based property suite for the continuous-batching scheduler.
+
+Two layers, same shape as ``test_paged_properties``:
+
+PLANNER — hypothesis drives random job mixes (chunked + monolithic,
+arbitrary totals) through iterated ``plan_iteration`` calls with
+arbitrary per-iteration decode loads, checking after EVERY iteration:
+
+  * the token budget is never exceeded: whenever any chunk is planned,
+    ``budget_used <= token_budget`` (pure decode load may exceed it —
+    active slots are already admitted and cannot be un-budgeted);
+  * strict FCFS: the planned chunks are exactly a PREFIX of the
+    unfinished job queue — never a skip-ahead (that starves the head);
+  * one chunk per job per iteration, starting AT the job's cursor,
+    advancing it by at most ``chunk_tokens`` (monolithic: to the total,
+    charged ``min(total, budget)`` so it can EVER fit);
+  * cursors are monotone non-decreasing and never overshoot the total;
+  * no starvation: with zero decode load and work outstanding, the head
+    job is always scheduled — so a drain loop terminates in exactly the
+    chunk-arithmetic number of iterations.
+
+MANAGER — random admit-chunked / chunk / finish / decode-step / release
+traces against a real ``PagedCacheManager`` with a tiny pool (windowed
+ring mode included), checking page CONSERVATION after every op: free +
+used == total, no double-free, live pages never on the free list,
+refcounts == live holders, ``chunk_block_ids`` never routes a chunk
+write at a freed page, shields only on live slots — and a drained pool
+holds zero used pages and an empty prefix registry.
+
+Marked ``property``: CI's property job raises ``PROPERTY_EXAMPLES``;
+tier-1 runs the fast default and skips cleanly without hypothesis
+(tests/_hypothesis_stub.py).
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import get_config, reduce_config
+from repro.serving.engine import Request
+from repro.serving.paged_kv_cache import PagedCacheManager
+from repro.serving.sched import PrefillJob, SchedConfig, plan_iteration
+
+pytestmark = pytest.mark.property
+
+MAX_EXAMPLES = int(os.environ.get("PROPERTY_EXAMPLES", "25"))
+
+MAX_LEN = 64
+BLOCK = 8
+N_BLOCKS = 10
+N_SLOTS = 4
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def _mk_jobs(spec):
+    jobs = []
+    for i, (total, monolithic) in enumerate(spec):
+        r = Request(prompt=np.zeros((total,), np.int32), max_new_tokens=2)
+        j = PrefillJob(req=r, toks=np.zeros((total,), np.int32),
+                       monolithic=monolithic)
+        j.slot = i
+        jobs.append(j)
+    return jobs
+
+
+def _check_schedule(scfg, n_decode, jobs, s):
+    unfinished = [j for j in jobs if not j.done]
+    planned = [c.job for c in s.chunks]
+    assert planned == unfinished[:len(planned)], \
+        "chunks must be an FCFS PREFIX of the unfinished queue"
+    assert len(set(map(id, planned))) == len(planned), \
+        "at most one chunk per job per iteration"
+    assert s.budget == scfg.token_budget and s.n_decode == n_decode
+    cost = n_decode
+    for c in s.chunks:
+        assert c.start == c.job.cursor
+        if c.job.monolithic:
+            assert c.end == c.job.total
+            assert c.cost == min(c.job.total, scfg.token_budget)
+        else:
+            assert c.end == min(c.start + scfg.chunk_tokens, c.job.total)
+            assert c.cost == scfg.chunk_tokens
+        assert c.final == (c.end >= c.job.total)
+        cost += c.cost
+    assert s.budget_used == cost
+    if s.chunks:
+        assert s.budget_used <= scfg.token_budget, \
+            "token budget exceeded by planned chunks"
+    if n_decode == 0 and unfinished:
+        assert s.chunks, "no starvation: an idle iteration must " \
+                         "schedule the queue head"
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(spec=st.lists(st.tuples(st.integers(min_value=1, max_value=40),
+                               st.booleans()),
+                     min_size=1, max_size=6),
+       chunk=st.sampled_from([4, 8]),
+       budget_mult=st.integers(min_value=1, max_value=4),
+       decode_loads=st.lists(st.integers(min_value=0, max_value=40),
+                             min_size=0, max_size=12))
+def test_planner_iterated_invariants(spec, chunk, budget_mult,
+                                     decode_loads):
+    scfg = SchedConfig(token_budget=budget_mult * chunk,
+                       chunk_tokens=chunk)
+    jobs = _mk_jobs(spec)
+    cursors = {id(j): 0 for j in jobs}
+
+    def run_iteration(n_decode):
+        s = plan_iteration(scfg, n_decode, jobs)
+        _check_schedule(scfg, n_decode, jobs, s)
+        for c in s.chunks:  # "execute": cursor advances to the chunk end
+            c.job.cursor = c.end
+            assert c.job.cursor >= cursors[id(c.job)], "cursor regressed"
+            assert c.job.cursor <= c.job.total, "cursor overshot"
+            cursors[id(c.job)] = c.job.cursor
+        return s
+
+    for n_decode in decode_loads:  # arbitrary interleaved decode load
+        run_iteration(n_decode)
+
+    # drain at zero decode load: termination is pure chunk arithmetic
+    expected = sum(
+        (1 if j.monolithic else -(-(j.total - j.cursor) // chunk))
+        for j in jobs if not j.done)
+    n_iters = 0
+    while any(not j.done for j in jobs):
+        s = run_iteration(0)
+        assert s.chunks
+        n_iters += 1
+        assert n_iters <= expected, "drain exceeded the chunk-count bound"
+    assert all(j.cursor == j.total for j in jobs)
+
+
+def test_planner_runs_without_hypothesis():
+    """Tier-1 sanity: one fixed mix exercises the checker even when
+    hypothesis is stubbed."""
+    scfg = SchedConfig(token_budget=16, chunk_tokens=8)
+    jobs = _mk_jobs([(20, False), (40, True), (3, False)])
+    for n_decode in (0, 3, 17, 0, 0, 0, 0):
+        s = plan_iteration(scfg, n_decode, jobs)
+        _check_schedule(scfg, n_decode, jobs, s)
+        for c in s.chunks:
+            c.job.cursor = c.end
+    assert all(j.done for j in jobs)
+
+
+# ---------------------------------------------------------------------------
+# manager: chunked-lifecycle page conservation
+# ---------------------------------------------------------------------------
+
+def _conservation(pm: PagedCacheManager) -> None:
+    alloc = pm.allocator
+    free = list(alloc._free)
+    assert len(set(free)) == len(free), "double-free: duplicate free pages"
+    assert alloc.n_free + alloc.n_used == alloc.n_blocks
+    holders = np.zeros((alloc.n_blocks,), np.int64)
+    for slot, info in pm._slots.items():
+        live = [p for p in info.blocks if p >= 0]
+        assert len(set(live)) == len(live), "slot maps a page twice"
+        assert not set(live) & set(free), "live page on the free list"
+        holders[live] += 1
+    np.testing.assert_array_equal(
+        alloc.ref, holders,
+        err_msg="refcounts must equal the number of live holders")
+    assert pm.shielded <= set(pm._slots), "shield on a dead slot"
+
+
+def _chunk_trace_strategy():
+    # (op, slot selector, length selector); chunk over-weighted so
+    # prefills actually complete and decode/release get live slots
+    return st.lists(
+        st.tuples(
+            st.sampled_from(["admit", "chunk", "chunk", "chunk", "step",
+                             "step", "release"]),
+            st.integers(min_value=0, max_value=N_SLOTS - 1),
+            st.integers(min_value=1, max_value=40),
+        ),
+        min_size=1, max_size=60)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(window=st.sampled_from([0, 5, 16]), trace=_chunk_trace_strategy())
+def test_chunked_lifecycle_conserves_pages(window, trace):
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(
+        sliding_window=window)
+    pm = PagedCacheManager(cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
+                           block_size=BLOCK, n_blocks=N_BLOCKS)
+    # chunk width: the scheduler pins ring mode to one block per chunk
+    C = BLOCK
+    state = {}  # slot -> {"toks", "frontier", "active"}
+
+    for op, sel, n in trace:
+        if op == "admit":
+            slot = next((s for s in range(N_SLOTS) if s not in state), None)
+            if slot is None:
+                continue
+            toks = (np.arange(n, dtype=np.int32) * (sel % 3 + 1)) % 97
+            got = pm.admit_chunked(slot, toks)
+            if got is not None:
+                assert slot in pm.shielded, "mid-prefill slot unshielded"
+                state[slot] = {"toks": toks, "frontier": 0,
+                               "active": False}
+        elif op == "chunk":
+            pre = [s for s, v in state.items() if not v["active"]]
+            if not pre:
+                continue
+            slot = pre[sel % len(pre)]
+            v = state[slot]
+            start = v["frontier"]
+            end = min(start + C, len(v["toks"]))
+            if not pm.ensure_chunk(slot, start, end):
+                pm.release(slot)  # self-preempt: give pages back
+                del state[slot]
+                _conservation(pm)
+                continue
+            ids = pm.chunk_block_ids(slot, start, end, len(v["toks"]))
+            live = {p for p in ids if p >= 0}
+            assert not live & set(pm.allocator._free), \
+                "chunk write routed at a freed page"
+            pm.set_frontier(slot, end)
+            v["frontier"] = end
+            assert int(pm.lengths[slot]) == end
+            if end >= len(v["toks"]):
+                pm.finish_chunked(slot, v["toks"])
+                pm.unshield(slot)  # scheduler: at decode activation
+                v["active"] = True
+        elif op == "step":
+            act = [s for s, v in state.items()
+                   if v["active"] and int(pm.lengths[s]) < MAX_LEN]
+            if not act:
+                continue
+            slot = act[sel % len(act)]
+            if pm.ensure_appendable(slot):
+                pm.advance(slot)
+            else:
+                pm.release(slot)  # preempt on pool exhaustion
+                del state[slot]
+        elif op == "release" and state:
+            keys = sorted(state)
+            slot = keys[sel % len(keys)]
+            pm.release(slot)
+            del state[slot]
+        _conservation(pm)
+
+    for slot in sorted(state):
+        pm.release(slot)
+        _conservation(pm)
+    assert pm.allocator.n_used == 0, "drained pool leaks pages"
+    assert pm._registry == {}, \
+        "registry entries must die with their pages"
+    assert not pm.shielded
+
+
+def test_chunked_lifecycle_runs_without_hypothesis():
+    """Tier-1 sanity: a fixed chunked lifecycle (admit → chunks → finish
+    → steps → release) covers the conservation checker without
+    hypothesis, windowed and unwindowed."""
+    for window in (0, 16):
+        cfg = reduce_config(get_config("llama3.2-1b")).with_(
+            sliding_window=window)
+        pm = PagedCacheManager(cfg, n_slots=2, max_len=MAX_LEN,
+                               block_size=BLOCK, n_blocks=N_BLOCKS)
+        toks = np.arange(20, dtype=np.int32)
+        assert pm.admit_chunked(0, toks) is not None
+        _conservation(pm)
+        f = 0
+        while f < len(toks):
+            end = min(f + BLOCK, len(toks))
+            assert pm.ensure_chunk(0, f, end)
+            pm.chunk_block_ids(0, f, end, len(toks))
+            pm.set_frontier(0, end)
+            f = end
+            _conservation(pm)
+        pm.finish_chunked(0, toks)
+        pm.unshield(0)
+        for _ in range(24):
+            if pm.ensure_appendable(0):
+                pm.advance(0)
+            _conservation(pm)
+        pm.release(0)
+        _conservation(pm)
+        assert pm.allocator.n_used == 0

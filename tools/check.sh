@@ -26,10 +26,11 @@ python -c "import pytest" 2>/dev/null || {
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
 
-# static analysis: the registry-wide program sweep + host-aliasing audit,
-# exactly what CI's `analysis` job gates (tools/jaxlint.py exits non-zero
-# on any violation or coverage hole)
-python tools/jaxlint.py --sweep --aliasing
+# static analysis: the registry-wide program sweep + host-aliasing audit
+# + the scheduled-engine submit-path audit, exactly what CI's `analysis`
+# job gates (tools/jaxlint.py exits non-zero on any violation or
+# coverage hole)
+python tools/jaxlint.py --sweep --aliasing --submit
 echo "[check] jaxlint clean"
 
 # observability self-check: metrics math, trace-ring semantics, a real

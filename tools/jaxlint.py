@@ -3,7 +3,9 @@
 
     tools/jaxlint.py --sweep        lint every registered backend combo
     tools/jaxlint.py --aliasing     host-aliasing audit of real engines
-    tools/jaxlint.py                both (the CI `analysis` job's gate)
+    tools/jaxlint.py --submit       NoSyncPrefillInSubmit audit of the
+                                    scheduled engines (+ positive control)
+    tools/jaxlint.py                all three (the CI `analysis` gate)
     tools/jaxlint.py --list-rules   registered rule names + descriptions
     tools/jaxlint.py --json out.json  also write the structured report
 
@@ -51,12 +53,26 @@ def _run_aliasing(args):
     return findings
 
 
+def _run_submit(args):
+    """NoSyncPrefillInSubmit: scheduled engines' submit must enqueue only
+    (with a positive control on the synchronous engine)."""
+    from repro.lint import report, submitpath
+
+    findings = submitpath.audit_submit_path()
+    report.render_findings(
+        "submit-path audit (scheduled dense + paged, sync control)",
+        findings)
+    return findings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="jaxlint", description=__doc__)
     ap.add_argument("--sweep", action="store_true",
                     help="lint every registered backend combo")
     ap.add_argument("--aliasing", action="store_true",
                     help="host-aliasing audit of dense+paged engines")
+    ap.add_argument("--submit", action="store_true",
+                    help="NoSyncPrefillInSubmit audit of scheduled engines")
     ap.add_argument("--list-rules", action="store_true",
                     help="print registered rules and exit")
     ap.add_argument("--json", metavar="PATH",
@@ -70,13 +86,17 @@ def main(argv=None) -> int:
         report.render_rules()
         return 0
 
-    run_sweep = args.sweep or not (args.sweep or args.aliasing)
-    run_alias = args.aliasing or not (args.sweep or args.aliasing)
+    none_picked = not (args.sweep or args.aliasing or args.submit)
+    run_sweep = args.sweep or none_picked
+    run_alias = args.aliasing or none_picked
+    run_submit = args.submit or none_picked
 
     sweep_rep = _run_sweep(args) if run_sweep else None
     alias_findings = _run_aliasing(args) if run_alias else None
+    submit_findings = _run_submit(args) if run_submit else None
 
-    doc = report.to_json_dict(sweep=sweep_rep, aliasing=alias_findings)
+    doc = report.to_json_dict(sweep=sweep_rep, aliasing=alias_findings,
+                              submit=submit_findings)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(doc, fh, indent=2)
