@@ -48,7 +48,19 @@ emits ``BENCH_serving_obs.json`` — p50/p99 TTFT, the decode-step latency
 histogram, pool-occupancy high-water, and the recycle/CoW/preempt
 counters — the first entry of the run-to-run perf trajectory.
 
+A sixth section compares the QUANTIZED pool (``paged_q8``: int8 pages +
+per-(page, kv-head) f32 scales, dequantized inside the attention
+kernels) against the fp paged pool at the SAME cache-HBM budget on
+long-skewed traffic: the int8 bytes buy ~4x the pages, so peak
+concurrent streams must rise by at least ``Q8_STREAM_GAIN``.  The
+numerics gate rides along — greedy streams must match the fp pool
+exactly on well-conditioned weights, and full-shape page-crossing
+prefill logits must stay within 10% relative error — and the whole
+payload lands in ``BENCH_quant_numerics.json``.
+
   PYTHONPATH=src python -m benchmarks.bench_paged_serving
+  PYTHONPATH=src python -m benchmarks.bench_paged_serving --quant   # only
+                                           the sixth section (CI artifact)
 """
 from __future__ import annotations
 
@@ -63,7 +75,8 @@ from repro.configs import get_config, reduce_config
 from repro.core import merge_skipless
 from repro.core.analysis import cost_dict
 from repro.models import DensePrefillDest, forward_prefill, init_params
-from repro.serving import Engine, PagedCacheAdapter, ServeConfig
+from repro.serving import (Engine, PagedCacheAdapter, PagedQ8CacheAdapter,
+                           ServeConfig)
 from repro.serving.paged_kv_cache import scatter_prefill_blocks
 
 # equal cache-HBM budget: dense gets DENSE_SLOTS worst-case slots, paged
@@ -77,6 +90,8 @@ N_REQ = 16
 # bound (ceil(16/4)+1 = 5 pages/request) bites visibly on long requests
 WIN = 16
 WIN_BLOCK = 4
+# quantized section: equal HBM must buy at least this peak-stream factor
+Q8_STREAM_GAIN = 1.8
 
 
 def _workload(vocab: int):
@@ -184,6 +199,171 @@ def write_obs_doc(doc, path: str = "") -> str:
         json.dump(doc, fh, indent=2, sort_keys=True)
         fh.write("\n")
     return path
+
+
+def _workload_quant(vocab: int):
+    """Long-skewed ragged traffic for the quantized-pool comparison:
+    alternating 40- and 24-token prompts (plus one identical pair for
+    prefix sharing).  Power-of-two bucketing pins a 40-token prompt to a
+    full 64-token stretch of pages, so the fp pool saturates at a
+    handful of streams while the SAME bytes as int8 pages keep every
+    slot busy."""
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, vocab, size=(n,)).astype(np.int32)
+               for n in [40, 24] * (N_REQ // 2)]
+    prompts[1] = prompts[0].copy()
+    return prompts
+
+
+def _serve_quant(cfg, params):
+    """Equal-HBM fp-paged vs paged_q8 serve: the q8 pool gets exactly the
+    fp pool's byte budget spent on int8 pages + f32 scale rows."""
+    prompts = _workload_quant(cfg.vocab_size)
+    n_blocks_fp = DENSE_SLOTS * MAX_LEN // BLOCK
+
+    def fp_engine():
+        return Engine(cfg, params,
+                      ServeConfig(n_slots=N_REQ, max_len=MAX_LEN),
+                      cache=PagedCacheAdapter(block_size=BLOCK,
+                                              n_blocks=n_blocks_fp))
+
+    budget = fp_engine().kv.cache_bytes
+    probe = Engine(cfg, params, ServeConfig(n_slots=1, max_len=MAX_LEN),
+                   cache=PagedQ8CacheAdapter(block_size=BLOCK, n_blocks=2))
+    n_blocks_q8 = int(budget // (probe.kv.cache_bytes / 2))
+
+    def q8_engine():
+        return Engine(cfg, params,
+                      ServeConfig(n_slots=N_REQ, max_len=MAX_LEN),
+                      cache=PagedQ8CacheAdapter(block_size=BLOCK,
+                                                n_blocks=n_blocks_q8))
+
+    rows = {}
+    for name, mk in (("paged", fp_engine), ("paged_q8", q8_engine)):
+        mk().generate(prompts[:1], max_new_tokens=2)  # warm the jit caches
+        eng = mk()
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, max_new_tokens=MAX_NEW)
+        dt = time.perf_counter() - t0
+        rows[name] = dict(
+            cache=name, tok_s=sum(len(o) for o in outs) / dt,
+            ttft_ms=1e3 * float(np.mean([o.ttft_s for o in outs])),
+            peak_streams=eng.stats["peak_active"],
+            deferred=eng.stats["n_deferred"],
+            preempted=eng.stats["n_preempted"],
+            cache_bytes=eng.kv.cache_bytes,
+            shared_pages=eng.pm.allocator.n_shared_hits,
+            cow=eng.pm.allocator.n_cow)
+    fp_row, q8_row = rows["paged"], rows["paged_q8"]
+    assert q8_row["cache_bytes"] <= budget, (
+        "q8 pool must fit the fp pool's byte budget",
+        q8_row["cache_bytes"], budget)
+    gain = q8_row["peak_streams"] / fp_row["peak_streams"]
+    assert gain >= Q8_STREAM_GAIN, (
+        f"equal HBM as int8 pages must buy >= {Q8_STREAM_GAIN}x peak "
+        f"streams: {q8_row['peak_streams']} vs {fp_row['peak_streams']}")
+    return dict(budget_bytes=budget, n_blocks_fp=n_blocks_fp,
+                n_blocks_q8=n_blocks_q8, stream_gain=gain,
+                fp=fp_row, q8=q8_row)
+
+
+def _quant_numerics(base, params):
+    """The numerics gate behind the q8 row, per weight style: greedy
+    streams of a short serve must MATCH the fp pool exactly (weights at
+    init scale are well-conditioned), and a full page-crossing 48-token
+    prefill must keep the q8 logits within 10% relative error of the fp
+    paged logits with the argmax intact."""
+    from repro.models import (PagedPrefillDest, PagedQ8PrefillDest,
+                              init_paged_cache, init_paged_q8_cache)
+    import jax.numpy as jnp
+    mparams, mcfg = merge_skipless(params, base, "qp")
+    styles = {}
+    for wname, (c, p) in (("skipless", (base, params)),
+                          ("merged_qp", (mcfg, mparams))):
+        S, bs = 48, 8
+        nbk = S // bs
+        toks = jnp.asarray(np.arange(S) * 5 % c.vocab_size,
+                           jnp.int32)[None]
+        ids = jnp.arange(nbk, dtype=jnp.int32)
+        pc = init_paged_cache(c, n_blocks=nbk, block_size=bs, n_slots=1,
+                              max_len=S)
+        lg_fp, _ = forward_prefill(p, c, toks,
+                                   PagedPrefillDest(pc.k, pc.v, ids))
+        qc = init_paged_q8_cache(c, n_blocks=nbk, block_size=bs,
+                                 n_slots=1, max_len=S)
+        lg_q8, _ = forward_prefill(
+            p, c, toks, PagedQ8PrefillDest(qc.k, qc.v, qc.k_scale,
+                                           qc.v_scale, ids))
+        rel = float(jnp.max(jnp.abs(lg_q8 - lg_fp))) \
+            / float(jnp.max(jnp.abs(lg_fp)))
+        argmax_ok = int(jnp.argmax(lg_q8[0, :c.vocab_size])) \
+            == int(jnp.argmax(lg_fp[0, :c.vocab_size]))
+
+        # 4 new tokens: int8 noise compounds per decode step through the
+        # skipless stack, and past ~4 steps a near-tie argmax can flip —
+        # the bounded-rel-err gate above covers the longer horizon
+        prompts = [np.arange(5, dtype=np.int32) % c.vocab_size + 3 * i
+                   for i in range(2)]
+        streams = {}
+        for kind, cls in (("paged", PagedCacheAdapter),
+                          ("paged_q8", PagedQ8CacheAdapter)):
+            eng = Engine(c, p, ServeConfig(n_slots=2, max_len=48),
+                         cache=cls(block_size=8, n_blocks=12))
+            streams[kind] = eng.generate(prompts, max_new_tokens=4)
+        greedy_match = streams["paged"] == streams["paged_q8"]
+        assert rel <= 0.10, (wname, rel)
+        assert argmax_ok and greedy_match, (wname, argmax_ok, greedy_match)
+        styles[wname] = dict(logit_rel_err=rel, argmax_match=argmax_ok,
+                             greedy_match=bool(greedy_match),
+                             prefill_tokens=S, pages=nbk)
+    return styles
+
+
+def quant_section():
+    """The whole sixth section (equal-HBM serve + numerics gate) — the
+    ``BENCH_quant_numerics.json`` payload.  Runs on its own windowless
+    config at init weight scale, so ``--quant`` can skip everything
+    else."""
+    base = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        sliding_window=0)
+    params = init_params(jax.random.PRNGKey(0), base)
+    return dict(equal_hbm=_serve_quant(base, params),
+                numerics=_quant_numerics(base, params),
+                workload=dict(n_requests=N_REQ, prompt_lens=[40, 24],
+                              max_new=MAX_NEW, block_size=BLOCK,
+                              max_len=MAX_LEN))
+
+
+def write_quant_doc(doc, path: str = "") -> str:
+    """Persist the q8 payload (default: benchmarks/BENCH_quant_numerics
+    .json next to this module) — the CI analysis artifact."""
+    path = path or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_quant_numerics.json")
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+def print_quant(doc) -> None:
+    hbm, num = doc["equal_hbm"], doc["numerics"]
+    print(f"\nquantized pool (paged_q8) at equal cache HBM "
+          f"({hbm['budget_bytes'] / 1e6:.2f} MB: {hbm['n_blocks_fp']} fp "
+          f"pages -> {hbm['n_blocks_q8']} int8 pages):")
+    hdr = ("cache", "peak_streams", "tok_s", "ttft_ms", "deferred",
+           "shared_pages", "cow")
+    print(" ".join(f"{h:>12}" for h in hdr))
+    for r in (hbm["fp"], hbm["q8"]):
+        print(" ".join(
+            f"{r.get(h, '-'):>12.1f}" if isinstance(r.get(h), float)
+            else f"{str(r.get(h, '-')):>12}" for h in hdr))
+    print(f"  stream gain {hbm['stream_gain']:.2f}x >= "
+          f"{Q8_STREAM_GAIN}x floor OK")
+    for wname, n in num.items():
+        print(f"  numerics[{wname}]: greedy streams fp==q8 OK | "
+              f"{n['prefill_tokens']}-token prefill rel err "
+              f"{100 * n['logit_rel_err']:.2f}% <= 10% (argmax intact)")
 
 
 def _prefill_traffic(dense: Engine, paged: Engine, bucket: int):
@@ -326,11 +506,14 @@ def run():
 
     # fifth section: the instrumented serve the perf trajectory records
     obs_doc = _serve_obs(base, params)
-    return rows, prefill, merged_prefill, rows_w, obs_doc
+
+    # sixth section: the quantized pool at equal HBM + its numerics gate
+    quant_doc = quant_section()
+    return rows, prefill, merged_prefill, rows_w, obs_doc, quant_doc
 
 
 def main():
-    rows, prefill, merged_prefill, rows_w, obs_doc = run()
+    rows, prefill, merged_prefill, rows_w, obs_doc, quant_doc = run()
     print(f"{N_REQ} requests, prompts 4..28 tok, +{MAX_NEW} new; equal "
           f"cache HBM ({rows[0]['cache_bytes']/1e6:.2f} MB)")
     hdr = ("weights", "cache", "peak_streams", "tok_s", "ttft_ms",
@@ -401,8 +584,23 @@ def main():
           f"deferred {h['deferred']}")
     print("Perfetto export validated; BENCH_serving_obs.json written")
 
+    print_quant(quant_doc)
+    qpath = write_quant_doc(quant_doc)
+    print(f"BENCH_quant_numerics.json written -> {qpath}")
+
+
+def main_quant():
+    """``--quant``: only the sixth section — the fast CI-artifact path."""
+    doc = quant_section()
+    print_quant(doc)
+    path = write_quant_doc(doc)
+    print(f"BENCH_quant_numerics.json written -> {path}")
+
 
 if __name__ == "__main__":
     import sys
     sys.path.insert(0, "src")
-    main()
+    if "--quant" in sys.argv[1:]:
+        main_quant()
+    else:
+        main()

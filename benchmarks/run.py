@@ -51,10 +51,13 @@ def main() -> None:
                            f"{m['prefill_bytes_saved_frac']:.3f}")
             elif name.startswith("paged_serving"):
                 # run() -> (serve rows, prefill rows, merged-prefill rows,
-                #           windowed serve rows, instrumented obs doc)
-                rows, prefill, merged_prefill, rows_w, obs_doc = rows
-                # persist the perf-trajectory payload (repro.obs)
+                #           windowed serve rows, instrumented obs doc,
+                #           quantized-pool doc)
+                (rows, prefill, merged_prefill, rows_w, obs_doc,
+                 quant_doc) = rows
+                # persist the perf-trajectory payloads
                 obs_path = bench_paged_serving.write_obs_doc(obs_doc)
+                bench_paged_serving.write_quant_doc(quant_doc)
                 dn = next(r for r in rows if r["weights"] == "merged_qp"
                           and r["cache"] == "dense")
                 pg = next(r for r in rows if r["weights"] == "merged_qp"
@@ -68,6 +71,9 @@ def main() -> None:
                 wp = next(r for r in rows_w if r["weights"] == "merged_qp"
                           and r["cache"] == "paged")
                 h = obs_doc["headline"]
+                qh = quant_doc["equal_hbm"]
+                qerr = max(s["logit_rel_err"]
+                           for s in quant_doc["numerics"].values())
                 derived = (f"streams_paged_vs_dense="
                            f"{pg['peak_streams']}v{dn['peak_streams']}"
                            f";prefill_bytes_saved={saved:.3f}"
@@ -76,6 +82,8 @@ def main() -> None:
                            f"{wp['peak_streams']}v{wd['peak_streams']}"
                            f";windowed_page_hwm={wp['page_hwm']}"
                            f"of{wp['ring_bound']}"
+                           f";q8_stream_gain={qh['stream_gain']:.2f}"
+                           f";q8_max_rel_err={qerr:.3f}"
                            f";obs_ttft_p99_ms={h['ttft_p99_ms']:.1f}"
                            f";obs_json={obs_path}")
             elif name.startswith("numerics"):

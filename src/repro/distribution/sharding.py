@@ -218,6 +218,23 @@ def paged_cache_pspecs(cfg: ModelConfig, rules: ShardingRules):
     )
 
 
+def paged_q8_cache_pspecs(cfg: ModelConfig, rules: ShardingRules):
+    """PartitionSpecs for a PagedQ8DecodeCache: the int8 pools shard like
+    the fp pools (physical-block axis over the model axis), and the
+    (L, NB, Hkv) scale arrays shard their block axis IDENTICALLY so every
+    page's scale row lives on the chip that owns the page."""
+    from repro.models.transformer import PagedQ8DecodeCache
+
+    dp, tp = rules.dp, rules.axis("heads")
+    pool = P(None, tp, None, None, None)
+    scale = P(None, tp, None)
+    return PagedQ8DecodeCache(
+        k=pool, v=pool, k_scale=scale, v_scale=scale,
+        block_tables=P(dp, None),
+        length=P(dp),
+    )
+
+
 def serving_cache_pspecs(cfg: ModelConfig, rules: ShardingRules, cache_like):
     """PartitionSpecs for whichever serving cache is in use, TRIMMED to the
     fields that actually exist.
@@ -230,8 +247,11 @@ def serving_cache_pspecs(cfg: ModelConfig, rules: ShardingRules, cache_like):
     state, vlm cross-kv, …).  This is the single home for that trim logic
     (the engine used to re-derive it per call site).
     """
-    from repro.models.transformer import DecodeCache, PagedDecodeCache
+    from repro.models.transformer import (DecodeCache, PagedDecodeCache,
+                                          PagedQ8DecodeCache)
 
+    if isinstance(cache_like, PagedQ8DecodeCache):
+        return paged_q8_cache_pspecs(cfg, rules)
     if isinstance(cache_like, PagedDecodeCache):
         return paged_cache_pspecs(cfg, rules)
     spec = cache_pspecs(cfg, rules)

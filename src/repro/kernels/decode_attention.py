@@ -392,3 +392,178 @@ def decode_attention_paged_merged_bsd(
         interpret=interpret,
         name="decode_attention_paged_merged",
     )(block_tables.astype(jnp.int32), u, k_pool, v_pool, q_position)
+
+
+# ---------------------------------------------------------------------------
+# quantized (paged_q8) variants: int8 page pools, in-kernel dequant
+# ---------------------------------------------------------------------------
+#
+# The pools are the same physical pages quantized to int8 with one float32
+# scale per (page, kv head) (see ``kernels.quant``).  The scale arrays ride
+# along as EXTRA scalar-prefetch operands next to the block table — (NB,
+# Hkv) is tiny, lives in SMEM, and the kernel looks up the gathered page's
+# scale with the same ``max(bt[b, j], 0)`` clamp the BlockSpec gather uses
+# (unmapped slots read page 0's scale; the position mask zeroes those
+# scores regardless).  Dequant happens on the (bs, D) tile already in
+# VMEM — `ints.astype(f32) * scale` — so no full-precision pool is ever
+# materialized in HBM; everything downstream of the per-tile dequant is
+# the fp kernels' shared online-softmax update, unchanged.
+
+def _decode_kernel_paged_q8(bt_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+                            qpos_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                            scale: float, window: int, bs: int, nb: int,
+                            ring: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+    pg = jnp.maximum(bt_ref[b, j], 0)
+    kd = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[pg, h]
+    vd = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[pg, h]
+    kpos = _paged_kpos(bt_ref[b, j], j, bs, qpos_ref[0, 0], ring)
+    _online_softmax_block(j, q_ref[0, 0], kd, vd,
+                          kpos, qpos_ref[0, 0], m_scr, l_scr, acc_scr,
+                          scale=scale, window=window)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0, 0] = _finish_output(l_scr, acc_scr).astype(o_ref.dtype)
+
+
+def decode_attention_paged_q8_bhsd(
+    q: jnp.ndarray,  # (B, Hkv, G, D) — grouped query heads
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8
+    k_scale: jnp.ndarray,  # (NB, Hkv) float32 per-(page, head) scales
+    v_scale: jnp.ndarray,  # (NB, Hkv) float32
+    block_tables: jnp.ndarray,  # (B, MB) int32 physical page ids; -1 unmapped
+    q_position: jnp.ndarray,  # (B, 1) int32
+    *,
+    sliding_window: int = 0,
+    ring_blocks: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Generic paged decode over an int8 pool: ``decode_attention_paged_bhsd``
+    with the gathered page dequantized in VMEM from its scalar-prefetched
+    (page, head) scale."""
+    B, Hkv, G, D = q.shape
+    NB, bs = k_pool.shape[0], k_pool.shape[1]
+    MB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel_paged_q8, scale=scale,
+                               window=sliding_window, bs=bs, nb=MB,
+                               ring=ring_blocks)
+
+    def page(b, h, j, bt, ks, vs):  # physical page for logical block j
+        return (jnp.maximum(bt[b, j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt, ks, vs: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), page),
+            pl.BlockSpec((1, bs, 1, D), page),
+            pl.BlockSpec((1, 1), lambda b, h, j, bt, ks, vs: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, bt, ks, vs: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention_paged_q8",
+    )(block_tables.astype(jnp.int32), k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32), q, k_pool, v_pool, q_position)
+
+
+def _decode_kernel_paged_q8_merged(bt_ref, ks_ref, vs_ref, u_ref, k_ref,
+                                   v_ref, qpos_ref, o_ref, m_scr, l_scr,
+                                   acc_scr, *, scale: float, window: int,
+                                   bs: int, nb: int, ring: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+    pg = jnp.maximum(bt_ref[b, j], 0)
+    kd = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[pg, h]
+    vd = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[pg, h]
+    kpos = _paged_kpos(bt_ref[b, j], j, bs, qpos_ref[0, 0], ring)
+    _online_softmax_block(j, u_ref[0], kd, vd,
+                          kpos, qpos_ref[0, 0], m_scr, l_scr, acc_scr,
+                          scale=scale, window=window)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0] = _finish_output(l_scr, acc_scr).astype(o_ref.dtype)
+
+
+def decode_attention_paged_q8_merged_bsd(
+    u: jnp.ndarray,  # (B, Hq, D) — RoPE'd residual stream viewed as heads
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 K* page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 V* page pool
+    k_scale: jnp.ndarray,  # (NB, Hkv) float32 per-(page, head) scales
+    v_scale: jnp.ndarray,  # (NB, Hkv) float32
+    block_tables: jnp.ndarray,  # (B, MB) int32 physical page ids; -1 unmapped
+    q_position: jnp.ndarray,  # (B, 1) int32
+    *,
+    sliding_window: int = 0,
+    ring_blocks: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) paged decode over an int8 pool: the paper's
+    stream-as-query fast path with the page-pool HBM traffic quartered
+    (int8 vs f32 pages; the per-page scales are noise).  Dequant as in
+    ``decode_attention_paged_q8_bhsd``."""
+    B, Hq, D = u.shape
+    NB, bs, Hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    MB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel_paged_q8_merged, scale=scale,
+                               window=sliding_window, bs=bs, nb=MB,
+                               ring=ring_blocks)
+
+    def page(b, h, j, bt, ks, vs):
+        return (jnp.maximum(bt[b, j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, MB),
+        in_specs=[
+            # kv head h owns query heads [h*G, (h+1)*G) of the stream
+            pl.BlockSpec((1, G, D), lambda b, h, j, bt, ks, vs: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), page),
+            pl.BlockSpec((1, bs, 1, D), page),
+            pl.BlockSpec((1, 1), lambda b, h, j, bt, ks, vs: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D),
+                               lambda b, h, j, bt, ks, vs: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), u.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention_paged_q8_merged",
+    )(block_tables.astype(jnp.int32), k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32), u, k_pool, v_pool, q_position)

@@ -238,3 +238,99 @@ def flash_attention_merged_bsd(
         interpret=interpret,
         name="flash_attention_merged",
     )(u, k, v)
+
+
+def _flash_kernel_merged_q8(q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                            m_scr, l_scr, acc_scr, *, scale: float,
+                            causal: bool, window: int, bq: int, bk: int,
+                            nk: int, sg: int):
+    """Merged flash kernel over int8 K*/V* tiles: each kv tile spans
+    ``bk // sg`` whole serving pages (``sg`` = page size), and the tile's
+    per-(page, head) scales ride in as (1, bk//sg, 1) float32 blocks of the
+    (B, Sk//sg, Hkv) scale arrays.  The load thunks dequantize in VMEM —
+    expand the page scales across their ``sg`` rows and multiply — so the
+    shared ``_flash_body`` recurrence is unchanged and no full-precision
+    K/V buffer exists outside the tile."""
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    def dq(ref, s_ref):
+        s = s_ref[0, :, 0]  # (bk // sg,) — one scale per page in the tile
+        s = jnp.broadcast_to(s[:, None], (bk // sg, sg)).reshape(bk, 1)
+        return ref[0, :, 0].astype(jnp.float32) * s
+
+    _flash_body(iq, ik, lambda: q_ref[0, :, 0], lambda: dq(k_ref, ks_ref),
+                lambda: dq(v_ref, vs_ref), m_scr, l_scr, acc_scr,
+                scale=scale, causal=causal, window=window, bq=bq, bk=bk)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, :, 0] = _flash_finish(l_scr, acc_scr).astype(o_ref.dtype)
+
+
+def flash_attention_merged_q8_bsd(
+    u: jnp.ndarray,  # (B, Sq, Hq, D) — RoPE'd residual stream viewed as heads
+    k: jnp.ndarray,  # (B, Sk, Hkv, D) int8 — K* at pool quantization
+    v: jnp.ndarray,  # (B, Sk, Hkv, D) int8 — V*
+    k_scale: jnp.ndarray,  # (B, Sk // sg, Hkv) float32 per-(page, head)
+    v_scale: jnp.ndarray,  # (B, Sk // sg, Hkv) float32
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged-weight flash PREFILL over int8 K*/V* (the ``paged_q8`` pool's
+    quantization applied to the in-flight sequence layout).
+
+    Grid/BlockSpecs as in ``flash_attention_merged_bsd`` plus two scale
+    operands tiled in lockstep with their kv tiles; the kv block size is
+    rounded to a whole number of serving pages (``sg`` = Sk // n_scale
+    blocks) so a tile never splits a page's scale.  Output dtype follows
+    ``u`` (the stream), since the int8 inputs carry no float dtype.
+    """
+    B, Sq, Hq, D = u.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    nsb = k_scale.shape[1]
+    assert Sk % nsb == 0, (Sk, nsb)
+    sg = Sk // nsb  # serving page size — scale granularity along Sk
+    scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    assert Sq % bq == 0, (Sq, bq)
+    # kv tile = whole pages: largest page-count divisor of nsb <= target
+    bg = max(1, min(block_k // sg, nsb))
+    while nsb % bg:
+        bg -= 1
+    bk = bg * sg
+    nq, nk = Sq // bq, Sk // bk
+
+    kernel = functools.partial(_flash_kernel_merged_q8, scale=scale,
+                               causal=causal, window=sliding_window,
+                               bq=bq, bk=bk, nk=nk, sg=sg)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            # kv head h // G owns query head h of the stream view
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk // sg, 1), lambda b, h, i, j, G=G: (b, j, h // G)),
+            pl.BlockSpec((1, bk // sg, 1), lambda b, h, i, j, G=G: (b, j, h // G)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), u.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention_merged_q8",
+    )(u, k, v, k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))

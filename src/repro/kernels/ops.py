@@ -15,11 +15,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import (flash_attention_bhsd,
-                                           flash_attention_merged_bsd)
+                                           flash_attention_merged_bsd,
+                                           flash_attention_merged_q8_bsd)
 from repro.kernels.decode_attention import (decode_attention_bhsd,
                                             decode_attention_merged_bsd,
                                             decode_attention_paged_bhsd,
-                                            decode_attention_paged_merged_bsd)
+                                            decode_attention_paged_merged_bsd,
+                                            decode_attention_paged_q8_bhsd,
+                                            decode_attention_paged_q8_merged_bsd)
 from repro.kernels.paging import paged_ring_active
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -243,6 +246,105 @@ def decode_attention_paged_merged(
 
 
 # ---------------------------------------------------------------------------
+# quantized (paged_q8) wrappers: int8 pools + per-(page, head) scales
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("sliding_window", "interpret"))
+def decode_attention_paged_q8(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8
+    *,
+    k_scale: jnp.ndarray,  # (NB, Hkv) float32 per-(page, head) scales
+    v_scale: jnp.ndarray,  # (NB, Hkv) float32
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    sliding_window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Generic decode attention over an int8 paged pool — the q8 face of
+    ``decode_attention_paged``: same block-table gather and ring
+    derivation, with the gathered page dequantized inside the kernel from
+    its scalar-prefetched scale."""
+    B, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    ring = paged_ring_active(sliding_window, k_pool.shape[1],
+                             block_tables.shape[1])
+    out = decode_attention_paged_q8_bhsd(
+        q.reshape(B, Hkv, G, D), k_pool, v_pool, k_scale, v_scale,
+        block_tables.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
+        sliding_window=sliding_window, ring_blocks=ring, interpret=interpret)
+    return out.reshape(B, Hq, D)
+
+
+@partial(jax.jit, static_argnames=("n_kv_heads", "sliding_window",
+                                   "interpret"))
+def decode_attention_paged_q8_merged(
+    u: jnp.ndarray,  # (B, d_model) — RoPE'd residual stream = merged query
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 K* page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 V* page pool
+    *,
+    k_scale: jnp.ndarray,  # (NB, Hkv) float32 per-(page, head) scales
+    v_scale: jnp.ndarray,  # (NB, Hkv) float32
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    n_kv_heads: int,
+    sliding_window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) decode fast path over an int8 paged pool."""
+    B, d = u.shape
+    Hkv, D = k_pool.shape[2], k_pool.shape[3]
+    assert Hkv == n_kv_heads, (Hkv, n_kv_heads)
+    assert d % D == 0 and (d // D) % Hkv == 0, (d, D, Hkv)
+    ring = paged_ring_active(sliding_window, k_pool.shape[1],
+                             block_tables.shape[1])
+    out = decode_attention_paged_q8_merged_bsd(
+        u.reshape(B, d // D, D), k_pool, v_pool, k_scale, v_scale,
+        block_tables.astype(jnp.int32), q_position.astype(jnp.int32)[:, None],
+        sliding_window=sliding_window, ring_blocks=ring, interpret=interpret)
+    return out.reshape(B, d)
+
+
+@partial(jax.jit, static_argnames=("n_kv_heads", "causal", "sliding_window",
+                                   "interpret", "block_q", "block_k"))
+def flash_attention_merged_q8(
+    u: jnp.ndarray,  # (B, Sq, d_model) — RoPE'd residual stream = merged query
+    k: jnp.ndarray,  # (B, Sk, Hkv, D) int8 — K* at pool quantization
+    v: jnp.ndarray,  # (B, Sk, Hkv, D) int8 — V*
+    *,
+    k_scale: jnp.ndarray,  # (B, Sk // sg, Hkv) float32 per-(page, head)
+    v_scale: jnp.ndarray,  # (B, Sk // sg, Hkv) float32
+    n_kv_heads: int,
+    q_positions=None,  # accepted for API parity; kernel assumes arange
+    kv_positions=None,
+    causal: bool = True,
+    sliding_window: int = 0,
+    kv_valid=None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) flash PREFILL over int8 K*/V* — the q8 face of
+    ``flash_attention_merged``; dequant happens tile-by-tile inside the
+    kernel (no full-precision K/V buffer in the program).  The kv block is
+    sized in whole serving pages, so ``block_k`` is a cap, not exact."""
+    assert kv_valid is None, "flash kernel: use the decode kernel for padded caches"
+    B, Sq, d = u.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    assert Hkv == n_kv_heads, (Hkv, n_kv_heads)
+    D = k.shape[3]
+    assert d % D == 0 and (d // D) % Hkv == 0, (d, D, Hkv)
+    bq = _pick_block(Sq, block_q)
+    out = flash_attention_merged_q8_bsd(
+        u.reshape(B, Sq, d // D, D), k, v, k_scale, v_scale,
+        causal=causal, sliding_window=sliding_window,
+        block_q=bq, block_k=block_k, interpret=interpret)
+    return out.reshape(B, Sq, d)
+
+
+# ---------------------------------------------------------------------------
 # attention-kernel table: the kernel-layer face of the serving backend
 # registries (models.backends' AttentionBackend AND PrefillBackend)
 # ---------------------------------------------------------------------------
@@ -265,6 +367,14 @@ ATTENTION_KERNELS = {
     ("prefill", "dense", "merged"): flash_attention_merged,
     ("prefill", "paged", "generic"): flash_attention,
     ("prefill", "paged", "merged"): flash_attention_merged,
+    # q8: decode dequantizes pool pages in-kernel; merged prefill
+    # dequantizes fake-quantized kv tiles in-kernel; the generic q8
+    # prefill dequantizes upstream (models.transformer) and rides the
+    # plain flash kernel.
+    ("decode", "paged_q8", "generic"): decode_attention_paged_q8,
+    ("decode", "paged_q8", "merged"): decode_attention_paged_q8_merged,
+    ("prefill", "paged_q8", "generic"): flash_attention,
+    ("prefill", "paged_q8", "merged"): flash_attention_merged_q8,
 }
 
 

@@ -225,3 +225,77 @@ def ref_decode_attention_paged_merged(
         u.reshape(B, n_kv_heads, G, D), k_pool, v_pool, block_tables,
         q_position, sliding_window=sliding_window, ring_blocks=ring_blocks)
     return o.reshape(B, d)
+
+
+# ---------------------------------------------------------------------------
+# quantized (paged_q8) oracles: dequantize, defer to the fp oracles
+# ---------------------------------------------------------------------------
+
+def ref_q8_dequant_pool(pool: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """(NB, bs, Hkv, D) int8 + (NB, Hkv) f32 -> (NB, bs, Hkv, D) f32."""
+    return pool.astype(jnp.float32) * scale[:, None, :, None]
+
+
+def ref_decode_attention_paged_q8(
+    q: jnp.ndarray,  # (B, Hkv, G, D)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8
+    k_scale: jnp.ndarray,  # (NB, Hkv) float32
+    v_scale: jnp.ndarray,  # (NB, Hkv) float32
+    block_tables: jnp.ndarray,  # (B, MB) int32, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    *,
+    sliding_window: int = 0,
+    ring_blocks: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the q8 paged decode kernel: dequantize the whole pool in
+    float32 (the transparency the kernel explicitly avoids) and defer to
+    the fp paged oracle."""
+    return ref_decode_attention_paged(
+        q, ref_q8_dequant_pool(k_pool, k_scale),
+        ref_q8_dequant_pool(v_pool, v_scale), block_tables, q_position,
+        sliding_window=sliding_window, ring_blocks=ring_blocks)
+
+
+def ref_decode_attention_paged_q8_merged(
+    u: jnp.ndarray,  # (B, d_model)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8
+    k_scale: jnp.ndarray,  # (NB, Hkv) float32
+    v_scale: jnp.ndarray,  # (NB, Hkv) float32
+    block_tables: jnp.ndarray,  # (B, MB) int32, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    *,
+    n_kv_heads: int,
+    sliding_window: int = 0,
+    ring_blocks: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the merged q8 paged decode kernel."""
+    return ref_decode_attention_paged_merged(
+        u, ref_q8_dequant_pool(k_pool, k_scale),
+        ref_q8_dequant_pool(v_pool, v_scale), block_tables, q_position,
+        n_kv_heads=n_kv_heads, sliding_window=sliding_window,
+        ring_blocks=ring_blocks)
+
+
+def ref_flash_attention_merged_q8(
+    u: jnp.ndarray,  # (B, Sq, d_model)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D) int8
+    v: jnp.ndarray,  # (B, Sk, Hkv, D) int8
+    k_scale: jnp.ndarray,  # (B, Sk // sg, Hkv) float32
+    v_scale: jnp.ndarray,  # (B, Sk // sg, Hkv) float32
+    *,
+    n_kv_heads: int,
+    causal: bool = True,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the merged q8 flash PREFILL kernel: expand the per-page
+    scales across their rows, dequantize, defer to the fp merged oracle."""
+    Sk = k.shape[1]
+    sg = Sk // k_scale.shape[1]
+    ks = jnp.repeat(k_scale, sg, axis=1)  # (B, Sk, Hkv)
+    vs = jnp.repeat(v_scale, sg, axis=1)
+    return ref_flash_attention_merged(
+        u, k.astype(jnp.float32) * ks[..., None],
+        v.astype(jnp.float32) * vs[..., None],
+        n_kv_heads=n_kv_heads, causal=causal, sliding_window=sliding_window)

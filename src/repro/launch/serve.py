@@ -11,6 +11,9 @@ weight/bandwidth savings next to the generated tokens.
 (``serving.PagedCacheAdapter``: admission by pages instead of a worst-case
 slot cap, direct-to-page prefill) — ``--slots`` then sizes the page pool in
 dense-slot equivalents while every request gets its own batch row.
+``--cache paged_q8`` is the same pool with int8 pages + per-(page,
+kv-head) scales (the SAME dense-slot-equivalent budget buys ~4x the
+pages, and the report adds the quantized-pool byte telemetry).
 
 Per-request serving stats (prompt_len, time-to-first-token, decode tok/s)
 come straight from ``Engine.generate``'s RequestResults.
@@ -32,7 +35,8 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--cache", default="dense", choices=("dense", "paged"))
+    ap.add_argument("--cache", default="dense",
+                    choices=("dense", "paged", "paged_q8"))
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -43,7 +47,8 @@ def main(argv=None):
     from repro.configs import get_config, reduce_config
     from repro.core import merge_skipless
     from repro.models import count_params, init_params
-    from repro.serving import Engine, PagedCacheAdapter, ServeConfig
+    from repro.serving import (Engine, PagedCacheAdapter,
+                               PagedQ8CacheAdapter, ServeConfig)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -62,10 +67,12 @@ def main(argv=None):
         print(f"QP removal: {n0:,d} -> {n1:,d} params "
               f"({100 * (n0 - n1) / n0:.1f}% removed)", flush=True)
 
-    if args.cache == "paged":
+    if args.cache in ("paged", "paged_q8"):
         sc = ServeConfig(n_slots=args.requests, max_len=args.max_len,
                          temperature=args.temperature, seed=args.seed)
-        cache = PagedCacheAdapter(
+        cls = PagedCacheAdapter if args.cache == "paged" \
+            else PagedQ8CacheAdapter
+        cache = cls(
             block_size=args.block_size,
             n_blocks=args.slots * args.max_len // args.block_size)
     else:
@@ -85,13 +92,16 @@ def main(argv=None):
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s); "
           f"TTFT mean {np.mean(ttfts):.3f}s / max {np.max(ttfts):.3f}s",
           flush=True)
-    if args.cache == "paged":
+    if args.cache in ("paged", "paged_q8"):
         a = eng.pm.allocator
         print(f"  paged pool: {a.n_blocks} pages, peak used {a.peak_used}, "
               f"peak streams {eng.stats['peak_active']}, "
               f"shared {a.n_shared_hits}, cow {a.n_cow}, "
               f"deferred {eng.stats['n_deferred']}, "
               f"preempted {eng.stats['n_preempted']}", flush=True)
+        if args.cache == "paged_q8":
+            print(f"  q8 pool: {eng.pm.pool_bytes / 1e6:.2f} MB resident "
+                  f"(int8 pages + scales)", flush=True)
     for i, o in enumerate(outs[:4]):
         # decode_tok_s is None for single-token requests (no decode phase)
         rate = "n/a" if o.decode_tok_s is None else f"{o.decode_tok_s:.1f}"

@@ -11,7 +11,7 @@ before a single token is decoded.  This package checks them:
   rules       Finding / LintTarget / LintRule + the rule registry
   builtin     the built-in rules (NoForbiddenMatmul, NoOversizedBuffer,
               DonationEffective, NoDtypePromotionDrift,
-              NoHostTransferInStepLoop)
+              NoHostTransferInStepLoop, NoDequantizedPoolBuffer)
   sweep       sweep() — lint EVERY registered (cache_kind, style, impl)
               decode/prefill/chunk backend combo, zero per-combo code
   aliasing    audit_engine() — the host-aliasing race detector
@@ -21,6 +21,7 @@ before a single token is decoded.  This package checks them:
 """
 from repro.lint import aliasing, report, submitpath, walker  # noqa: F401
 from repro.lint.builtin import (BUILTIN_RULES, DonationEffective,  # noqa: F401
+                                NoDequantizedPoolBuffer,
                                 NoDtypePromotionDrift, NoForbiddenMatmul,
                                 NoHostTransferInObsHooks,
                                 NoHostTransferInStepLoop, NoOversizedBuffer)

@@ -30,6 +30,13 @@ classes this repo has actually shipped, each as a checkable invariant.
                           subsystem's zero-overhead-on-device guarantee
                           (hooks are host-side; nothing may stage a
                           callback into the compiled program)
+  NoDequantizedPoolBuffer paged_q8 programs never materialize a
+                          pool-shaped buffer wider than int8 — dequant
+                          happens per attention TILE (inside the kernel
+                          loop) or per gathered table row, never as a
+                          full-precision shadow of the int8 pool, which
+                          would spend the exact HBM the quantized pool
+                          exists to save
 """
 from __future__ import annotations
 
@@ -84,7 +91,8 @@ class NoOversizedBuffer(LintRule):
     description = "no max_len-sized intermediate in paged prefill"
 
     def applies(self, t: LintTarget) -> bool:
-        return t.phase == "prefill" and t.cache_kind == "paged" \
+        return t.phase == "prefill" \
+            and t.cache_kind in ("paged", "paged_q8") \
             and t.max_len is not None
 
     def check(self, t: LintTarget) -> List[Finding]:
@@ -247,9 +255,47 @@ class NoHostTransferInObsHooks(LintRule):
         return []
 
 
+class NoDequantizedPoolBuffer(LintRule):
+    """paged_q8 programs must never hold a full-precision pool shadow.
+
+    The int8 pool's whole point is 2x (vs bf16) / 4x (vs fp32) HBM on
+    exactly the largest buffers in a serve; the tempting bug is a
+    convenience ``pool.astype(f32)`` somewhere in a forward path, which
+    silently materializes the very buffer the format deleted.  Dequant
+    is only legal at TILE granularity (inside the kernel grid loop) or
+    on table-GATHERED rows (bounded by the request's live pages, not the
+    pool) — so no aval in a paged_q8 program may have a pool shape
+    (layer-stacked OR per-layer sliced, both are in ``cache_shapes``) at
+    any dtype wider than one byte.  Itemsize — not float-ness — is the
+    test: an int32 shadow would be just as fatal."""
+
+    name = "NoDequantizedPoolBuffer"
+    description = ("no pool-shaped buffer wider than int8 in a paged_q8 "
+                   "program")
+
+    def applies(self, t: LintTarget) -> bool:
+        return t.cache_kind == "paged_q8" and bool(t.cache_shapes)
+
+    def check(self, t: LintTarget) -> List[Finding]:
+        shapes = {tuple(s) for s in t.cache_shapes}
+        hits = [a for a in walker.iter_avals(t.jaxpr)
+                if hasattr(a, "shape") and hasattr(a, "dtype")
+                and tuple(a.shape) in shapes
+                and jnp.dtype(a.dtype).itemsize > 1]
+        if hits:
+            seen = sorted({(tuple(a.shape), str(a.dtype)) for a in hits})
+            return [self.finding(
+                t, f"{len(hits)} pool-shaped buffers wider than int8 in a "
+                   f"paged_q8 program, e.g. {seen[:3]} — a dequantized "
+                   f"shadow of the quantized pool",
+                detail={"hits": [[list(s), d] for s, d in seen[:10]]})]
+        return []
+
+
 BUILTIN_RULES = (NoForbiddenMatmul(), NoOversizedBuffer(),
                  DonationEffective(), NoDtypePromotionDrift(),
-                 NoHostTransferInStepLoop(), NoHostTransferInObsHooks())
+                 NoHostTransferInStepLoop(), NoHostTransferInObsHooks(),
+                 NoDequantizedPoolBuffer())
 
 for _rule in BUILTIN_RULES:
     register_rule(_rule)

@@ -38,9 +38,11 @@ from repro.lint import walker
 from repro.lint.rules import (Finding, LintRule, LintTarget, all_rules,
                               run_rules)
 from repro.models import (DenseChunkDest, DensePrefillDest, PagedChunkDest,
-                          PagedPrefillDest, backends, forward_prefill,
+                          PagedPrefillDest, PagedQ8ChunkDest,
+                          PagedQ8PrefillDest, backends, forward_prefill,
                           forward_prefill_chunk, forward_step, init_cache,
-                          init_paged_cache, init_params, paged_table_blocks)
+                          init_paged_cache, init_paged_q8_cache, init_params,
+                          paged_table_blocks)
 
 SWEEP_DTYPE = "bfloat16"   # sub-fp32 so promotion drift is observable
 SWEEP_MAX_LEN = 160        # collides with no model/pool dim (cf. tests)
@@ -319,12 +321,101 @@ def _build_chunk_paged(cfg, params, impl) -> Dict[str, Any]:
             "notes": [note] if note else []}
 
 
+def _q8_pool_fields(cache_shape) -> Tuple[Tuple[Tuple[int, ...], ...], Any]:
+    """(shapes, dtype) of the q8 cache's INT8 pool leaves — layer-stacked
+    AND per-layer sliced, so ``NoDequantizedPoolBuffer`` catches a
+    dequantized shadow inside a scanned layer body too.  The float scale
+    rows are deliberately excluded: they are supposed to be float."""
+    pools = [leaf for leaf in jax.tree.leaves(cache_shape)
+             if hasattr(leaf, "dtype") and leaf.dtype == jnp.int8]
+    shapes = tuple(tuple(leaf.shape) for leaf in pools) \
+        + tuple(tuple(leaf.shape[1:]) for leaf in pools)
+    return shapes, (pools[0].dtype if pools else None)
+
+
+def _build_decode_paged_q8(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1,), jnp.int32)
+    cshape = jax.eval_shape(
+        lambda: init_paged_q8_cache(cfg, SWEEP_POOL_BLOCKS, SWEEP_BLOCK, 1,
+                                    SWEEP_DECODE_LEN))
+
+    def fn(p, t, c):
+        return forward_step(p, cfg, t, c, impl=impl)
+
+    jaxpr = jax.make_jaxpr(fn)(ps, toks, cshape)
+    lowered, donated, note = _try_lower(fn, (2,), (ps, toks, cshape))
+    shapes, dtype = _q8_pool_fields(cshape)
+    return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
+            "cache_shapes": shapes, "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, ps, toks, cshape),
+            "notes": [note] if note else []}
+
+
+def _build_prefill_paged_q8(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1, SWEEP_BUCKET), jnp.int32)
+    tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+    pool = jax.eval_shape(
+        lambda: init_paged_q8_cache(cfg, SWEEP_POOL_BLOCKS, SWEEP_BLOCK, 1,
+                                    SWEEP_MAX_LEN))
+    bids = jax.ShapeDtypeStruct((SWEEP_BUCKET // SWEEP_BLOCK,), jnp.int32)
+
+    def fn(p, t, n, k, v, ks, vs, b):
+        return forward_prefill(p, cfg, t,
+                               PagedQ8PrefillDest(k, v, ks, vs, b),
+                               impl=impl, true_len=n)
+
+    args = (ps, toks, tl, pool.k, pool.v, pool.k_scale, pool.v_scale, bids)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    # the q8 adapter donates pools AND scales (build_prefill donate=(3..6))
+    lowered, donated, note = _try_lower(fn, (3, 4, 5, 6), args)
+    shapes, dtype = _q8_pool_fields(pool)
+    return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
+            "max_len": SWEEP_MAX_LEN, "cache_shapes": shapes,
+            "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, *args),
+            "notes": [note] if note else []}
+
+
+def _build_chunk_paged_q8(cfg, params, impl) -> Dict[str, Any]:
+    ps = jax.eval_shape(lambda: params)
+    toks = jax.ShapeDtypeStruct((1, SWEEP_CHUNK), jnp.int32)
+    s = jax.ShapeDtypeStruct((1,), jnp.int32)
+    tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+    pool = jax.eval_shape(
+        lambda: init_paged_q8_cache(cfg, SWEEP_POOL_BLOCKS, SWEEP_BLOCK, 1,
+                                    SWEEP_MAX_LEN))
+    mb = paged_table_blocks(cfg, SWEEP_BLOCK, SWEEP_MAX_LEN)
+    trow = jax.ShapeDtypeStruct((1, mb), jnp.int32)
+    bids = jax.ShapeDtypeStruct((SWEEP_CHUNK // SWEEP_BLOCK,), jnp.int32)
+
+    def fn(p, t, st, n, k, v, ks, vs, tr, b):
+        return forward_prefill_chunk(
+            p, cfg, t, PagedQ8ChunkDest(k, v, ks, vs, tr, b),
+            start=st, true_len=n, impl=impl)
+
+    args = (ps, toks, s, tl, pool.k, pool.v, pool.k_scale, pool.v_scale,
+            trow, bids)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    # the q8 adapter donates pools AND scales (build_chunk donate=(4..7))
+    lowered, donated, note = _try_lower(fn, (4, 5, 6, 7), args)
+    shapes, dtype = _q8_pool_fields(pool)
+    return {"jaxpr": jaxpr, "lowered": lowered, "donated_flat": donated,
+            "cache_shapes": shapes, "cache_dtype": dtype,
+            "instrumented_jaxpr": _instrumented_jaxpr(fn, *args),
+            "notes": [note] if note else []}
+
+
 register_sweep_builders("dense", decode=_build_decode_dense,
                         prefill=_build_prefill_dense,
                         chunk=_build_chunk_dense)
 register_sweep_builders("paged", decode=_build_decode_paged,
                         prefill=_build_prefill_paged,
                         chunk=_build_chunk_paged)
+register_sweep_builders("paged_q8", decode=_build_decode_paged_q8,
+                        prefill=_build_prefill_paged_q8,
+                        chunk=_build_chunk_paged_q8)
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.paging import paged_ring_active
+from repro.kernels import quant
 
 NEG_INF = -1e30
 
@@ -128,6 +129,8 @@ def attention_core_merged(
     query_chunk: int = 1024,
     impl: str = "xla",
     cache_kind: str = "dense",
+    k_scale: Optional[jnp.ndarray] = None,  # (B, Sk//sg, Hkv) f32 (q8 only)
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Merged (Q/P-removed, paper Fig 1b) full-sequence attention — the
     PREFILL sibling of ``decode_attention_core_merged``.
@@ -141,19 +144,34 @@ def attention_core_merged(
     on the bitcast head view.  ``cache_kind`` selects the prefill row of
     ``kernels.ops.ATTENTION_KERNELS`` (both cache kinds currently share
     the flash kernel — paging changes the KV *write*, not the math).
+
+    ``k_scale``/``v_scale`` flip the core into q8 mode (the ``paged_q8``
+    kind's prefill fake-quant): k/v arrive as int8 at the pool's
+    quantization and the scales are per-(page, head).  The pallas route
+    hands the int8 tiles + scales to the in-kernel-dequant flash kernel;
+    the XLA route dequantizes the sequence once (O(Sk·Hkv·D), same as any
+    other kv buffer this core already holds) and falls through.
     """
     B, Sq, d = u.shape
     D = k.shape[3]
+    quantized = k_scale is not None
 
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
+        kw = {}
+        if quantized:
+            kw = dict(k_scale=k_scale, v_scale=v_scale)
         return kops.attention_kernel("prefill", cache_kind, "merged")(
             u, k, v, n_kv_heads=n_kv_heads,
             q_positions=q_positions, kv_positions=kv_positions,
             causal=causal, sliding_window=sliding_window,
-            interpret=(impl == "pallas_interpret"),
+            interpret=(impl == "pallas_interpret"), **kw,
         )
+
+    if quantized:
+        k = quant.q8_dequant_seq(k, k_scale, u.dtype)
+        v = quant.q8_dequant_seq(v, v_scale, u.dtype)
 
     out = attention_core(
         u.reshape(B, Sq, d // D, D), k, v,
@@ -369,4 +387,93 @@ def decode_attention_core_paged_merged(
     out = decode_attention_core_paged(
         u.reshape(B, d // D, D), k_pool, v_pool, block_tables=block_tables,
         q_position=q_position, sliding_window=sliding_window, impl=impl)
+    return out.reshape(B, d)
+
+
+# ---------------------------------------------------------------------------
+# quantized (paged_q8) decode cores: int8 pools + per-(page, head) scales
+# ---------------------------------------------------------------------------
+
+def _paged_gather_q8(pool: jnp.ndarray, scale: jnp.ndarray,
+                     block_tables: jnp.ndarray, out_dtype) -> jnp.ndarray:
+    """Densify + dequantize a slot's logical view of an int8 pool:
+    (NB, bs, Hkv, D) int8 + (NB, Hkv) f32 scales + (B, MB) tables ->
+    (B, MB*bs, Hkv, D) ``out_dtype``.  Unmapped blocks gather page 0
+    (masked to -1 positions by callers, as in ``_paged_gather``)."""
+    B, MB = block_tables.shape
+    bt = jnp.maximum(block_tables, 0)
+    g = pool[bt].astype(jnp.float32)  # (B, MB, bs, Hkv, D)
+    g = g * scale[bt][:, :, None, :, None]
+    return g.reshape(B, MB * pool.shape[1], *pool.shape[2:]).astype(out_dtype)
+
+
+def decode_attention_core_paged_q8(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8
+    k_scale: jnp.ndarray,  # (NB, Hkv) float32 per-(page, head) scales
+    v_scale: jnp.ndarray,  # (NB, Hkv) float32
+    *,
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    sliding_window: int = 0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """One-token attention against an int8 paged pool -> (B, Hq, D).
+
+    Pallas hands pools + scales to the in-kernel-dequant paged kernel (the
+    full-precision view never exists); XLA densifies the slot's logical
+    view dequantized page-by-page and defers to the dense core, mirroring
+    ``decode_attention_core_paged``.
+    """
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.decode_kernel("paged_q8", "generic")(
+            q, k_pool, v_pool, k_scale=k_scale, v_scale=v_scale,
+            block_tables=block_tables, q_position=q_position,
+            sliding_window=sliding_window,
+            interpret=(impl == "pallas_interpret"))
+
+    bs = k_pool.shape[1]
+    ring = paged_ring_active(sliding_window, bs, block_tables.shape[1])
+    return decode_attention_core_positions(
+        q, _paged_gather_q8(k_pool, k_scale, block_tables, q.dtype),
+        _paged_gather_q8(v_pool, v_scale, block_tables, q.dtype),
+        kv_positions=paged_kv_positions(block_tables, bs, q_position, ring),
+        q_position=q_position, sliding_window=sliding_window, impl=impl)
+
+
+def decode_attention_core_paged_q8_merged(
+    u: jnp.ndarray,  # (B, d_model) — RoPE'd residual stream (merged query)
+    k_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 K* page pool
+    v_pool: jnp.ndarray,  # (NB, bs, Hkv, D) int8 V* page pool
+    k_scale: jnp.ndarray,  # (NB, Hkv) float32 per-(page, head) scales
+    v_scale: jnp.ndarray,  # (NB, Hkv) float32
+    *,
+    block_tables: jnp.ndarray,  # (B, MB) int32 page ids, -1 unmapped
+    q_position: jnp.ndarray,  # (B,) int32
+    n_kv_heads: int,
+    sliding_window: int = 0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Merged (Q/P-removed) decode attention over an int8 paged pool —
+    the paper's serving fast path at a quarter of the page-pool HBM
+    traffic.  Contract as ``decode_attention_core_paged_merged``."""
+    B, d = u.shape
+    D = k_pool.shape[3]
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.decode_kernel("paged_q8", "merged")(
+            u, k_pool, v_pool, k_scale=k_scale, v_scale=v_scale,
+            block_tables=block_tables, q_position=q_position,
+            n_kv_heads=n_kv_heads, sliding_window=sliding_window,
+            interpret=(impl == "pallas_interpret"))
+
+    out = decode_attention_core_paged_q8(
+        u.reshape(B, d // D, D), k_pool, v_pool, k_scale, v_scale,
+        block_tables=block_tables, q_position=q_position,
+        sliding_window=sliding_window, impl=impl)
     return out.reshape(B, d)

@@ -5,8 +5,10 @@ choice*, not a fork of the model code — but a serving stack accumulates
 variants along three independent axes:
 
   cache_kind  how per-token KV is stored: "dense" (per-slot ring buffer,
-              ``DecodeCache``) or "paged" (block-pool pages behind a block
-              table, ``PagedDecodeCache``)
+              ``DecodeCache``), "paged" (block-pool pages behind a block
+              table, ``PagedDecodeCache``), or "paged_q8" (the same pages
+              quantized to int8 with per-(page, kv-head) scales,
+              ``PagedQ8DecodeCache``)
   style       which projections the step reads: "generic" (projects q/k/v
               as the config dictates, covering unmerged models AND the
               kp/vp merged variants whose eliminated projection is an
@@ -70,7 +72,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Tuple
 
-CACHE_KINDS = ("dense", "paged")
+CACHE_KINDS = ("dense", "paged", "paged_q8")
 STYLES = ("generic", "merged")
 IMPLS = ("xla", "pallas", "pallas_interpret")
 

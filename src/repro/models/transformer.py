@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import paging
+from repro.kernels import quant
 from repro.models import attention as attn_mod
 from repro.models import backends
 from repro.models import ffn as ffn_mod
@@ -243,11 +244,21 @@ def _project_qkv(lp, cfg: ModelConfig, u, kv_src, merged: bool):
 
 def _self_attention_seq(lp, cfg: ModelConfig, u, positions, merged: bool,
                         impl: str, qkv_sharding=None,
-                        merged_core: bool = False, cache_kind: str = "dense"):
+                        merged_core: bool = False, cache_kind: str = "dense",
+                        q8_block: int = 0, q8_true_len=None):
     """``merged_core`` selects the stream-as-query attention core (merged
     qp layouts only: q below is an identity view of u, so handing it to
     ``attention_core_merged`` keeps every tensor in its native layout —
-    the prefill twin of the merged decode fast path)."""
+    the prefill twin of the merged decode fast path).
+
+    ``q8_block`` > 0 (paged_q8 prefill) quantizes K/V at pool granularity
+    — int8 per ``q8_block``-token × kv-head block, positions >=
+    ``q8_true_len`` masked to zero first — and attends over the QUANTIZED
+    view (in-kernel dequant on the merged route, an XLA dequant
+    otherwise), so prefill logits see exactly the pool bytes that
+    ``_finish_paged_q8`` later stores.  The RAW float K/V is still what's
+    collected: the finish path re-quantizes it with the same function and
+    mask, landing bit-identical ints + scales in the pool."""
     q, k, v = _project_qkv(lp, cfg, u, u, merged)
     if qkv_sharding is not None:
         # merged styles lose the TP sharding anchor for q (no wq matmul to
@@ -261,6 +272,27 @@ def _self_attention_seq(lp, cfg: ModelConfig, u, positions, merged: bool,
     k = apply_rope(k, positions, style=cfg.rope_style, theta=cfg.rope_theta,
                    fraction=cfg.rope_fraction)
     B, S = u.shape[0], u.shape[1]
+    if q8_block:
+        valid = None if q8_true_len is None else \
+            (positions < q8_true_len[:, None])
+        kq, ksc = quant.q8_quantize_seq(k, q8_block, valid)
+        vq, vsc = quant.q8_quantize_seq(v, q8_block, valid)
+        if merged_core:
+            out = attn_mod.attention_core_merged(
+                q.reshape(B, S, cfg.attn_dim), kq, vq,
+                q_positions=positions, kv_positions=positions,
+                n_kv_heads=cfg.n_kv_heads, causal=cfg.causal,
+                sliding_window=cfg.sliding_window, impl=impl,
+                query_chunk=cfg.query_chunk or S, cache_kind=cache_kind,
+                k_scale=ksc, v_scale=vsc)
+            return out, (k, v)
+        kd = quant.q8_dequant_seq(kq, ksc, k.dtype)
+        vd = quant.q8_dequant_seq(vq, vsc, v.dtype)
+        out = attn_mod.attention_core(
+            q, kd, vd, q_positions=positions, kv_positions=positions,
+            causal=cfg.causal, sliding_window=cfg.sliding_window, impl=impl,
+            query_chunk=cfg.query_chunk or q.shape[1])
+        return out.reshape(B, S, cfg.attn_dim), (k, v)
     if merged_core:
         out = attn_mod.attention_core_merged(
             q.reshape(B, S, cfg.attn_dim), k, v,
@@ -340,7 +372,9 @@ def apply_block_seq(p, cfg: ModelConfig, kind: str, u, ctx) -> Tuple[jnp.ndarray
                 p["attn"], cfg, x, positions, merged, impl,
                 qkv_sharding=ctx.get("qkv_sharding"),
                 merged_core=ctx.get("merged_core", False),
-                cache_kind=ctx.get("cache_kind", "dense"))
+                cache_kind=ctx.get("cache_kind", "dense"),
+                q8_block=ctx.get("q8_block", 0),
+                q8_true_len=ctx.get("q8_true_len"))
         kv = kv_
         return cat
 
@@ -472,12 +506,16 @@ def forward_seq(params, cfg: ModelConfig, inputs, *, positions=None,
                 vision=None, impl: str = "xla", remat: bool = False,
                 collect_kv: bool = False, unroll: bool = False,
                 stream_sharding=None, qkv_sharding=None,
-                merged_core: bool = False, cache_kind: str = "dense"):
+                merged_core: bool = False, cache_kind: str = "dense",
+                q8_block: int = 0, q8_true_len=None):
     """Full-sequence forward. inputs: int tokens (B,S) or frames (B,S,d).
 
     ``merged_core`` routes self-attention through the stream-as-query
     merged core (prefill backends set it for merged qp layouts);
     ``cache_kind`` tags which prefill kernel-table row the core fetches.
+    ``q8_block``/``q8_true_len`` (paged_q8 prefill) make every self-
+    attention layer attend over the pool-granularity QUANTIZED K/V view
+    (``_self_attention_seq``) while collecting the raw floats.
     """
     B, S = inputs.shape[0], inputs.shape[1]
     if positions is None:
@@ -486,7 +524,8 @@ def forward_seq(params, cfg: ModelConfig, inputs, *, positions=None,
     ctx = {"positions": positions, "vision": None if vision is None else
            vision.astype(h.dtype), "impl": impl,
            "stream_sharding": stream_sharding, "qkv_sharding": qkv_sharding,
-           "merged_core": merged_core, "cache_kind": cache_kind}
+           "merged_core": merged_core, "cache_kind": cache_kind,
+           "q8_block": q8_block, "q8_true_len": q8_true_len}
     h, aux, kvs = _scan_blocks_seq(params, cfg, h, ctx, collect_kv, remat,
                                    unroll=unroll)
     if "final_norm" in params:
@@ -637,6 +676,22 @@ class PagedPrefillDest(NamedTuple):
     block_ids: Any
 
 
+class PagedQ8PrefillDest(NamedTuple):
+    """Destination of a direct-to-page QUANTIZED paged prefill: the
+    ``PagedPrefillDest`` contract over int8 pools — ``k_pool``/``v_pool``
+    are (L, NB, bs, Hkv, Dh) int8 pages, ``k_scale``/``v_scale`` their
+    (L, NB, Hkv) float32 per-(page, kv-head) scales (``kernels.quant``),
+    and ``block_ids`` is the same (ceil(S/bs),) physical mapping with -1
+    dropping the write.  The prefill program quantizes the collected
+    prompt KV at pool granularity and scatters ints AND scales into the
+    mapped pages — a full-precision pool never exists."""
+    k_pool: Any
+    v_pool: Any
+    k_scale: Any
+    v_scale: Any
+    block_ids: Any
+
+
 def prefill_style_key(cfg: ModelConfig) -> str:
     """Projection-style axis of the PREFILL backend registry key.
 
@@ -689,6 +744,45 @@ def _finish_paged(cfg: ModelConfig, logits, kvs, dest: PagedPrefillDest, ctx,
     k_pool = k_pool.at[:, safe].set(kb.astype(k_pool.dtype), mode="drop")
     v_pool = v_pool.at[:, safe].set(vb.astype(v_pool.dtype), mode="drop")
     return last_logits, (k_pool, v_pool)
+
+
+def _finish_paged_q8(cfg: ModelConfig, logits, kvs, dest: PagedQ8PrefillDest,
+                     ctx, B: int, S: int):
+    """Quantize the collected prompt KV at pool granularity and scatter
+    ints + scales direct-to-page.  Positions >= true_len are masked to
+    zero BEFORE the per-block absmax — the same mask and the same
+    ``quant.q8_quantize_pages`` the prefill attention fake-quanted with,
+    so the pool bytes are bit-identical to what the prompt's own logits
+    already attended over (and padding garbage never inflates a real
+    block's scale)."""
+    k_pool, v_pool, k_scale, v_scale, block_ids = dest
+    last_logits, _ = _last_logits_and_length(logits, ctx.get("true_len"), B, S)
+    ks, vs = kvs  # (L, 1, S, Hkv, Dh)
+    L, bs, NB = k_pool.shape[0], k_pool.shape[2], k_pool.shape[1]
+    nbk = block_ids.shape[0]
+    pad = nbk * bs - S
+    if pad:
+        ks = jnp.pad(ks, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+        vs = jnp.pad(vs, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+    true_len = ctx.get("true_len")
+    limit = jnp.int32(S) if true_len is None else \
+        jnp.asarray(true_len, jnp.int32).reshape(B)[0]
+    pos = jnp.arange(nbk * bs, dtype=jnp.int32)
+    valid = (pos < limit)[None, None, :, None, None]
+    ks = jnp.where(valid, ks.astype(jnp.float32), 0.0)
+    vs = jnp.where(valid, vs.astype(jnp.float32), 0.0)
+    kb = ks[:, 0].reshape(L, nbk, bs, *ks.shape[3:])
+    vb = vs[:, 0].reshape(L, nbk, bs, *vs.shape[3:])
+    kq, ksc = quant.q8_quantize_pages(kb)  # ints (L,nbk,bs,Hkv,Dh), (L,nbk,Hkv)
+    vq, vsc = quant.q8_quantize_pages(vb)
+    # same drop-scatter as _finish_paged, extended to the scale rows:
+    # a page and its scale move as one unit
+    safe = jnp.where(block_ids >= 0, block_ids, NB).astype(jnp.int32)
+    k_pool = k_pool.at[:, safe].set(kq, mode="drop")
+    v_pool = v_pool.at[:, safe].set(vq, mode="drop")
+    k_scale = k_scale.at[:, safe].set(ksc, mode="drop")
+    v_scale = v_scale.at[:, safe].set(vsc, mode="drop")
+    return last_logits, (k_pool, v_pool, k_scale, v_scale)
 
 
 def _finish_dense(params, cfg: ModelConfig, inputs, logits, kvs,
@@ -794,12 +888,54 @@ def _prefill_paged_merged(params, cfg: ModelConfig, inputs, dest, ctx):
     return _finish_paged(cfg, logits, kvs, dest, ctx, B, S)
 
 
+def _prefill_seq_q8(params, cfg: ModelConfig, inputs,
+                    dest: PagedQ8PrefillDest, ctx, *, merged_core: bool):
+    """Quantized-pool variant of ``_prefill_seq``: thread the pool's
+    block size + the prompt's true length into the stack so every layer
+    fake-quants its K/V at pool granularity (``_self_attention_seq``)."""
+    true_len = ctx.get("true_len")
+    q8_true_len = None if true_len is None else \
+        jnp.asarray(true_len, jnp.int32).reshape(inputs.shape[0])
+    return forward_seq(params, cfg, inputs, vision=ctx.get("vision"),
+                       impl=ctx.get("impl", "xla"), collect_kv=True,
+                       unroll=ctx.get("unroll", False),
+                       qkv_sharding=ctx.get("qkv_sharding"),
+                       merged_core=merged_core, cache_kind="paged_q8",
+                       q8_block=int(dest.k_pool.shape[2]),
+                       q8_true_len=q8_true_len)
+
+
+def _prefill_paged_q8_generic(params, cfg: ModelConfig, inputs, dest, ctx):
+    """Registered prefill backend ("paged_q8", "generic"): generic
+    projection path attending over the quantized K/V view, prompt KV
+    quantized and written direct-to-page as int8 + scales."""
+    B, S = inputs.shape[0], inputs.shape[1]
+    logits, _, kvs = _prefill_seq_q8(params, cfg, inputs, dest, ctx,
+                                     merged_core=False)
+    return _finish_paged_q8(cfg, logits, kvs, dest, ctx, B, S)
+
+
+def _prefill_paged_q8_merged(params, cfg: ModelConfig, inputs, dest, ctx):
+    """Registered prefill backend ("paged_q8", "merged"): stream-as-query
+    attention with IN-KERNEL dequant (the q8 merged flash kernel) AND
+    int8 direct-to-page writes — prefill attention streams one byte per
+    pooled element."""
+    B, S = inputs.shape[0], inputs.shape[1]
+    logits, _, kvs = _prefill_seq_q8(params, cfg, inputs, dest, ctx,
+                                     merged_core=True)
+    return _finish_paged_q8(cfg, logits, kvs, dest, ctx, B, S)
+
+
 backends.register_prefill_backend("dense", "generic", _prefill_dense_generic)
 backends.register_prefill_backend("dense", "merged", _prefill_dense_merged,
                                   fast_path=True)
 backends.register_prefill_backend("paged", "generic", _prefill_paged_generic)
 backends.register_prefill_backend("paged", "merged", _prefill_paged_merged,
                                   fast_path=True)
+backends.register_prefill_backend("paged_q8", "generic",
+                                  _prefill_paged_q8_generic)
+backends.register_prefill_backend("paged_q8", "merged",
+                                  _prefill_paged_q8_merged, fast_path=True)
 
 
 def forward_prefill(params, cfg: ModelConfig, inputs, dest=None, *,
@@ -858,8 +994,9 @@ def forward_prefill(params, cfg: ModelConfig, inputs, dest=None, *,
             "dest — drop the legacy kwargs")
 
     B, S = int(inputs.shape[0]), int(inputs.shape[1])
-    if isinstance(dest, PagedPrefillDest):
-        kind = "paged"
+    if isinstance(dest, (PagedPrefillDest, PagedQ8PrefillDest)):
+        quantized = isinstance(dest, PagedQ8PrefillDest)
+        kind = "paged_q8" if quantized else "paged"
         plan = layer_plan(cfg)
         if plan["kind"] != "attn":
             raise ValueError(
@@ -872,8 +1009,15 @@ def forward_prefill(params, cfg: ModelConfig, inputs, dest=None, *,
         nbk, bs = int(dest.block_ids.shape[0]), int(dest.k_pool.shape[2])
         if nbk * bs < S:
             raise ValueError(
-                f"PagedPrefillDest.block_ids maps {nbk} blocks of {bs} "
-                f"tokens — too few for a {S}-token prompt")
+                f"{type(dest).__name__}.block_ids maps {nbk} blocks of "
+                f"{bs} tokens — too few for a {S}-token prompt")
+        if quantized and S % bs:
+            # the whole-prompt fake-quant reshapes (B, S) into S/bs pool
+            # blocks, so the bucket length must tile exactly (every
+            # serving bucket is a power of two >= the block size)
+            raise ValueError(
+                f"paged_q8 prefill needs the (padded) prompt length to be "
+                f"a multiple of the page size: {S} % {bs} != 0")
     elif isinstance(dest, DensePrefillDest):
         kind = "dense"
         if dest.cache_len <= 0:
@@ -883,8 +1027,8 @@ def forward_prefill(params, cfg: ModelConfig, inputs, dest=None, *,
     else:
         raise ValueError(
             f"unknown prefill destination {type(dest).__name__!r}; expected "
-            "DensePrefillDest or PagedPrefillDest (or register a "
-            "PrefillBackend for a new cache kind)")
+            "DensePrefillDest, PagedPrefillDest, or PagedQ8PrefillDest (or "
+            "register a PrefillBackend for a new cache kind)")
 
     backend = backends.get_prefill_backend(kind, prefill_style_key(cfg), impl)
     ctx = {"vision": vision, "impl": impl, "unroll": unroll,
@@ -1129,13 +1273,14 @@ def forward_step(params, cfg: ModelConfig, token, cache, *,
     matmul).  Unknown (cache_kind, style, impl) combinations raise
     KeyError from the registry before any compute.
     """
-    paged = isinstance(cache, PagedDecodeCache)
+    paged_q8 = isinstance(cache, PagedQ8DecodeCache)
+    paged = paged_q8 or isinstance(cache, PagedDecodeCache)
     plan = layer_plan(cfg)
     if paged:
         assert plan["kind"] == "attn", (
             "paged decode supports attention-only stacks; got " + plan["kind"])
-    backend = backends.get_backend("paged" if paged else "dense",
-                                   serving_style_key(cfg), impl)
+    kind = "paged_q8" if paged_q8 else ("paged" if paged else "dense")
+    backend = backends.get_backend(kind, serving_style_key(cfg), impl)
     # embed through the same front-end as the seq path: skipless styles
     # scale the embedding output, and merged trees fold Q_0 into the table
     # plus optional input_proj / embed_bias — skipping any of these makes
@@ -1154,13 +1299,22 @@ def forward_step(params, cfg: ModelConfig, token, cache, *,
             out, nc = apply_block_step(lp, cfg, "attn", h, lc, ctx)
             return out, nc
 
-        h, ncs = jax.lax.scan(f, h, (params["layers"],
-                                     {"k": cache.k, "v": cache.v}),
+        # q8 stores scan as (pool, scale) pairs — apply_block_step passes
+        # them through to the backend step opaquely
+        stores = {"k": (cache.k, cache.k_scale),
+                  "v": (cache.v, cache.v_scale)} if paged_q8 else \
+            {"k": cache.k, "v": cache.v}
+        h, ncs = jax.lax.scan(f, h, (params["layers"], stores),
                               unroll=True if unroll else 1)
         if "final_norm" in params:
             h = apply_rmsnorm(params["final_norm"], h)
         table = params["embed"] if cfg.tie_embeddings else params["unembed"]
         logits = apply_unembedding(table, h)[:, 0, :]
+        if paged_q8:
+            return logits, cache._replace(
+                k=ncs["k"][0], k_scale=ncs["k"][1],
+                v=ncs["v"][0], v_scale=ncs["v"][1],
+                length=cache.length + 1)
         return logits, cache._replace(k=ncs["k"], v=ncs["v"],
                                       length=cache.length + 1)
 
@@ -1306,6 +1460,46 @@ def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
         length=jnp.zeros(*spec["length"]))
 
 
+class PagedQ8DecodeCache(NamedTuple):
+    """Device view of the QUANTIZED paged KV cache: the
+    ``PagedDecodeCache`` contract with int8 pools plus per-(page,
+    kv-head) float32 scale arrays (``kernels.quant`` layout).  Scales are
+    part of the page: CoW copies them with the bytes
+    (``serving.paged_kv_cache.copy_block_q8``) and recycled pages'
+    stale scales are garbage hidden exactly like stale page bytes —
+    decode's quantize-on-write resets a page's scale when it enters the
+    page at offset 0."""
+    k: jnp.ndarray  # (L, n_blocks, block_size, Hkv, Dh) int8 pages
+    v: jnp.ndarray
+    k_scale: jnp.ndarray  # (L, n_blocks, Hkv) float32
+    v_scale: jnp.ndarray
+    block_tables: jnp.ndarray  # (B, MB) int32 page ids, -1 unmapped
+    length: jnp.ndarray  # (B,) int32 — tokens so far (= next position)
+
+
+def paged_q8_cache_spec(cfg: ModelConfig, n_blocks: int, block_size: int,
+                        n_slots: int, max_len: int):
+    """Shapes for an empty quantized paged cache (init and jit specs)."""
+    spec = paged_cache_spec(cfg, n_blocks, block_size, n_slots, max_len)
+    plan = layer_plan(cfg)
+    pool = (spec["k"][0], jnp.int8)
+    scale = ((plan["n"], n_blocks, cfg.n_kv_heads), jnp.float32)
+    return {"k": pool, "v": pool, "k_scale": scale, "v_scale": scale,
+            "block_tables": spec["block_tables"],
+            "length": spec["length"]}
+
+
+def init_paged_q8_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                        n_slots: int, max_len: int) -> PagedQ8DecodeCache:
+    spec = paged_q8_cache_spec(cfg, n_blocks, block_size, n_slots, max_len)
+    return PagedQ8DecodeCache(
+        k=jnp.zeros(*spec["k"]), v=jnp.zeros(*spec["v"]),
+        k_scale=jnp.zeros(*spec["k_scale"]),
+        v_scale=jnp.zeros(*spec["v_scale"]),
+        block_tables=jnp.full(spec["block_tables"][0], -1, jnp.int32),
+        length=jnp.zeros(*spec["length"]))
+
+
 def _rope_and_insert_paged(cfg: ModelConfig, q, k_new, v_new, k_pool, v_pool,
                            block_tables, length):
     """RoPE the step's q/k at position ``length`` and scatter the new k/v
@@ -1372,7 +1566,83 @@ def _attn_step_paged_merged(lp, cfg: ModelConfig, u1, k_pool, v_pool, ctx):
     return out.reshape(B, 1, cfg.attn_dim), k_pool, v_pool
 
 
-# the four serving attention routes, one per (cache layout × projection
+def _rope_and_insert_paged_q8(cfg: ModelConfig, q, k_new, v_new,
+                              k_pool, v_pool, k_scale, v_scale,
+                              block_tables, length):
+    """``_rope_and_insert_paged`` over int8 pools: RoPE, then QUANTIZE the
+    new token into each slot's mapped page under the page's monotone
+    scale merge (``kernels.quant.q8_append_token`` — the scale row is
+    written in the same drop-scatter as the page bytes).  Runs in plain
+    XLA inside every impl's program, so pool bits are impl-independent."""
+    pos = length[:, None]  # (B,1)
+    q = apply_rope(q, pos, style=cfg.rope_style, theta=cfg.rope_theta,
+                   fraction=cfg.rope_fraction)
+    k_new = apply_rope(k_new, pos, style=cfg.rope_style, theta=cfg.rope_theta,
+                       fraction=cfg.rope_fraction)
+    NB, bs = k_pool.shape[0], k_pool.shape[1]
+    MB = block_tables.shape[1]
+    ring = paging.paged_ring_active(cfg.sliding_window, bs, MB)
+    lb = (length // bs).astype(jnp.int32)
+    lb = (lb % ring) if ring else jnp.minimum(lb, MB - 1)
+    off = (length % bs).astype(jnp.int32)
+    blk = jnp.take_along_axis(block_tables, lb[:, None], axis=1)[:, 0]
+    safe = jnp.where(blk >= 0, blk, NB)  # NB is out of range -> dropped
+    k_pool, k_scale = quant.q8_append_token(k_pool, k_scale, k_new[:, 0],
+                                            safe, off)
+    v_pool, v_scale = quant.q8_append_token(v_pool, v_scale, v_new[:, 0],
+                                            safe, off)
+    return q, k_pool, v_pool, k_scale, v_scale
+
+
+def _attn_step_paged_q8(lp, cfg: ModelConfig, u1, k_store, v_store, ctx):
+    """Registered backend ("paged_q8", "generic"): decode step vs the
+    quantized pool.  The scan-carried stores are (pool, scale) pytree
+    pairs — ``apply_block_step`` treats them opaquely, so the block wiring
+    is untouched.  Returns (cat, (k_pool, k_scale), (v_pool, v_scale))."""
+    B, length = u1.shape[0], ctx["length"]
+    block_tables = ctx["block_tables"]
+    k_pool, k_scale = k_store
+    v_pool, v_scale = v_store
+    merged = _is_merged(cfg.block_style)
+    q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, merged)
+    q, k_pool, v_pool, k_scale, v_scale = _rope_and_insert_paged_q8(
+        cfg, q, k_new, v_new, k_pool, v_pool, k_scale, v_scale,
+        block_tables, length)
+    out = attn_mod.decode_attention_core_paged_q8(
+        q[:, 0], k_pool, v_pool, k_scale, v_scale,
+        block_tables=block_tables, q_position=length,
+        sliding_window=cfg.sliding_window, impl=ctx["impl"])
+    return out.reshape(B, 1, cfg.attn_dim), (k_pool, k_scale), \
+        (v_pool, v_scale)
+
+
+def _attn_step_paged_q8_merged(lp, cfg: ModelConfig, u1, k_store, v_store,
+                               ctx):
+    """Registered backend ("paged_q8", "merged"): the Q/P-removed fast
+    path vs the quantized pool — per token the attention-side HBM traffic
+    is K*/V* weights plus ONE BYTE per mapped pooled element (the pallas
+    kernel dequantizes per tile in VMEM; no full-precision pool view is
+    ever materialized)."""
+    B, length = u1.shape[0], ctx["length"]
+    block_tables = ctx["block_tables"]
+    k_pool, k_scale = k_store
+    v_pool, v_scale = v_store
+    # variant "qp": _project_qkv returns the stream itself as q (identity)
+    q, k_new, v_new = _project_qkv(lp, cfg, u1, u1, True)
+    q, k_new, v_new = _qkv_reanchor(ctx, q, k_new, v_new)
+    q, k_pool, v_pool, k_scale, v_scale = _rope_and_insert_paged_q8(
+        cfg, q, k_new, v_new, k_pool, v_pool, k_scale, v_scale,
+        block_tables, length)
+    out = attn_mod.decode_attention_core_paged_q8_merged(
+        q.reshape(B, cfg.attn_dim), k_pool, v_pool, k_scale, v_scale,
+        block_tables=block_tables, q_position=length,
+        n_kv_heads=cfg.n_kv_heads, sliding_window=cfg.sliding_window,
+        impl=ctx["impl"])
+    return out.reshape(B, 1, cfg.attn_dim), (k_pool, k_scale), \
+        (v_pool, v_scale)
+
+
+# the serving attention routes, one per (cache layout × projection
 # style); each registration covers xla/pallas/pallas_interpret (the steps
 # read ``impl`` from ctx and the cores dispatch on it)
 backends.register_backend("dense", "generic", _attn_step_dense)
@@ -1380,6 +1650,9 @@ backends.register_backend("dense", "merged", _attn_step_dense_merged,
                           fast_path=True)
 backends.register_backend("paged", "generic", _attn_step_paged)
 backends.register_backend("paged", "merged", _attn_step_paged_merged,
+                          fast_path=True)
+backends.register_backend("paged_q8", "generic", _attn_step_paged_q8)
+backends.register_backend("paged_q8", "merged", _attn_step_paged_q8_merged,
                           fast_path=True)
 
 
@@ -1445,6 +1718,19 @@ class PagedChunkDest(NamedTuple):
     contract, per chunk)."""
     k_pool: Any
     v_pool: Any
+    block_table: Any
+    block_ids: Any
+
+
+class PagedQ8ChunkDest(NamedTuple):
+    """Destination of one QUANTIZED paged prefill chunk: the
+    ``PagedChunkDest`` contract over int8 pools + per-(page, kv-head)
+    float32 scales — the chunk quantizes its K/V at pool granularity and
+    writes ints AND scale rows in the same drop-scatter."""
+    k_pool: Any
+    v_pool: Any
+    k_scale: Any
+    v_scale: Any
     block_table: Any
     block_ids: Any
 
@@ -1615,6 +1901,68 @@ def _chunk_paged(params, cfg: ModelConfig, chunk, dest, ctx, *,
     return last, (ncs["k"], ncs["v"])
 
 
+def _chunk_paged_q8(params, cfg: ModelConfig, chunk, dest, ctx, *,
+                    merged_core: bool):
+    """Shared body of both paged_q8 chunk routes: ``_chunk_paged`` over
+    the quantized pool.  The chunk's K/V is quantized at pool granularity
+    (positions >= true_len masked to zero first — the same
+    ``quant.q8_quantize_seq`` call the whole-prompt q8 prefill fake-quants
+    with, so a chunked prompt lands bit-identical pool bytes) and the
+    attention view is the DEQUANTIZED page gather, matching what decode's
+    q8 cores reconstruct.  Scan-carried stores are (pool, scale) pairs,
+    exactly as in the q8 decode step."""
+    k_pool, v_pool, k_scale, v_scale, table, bids = dest
+    start, true_len = ctx["start"], ctx["true_len"]
+    impl = ctx.get("impl", "xla")
+    C = chunk.shape[1]
+    NB, bs = k_pool.shape[1], k_pool.shape[2]
+    MB = table.shape[1]
+    nbk = C // bs
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    merged = _is_merged(cfg.block_style)
+    pos = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (1,C)
+    ring = paging.paged_ring_active(cfg.sliding_window, bs, MB)
+    kvpos = attn_mod.paged_kv_positions(table, bs, start + (C - 1), ring)
+    kv_eff = jnp.where(kvpos >= 0, kvpos, _CHUNK_POS_SENTINEL)
+    safe = jnp.where(bids >= 0, bids, NB).astype(jnp.int32)  # (nbk,)
+    valid = pos < true_len[:, None]  # (1,C)
+
+    def chunk_attn(lp, cfg_, x, kst, vst, actx):
+        kp, ks = kst
+        vp, vs = vst
+        q, k_new, v_new = _project_qkv(lp, cfg_, x, x, merged)
+        q, k_new, v_new = _qkv_reanchor(actx, q, k_new, v_new)
+        q, k_new = _chunk_rope(cfg_, q, k_new, pos)
+        kq, ksc = quant.q8_quantize_seq(k_new, bs, valid)
+        vq, vsc = quant.q8_quantize_seq(v_new, bs, valid)
+        kp = kp.at[safe].set(kq[0].reshape(nbk, bs, Hkv, Dh), mode="drop")
+        vp = vp.at[safe].set(vq[0].reshape(nbk, bs, Hkv, Dh), mode="drop")
+        ks = ks.at[safe].set(ksc[0], mode="drop")
+        vs = vs.at[safe].set(vsc[0], mode="drop")
+        gk = attn_mod._paged_gather_q8(kp, ks, table, x.dtype)
+        gv = attn_mod._paged_gather_q8(vp, vs, table, x.dtype)
+        if merged_core:
+            out = attn_mod.attention_core_merged(
+                q.reshape(1, C, cfg_.attn_dim), gk, gv,
+                q_positions=pos, kv_positions=kv_eff,
+                n_kv_heads=cfg_.n_kv_heads, causal=cfg_.causal,
+                sliding_window=cfg_.sliding_window, query_chunk=C,
+                impl="xla", cache_kind="paged_q8")
+            return out, (kp, ks), (vp, vs)
+        out = attn_mod.attention_core(
+            q, gk, gv, q_positions=pos, kv_positions=kv_eff,
+            causal=cfg_.causal, sliding_window=cfg_.sliding_window,
+            query_chunk=C, impl="xla")
+        return out.reshape(1, C, cfg_.attn_dim), (kp, ks), (vp, vs)
+
+    h = embed_inputs(params, cfg, chunk)
+    logits, ncs = _chunk_block_scan(params, cfg, h, chunk_attn,
+                                    (k_pool, k_scale), (v_pool, v_scale),
+                                    impl, ctx.get("qkv_sharding"))
+    last = _chunk_last_logits(logits, start, true_len, C)
+    return last, (ncs["k"][0], ncs["v"][0], ncs["k"][1], ncs["v"][1])
+
+
 # --- the four registered chunk routes ----------------------------------------
 
 def _chunk_dense_generic(params, cfg: ModelConfig, chunk, dest, ctx):
@@ -1639,11 +1987,26 @@ def _chunk_paged_merged(params, cfg: ModelConfig, chunk, dest, ctx):
     return _chunk_paged(params, cfg, chunk, dest, ctx, merged_core=True)
 
 
+def _chunk_paged_q8_generic(params, cfg: ModelConfig, chunk, dest, ctx):
+    """Registered chunk backend ("paged_q8", "generic")."""
+    return _chunk_paged_q8(params, cfg, chunk, dest, ctx, merged_core=False)
+
+
+def _chunk_paged_q8_merged(params, cfg: ModelConfig, chunk, dest, ctx):
+    """Registered chunk backend ("paged_q8", "merged"): stream-as-query
+    attention AND int8 direct-to-page chunk writes."""
+    return _chunk_paged_q8(params, cfg, chunk, dest, ctx, merged_core=True)
+
+
 backends.register_chunk_backend("dense", "generic", _chunk_dense_generic)
 backends.register_chunk_backend("dense", "merged", _chunk_dense_merged,
                                 fast_path=True)
 backends.register_chunk_backend("paged", "generic", _chunk_paged_generic)
 backends.register_chunk_backend("paged", "merged", _chunk_paged_merged,
+                                fast_path=True)
+backends.register_chunk_backend("paged_q8", "generic",
+                                _chunk_paged_q8_generic)
+backends.register_chunk_backend("paged_q8", "merged", _chunk_paged_q8_merged,
                                 fast_path=True)
 
 
@@ -1687,8 +2050,8 @@ def forward_prefill_chunk(params, cfg: ModelConfig, chunk, dest, *,
         raise ValueError(
             f"chunked prefill supports attention-only stacks, not "
             f"{plan['kind']!r} (family {cfg.family!r})")
-    if isinstance(dest, PagedChunkDest):
-        kind = "paged"
+    if isinstance(dest, (PagedChunkDest, PagedQ8ChunkDest)):
+        kind = "paged_q8" if isinstance(dest, PagedQ8ChunkDest) else "paged"
         bs = int(dest.k_pool.shape[2])
         MB = int(dest.block_table.shape[1])
         if C % bs:
@@ -1700,9 +2063,9 @@ def forward_prefill_chunk(params, cfg: ModelConfig, chunk, dest, *,
                 f"block: chunk width {C} != block size {bs}")
         if int(dest.block_ids.shape[0]) != C // bs:
             raise ValueError(
-                f"PagedChunkDest.block_ids maps {int(dest.block_ids.shape[0])} "
-                f"blocks; a {C}-token chunk over {bs}-token pages needs "
-                f"{C // bs}")
+                f"{type(dest).__name__}.block_ids maps "
+                f"{int(dest.block_ids.shape[0])} blocks; a {C}-token chunk "
+                f"over {bs}-token pages needs {C // bs}")
     elif isinstance(dest, DenseChunkDest):
         kind = "dense"
         # a BINDING window (window < max_len) makes the dense cache a
@@ -1723,8 +2086,8 @@ def forward_prefill_chunk(params, cfg: ModelConfig, chunk, dest, *,
     else:
         raise ValueError(
             f"unknown chunk destination {type(dest).__name__!r}; expected "
-            "DenseChunkDest or PagedChunkDest (or register a ChunkBackend "
-            "for a new cache kind)")
+            "DenseChunkDest, PagedChunkDest, or PagedQ8ChunkDest (or "
+            "register a ChunkBackend for a new cache kind)")
 
     backend = backends.get_chunk_backend(kind, prefill_style_key(cfg), impl)
     ctx = {"start": jnp.asarray(start, jnp.int32).reshape(1),

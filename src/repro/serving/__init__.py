@@ -63,7 +63,8 @@ CHUNKS (a third registered program per cache kind,
 """
 from repro.serving.engine import Engine, Request, RequestResult, ServeConfig
 from repro.serving.adapters import (DenseCacheAdapter, KVCacheAdapter,
-                                    PagedCacheAdapter, make_adapter)
+                                    PagedCacheAdapter, PagedQ8CacheAdapter,
+                                    make_adapter)
 from repro.serving import kv_cache
 from repro.serving import paged_kv_cache
 from repro.serving.sched import SchedConfig, Schedule, ScheduledEngine
@@ -71,6 +72,6 @@ from repro.serving.sched import SchedConfig, Schedule, ScheduledEngine
 __all__ = [
     "Engine", "Request", "RequestResult", "ServeConfig",
     "KVCacheAdapter", "DenseCacheAdapter", "PagedCacheAdapter",
-    "make_adapter", "kv_cache", "paged_kv_cache",
+    "PagedQ8CacheAdapter", "make_adapter", "kv_cache", "paged_kv_cache",
     "SchedConfig", "Schedule", "ScheduledEngine",
 ]

@@ -51,7 +51,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.distribution import sharding as shd
 from repro.models import (DenseChunkDest, DensePrefillDest, PagedChunkDest,
-                          PagedPrefillDest, forward_prefill,
+                          PagedPrefillDest, PagedQ8ChunkDest,
+                          PagedQ8PrefillDest, forward_prefill,
                           forward_prefill_chunk, init_cache)
 from repro.serving import hostbufs
 from repro.serving import kv_cache as kvc
@@ -63,6 +64,12 @@ class KVCacheAdapter:
     ``kind`` to the cache_kind axis of the backend-registry key."""
 
     kind: str = "?"
+
+    #: prompts handed to prefill must be padded to a multiple of this
+    #: (the engine's ``_bucket_pad`` rounds its power-of-two bucket up).
+    #: paged_q8 overrides it with the page size: pages are quantized
+    #: whole on write, so a prefill may not end mid-page.
+    bucket_align: int = 1
 
     # -- lifecycle ------------------------------------------------------
     def init(self, cfg: ModelConfig, sc) -> None:
@@ -509,6 +516,147 @@ class PagedCacheAdapter(KVCacheAdapter):
         }
 
 
+class PagedQ8CacheAdapter(PagedCacheAdapter):
+    """Quantized block-pool cache: the paged layout with int8 pages and
+    per-(page, kv-head) float32 scales (``pkv.PagedQ8CacheManager``).
+
+    Everything host-side — allocator, block tables, CoW, ring recycle,
+    prefix registry, shields — is inherited UNCHANGED: a page id means the
+    same thing, its scale rows just travel with it (``copy_block_q8``
+    copies all four arrays).  What changes is the device programs: prefill
+    and chunk ship the scale arrays next to the pools (donated together)
+    and the destinations are the q8 variants, which quantize-on-write; the
+    decode step reads ``PagedQ8DecodeCache`` and the registered
+    ``paged_q8`` backends dequantize in-kernel.  HBM for the pools is
+    ~quarter of an fp32 pool (int8 pages + one f32 scale pair per
+    (page, head)), which is where the equal-HBM stream-count win in
+    ``benchmarks.bench_paged_serving`` comes from.
+    """
+
+    kind = "paged_q8"
+
+    @property
+    def bucket_align(self) -> int:
+        # pages quantize whole on write: prefill may not end mid-page
+        return self.pm.bs
+
+    def init(self, cfg, sc):
+        self.cfg, self.sc = cfg, sc
+        bs = self._block_size or sc.block_size
+        n_blocks = self._n_blocks or sc.n_blocks \
+            or sc.n_slots * (sc.max_len // bs)
+        self.pm = pkv.PagedQ8CacheManager(
+            cfg, n_slots=sc.n_slots, max_len=sc.max_len,
+            block_size=bs, n_blocks=n_blocks)
+
+    def build_prefill(self, impl, mesh=None, params_sharding=None,
+                      cache_shardings=None, qkv_sharding=None):
+        cfg = self.cfg
+
+        def fn(p, tk, tl, kp, vp, ks, vs, bids):
+            return forward_prefill(
+                p, cfg, tk, PagedQ8PrefillDest(kp, vp, ks, vs, bids),
+                impl=impl, true_len=tl, qkv_sharding=qkv_sharding)
+
+        if mesh is not None:
+            cs = cache_shardings
+            self._prefill = jax.jit(
+                fn, donate_argnums=(3, 4, 5, 6),
+                in_shardings=(params_sharding, None, None, cs.k, cs.v,
+                              cs.k_scale, cs.v_scale, None),
+                out_shardings=(None, (cs.k, cs.v, cs.k_scale, cs.v_scale)))
+        else:
+            self._prefill = jax.jit(fn, donate_argnums=(3, 4, 5, 6))
+
+    def prefill(self, params, slot, padded_row, true_n, n_shared, vision):
+        assert vision is None, "paged serving is attention-only (no vlm)"
+        bids = self.pm.prefill_block_ids(slot, padded_row.shape[1])
+        tl = jnp.full((1,), true_n, jnp.int32)
+        logits, (k, v, ks, vs) = self._prefill(
+            params, padded_row, tl, self.pm.k, self.pm.v,
+            self.pm.k_scale, self.pm.v_scale, jnp.asarray(bids))
+        self.pm.k, self.pm.v = k, v
+        self.pm.k_scale, self.pm.v_scale = ks, vs
+        return logits
+
+    def build_chunk(self, chunk_tokens, impl, mesh=None, params_sharding=None,
+                    cache_shardings=None, qkv_sharding=None):
+        cfg = self.cfg
+        if chunk_tokens % self.pm.bs:
+            raise ValueError(
+                f"chunk_tokens ({chunk_tokens}) must be a multiple of the "
+                f"block size ({self.pm.bs})")
+        if self.pm.ring and chunk_tokens != self.pm.bs:
+            raise ValueError(
+                f"ring (windowed) paged chunking pins chunk_tokens to one "
+                f"block ({self.pm.bs}); got {chunk_tokens}")
+        self._chunk_tokens = chunk_tokens
+
+        def fn(p, tk, s, tl, kp, vp, ks, vs, trow, bids):
+            return forward_prefill_chunk(
+                p, cfg, tk, PagedQ8ChunkDest(kp, vp, ks, vs, trow, bids),
+                start=s, true_len=tl, impl=impl, qkv_sharding=qkv_sharding)
+
+        if mesh is not None:
+            cs = cache_shardings
+            self._chunk = jax.jit(
+                fn, donate_argnums=(4, 5, 6, 7),
+                in_shardings=(params_sharding, None, None, None, cs.k, cs.v,
+                              cs.k_scale, cs.v_scale, None, None),
+                out_shardings=(None, (cs.k, cs.v, cs.k_scale, cs.v_scale)))
+        else:
+            self._chunk = jax.jit(fn, donate_argnums=(4, 5, 6, 7))
+
+    def chunk_step(self, params, slot, chunk_row, start, true_len):
+        C = self._chunk_tokens
+        bids = self.pm.chunk_block_ids(slot, start, start + C, true_len)
+        s = jnp.full((1,), start, jnp.int32)
+        tl = jnp.full((1,), true_len, jnp.int32)
+        # the TRUE table row (the decode view masks shielded slots to -1);
+        # .copy() before ingestion — tables is host-mutated (aliasing)
+        trow = jnp.asarray(self.pm.tables[slot:slot + 1].copy())
+        logits, (k, v, ks, vs) = self._chunk(
+            params, chunk_row, s, tl, self.pm.k, self.pm.v,
+            self.pm.k_scale, self.pm.v_scale, trow, jnp.asarray(bids))
+        self.pm.k, self.pm.v = k, v
+        self.pm.k_scale, self.pm.v_scale = ks, vs
+        self.pm.set_frontier(slot, min(start + C, true_len))
+        return logits
+
+    def compiled_prefill(self, params, bucket_len):
+        pshape = jax.eval_shape(lambda: params)
+        tk = jax.ShapeDtypeStruct((1, bucket_len), jnp.int32)
+        tl = jax.ShapeDtypeStruct((1,), jnp.int32)
+        kp = jax.eval_shape(lambda: self.pm.k)
+        vp = jax.eval_shape(lambda: self.pm.v)
+        ks = jax.eval_shape(lambda: self.pm.k_scale)
+        vs = jax.eval_shape(lambda: self.pm.v_scale)
+        nbk = -(-bucket_len // self.pm.bs)
+        bids = jax.ShapeDtypeStruct((nbk,), jnp.int32)
+        return self._prefill.lower(pshape, tk, tl, kp, vp, ks, vs,
+                                   bids).compile()
+
+    def obs_gauges(self):
+        g = dict(super().obs_gauges())
+        pm = self.pm
+
+        def q8_bytes():
+            return pm.pool_bytes
+
+        def saved_vs_fp16():
+            elems = int(pm.k.size) + int(pm.v.size)  # int8: 1 byte each
+            return elems * 2 - pm.pool_bytes
+
+        g.update({
+            "q8_pool_bytes": (q8_bytes,
+                              "int8 pool + scale bytes resident"),
+            "q8_bytes_saved_vs_fp16": (
+                saved_vs_fp16,
+                "HBM saved vs an fp16 pool of the same page count"),
+        })
+        return g
+
+
 def make_adapter(kind: str, sc) -> KVCacheAdapter:
     """Adapter for a cache_kind name (the string form of the new API, and
     the target of the deprecated ``ServeConfig.cache_kind``)."""
@@ -517,6 +665,9 @@ def make_adapter(kind: str, sc) -> KVCacheAdapter:
     if kind == "paged":
         return PagedCacheAdapter(block_size=sc.block_size,
                                  n_blocks=sc.n_blocks)
+    if kind == "paged_q8":
+        return PagedQ8CacheAdapter(block_size=sc.block_size,
+                                   n_blocks=sc.n_blocks)
     raise ValueError(
-        f"unknown cache kind {kind!r}; expected 'dense', 'paged', or a "
-        "KVCacheAdapter instance")
+        f"unknown cache kind {kind!r}; expected 'dense', 'paged', "
+        "'paged_q8', or a KVCacheAdapter instance")

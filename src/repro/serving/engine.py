@@ -92,7 +92,11 @@ class ServeConfig:
     obs: Any = False
 
 
-@dataclasses.dataclass
+# eq=False: requests are identities, not values.  The generated __eq__
+# would compare the prompt ARRAYS, and ``inflight.remove(r)`` /
+# ``preempted.remove(r)`` then raise on any ragged out-of-order finish
+# (numpy refuses to broadcast (40,) against (24,)).
+@dataclasses.dataclass(eq=False)
 class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 32
@@ -303,7 +307,10 @@ class Engine:
 
     @property
     def paged(self) -> bool:
-        return self.kv.kind == "paged"
+        """True for every block-pool cache kind (fp "paged" AND the int8
+        "paged_q8") — scheduling semantics (absolute positions, admission
+        control, preemption) are the pool's, not the quantization's."""
+        return self.kv.kind != "dense"
 
     @property
     def cache(self):
@@ -376,12 +383,19 @@ class Engine:
         jit compiles O(log max_len) programs; true length is passed to
         ``forward_prefill`` so logits and cache are exact."""
         n = len(toks)
+        align = self.kv.bucket_align
         if not self._bucketing or n >= self.sc.max_len:
-            return toks, n
+            # even unbucketed prompts must honor the adapter's alignment
+            # (paged_q8 pages quantize whole: no prefill may end mid-page)
+            b = -(-n // align) * align
+            if b == n:
+                return toks, n
+            return np.concatenate([toks, np.zeros((b - n,), np.int32)]), n
         b = 8
         while b < n:
             b *= 2
         b = min(b, self.sc.max_len)
+        b = -(-b // align) * align
         if b == n:
             return toks, n
         return np.concatenate([toks, np.zeros((b - n,), np.int32)]), n

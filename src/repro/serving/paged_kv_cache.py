@@ -69,7 +69,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serving import hostbufs
-from repro.models.transformer import (PagedDecodeCache, init_paged_cache,
+from repro.models.transformer import (PagedDecodeCache, PagedQ8DecodeCache,
+                                      init_paged_cache, init_paged_q8_cache,
                                       layer_plan, paged_table_blocks)
 
 
@@ -99,6 +100,18 @@ def copy_block(k_pool, v_pool, src, dst):
     k_pool = k_pool.at[:, dst].set(k_pool[:, src])
     v_pool = v_pool.at[:, dst].set(v_pool[:, src])
     return k_pool, v_pool
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def copy_block_q8(k_pool, v_pool, k_scale, v_scale, src, dst):
+    """Quantized copy-on-write: a page's int8 bytes and its per-(page,
+    kv-head) scale rows are one unit — CoW moves both or the copy
+    dequantizes under the wrong scale."""
+    k_pool = k_pool.at[:, dst].set(k_pool[:, src])
+    v_pool = v_pool.at[:, dst].set(v_pool[:, src])
+    k_scale = k_scale.at[:, dst].set(k_scale[:, src])
+    v_scale = v_scale.at[:, dst].set(v_scale[:, src])
+    return k_pool, v_pool, k_scale, v_scale
 
 
 # ---------------------------------------------------------------------------
@@ -207,8 +220,7 @@ class PagedCacheManager:
         self.ring = self.table_blocks if self.table_blocks < self.max_blocks \
             else 0
         self.n_slots = n_slots
-        cache = init_paged_cache(cfg, n_blocks, block_size, n_slots, max_len)
-        self.k, self.v = cache.k, cache.v
+        self._init_pools(cfg, n_blocks, block_size, n_slots, max_len)
         # aligned: host-mutable state always HITS jax's zero-copy path, so
         # a missing .copy() at device ingestion fails deterministically
         # (serving.hostbufs) instead of only on lucky malloc alignments
@@ -233,6 +245,20 @@ class PagedCacheManager:
         """Most pages one request may ever hold: ``ceil(window/bs)+1``
         under a sliding window, else the full table."""
         return self.ring or self.max_blocks
+
+    # -- pool representation hooks (overridden by PagedQ8CacheManager; the
+    # allocator / CoW / ring-recycle / prefix-registry logic above and
+    # below never looks inside a page, so a new pool layout only supplies
+    # these) ------------------------------------------------------------
+
+    def _init_pools(self, cfg: ModelConfig, n_blocks: int, block_size: int,
+                    n_slots: int, max_len: int) -> None:
+        cache = init_paged_cache(cfg, n_blocks, block_size, n_slots, max_len)
+        self.k, self.v = cache.k, cache.v
+
+    def _copy_block_device(self, src: int, dst: int) -> None:
+        self.k, self.v = copy_block(self.k, self.v,
+                                    jnp.int32(src), jnp.int32(dst))
 
     # -- device view ----------------------------------------------------
 
@@ -396,8 +422,7 @@ class PagedCacheManager:
         if fresh is None:
             return False
         if copy:
-            self.k, self.v = copy_block(self.k, self.v,
-                                        jnp.int32(bid), jnp.int32(fresh[0]))
+            self._copy_block_device(bid, fresh[0])
         self.allocator.release([bid])
         info.blocks[idx] = fresh[0]
         self.tables[slot, idx] = fresh[0]
@@ -585,3 +610,62 @@ class PagedCacheManager:
         """Expose the slot's true table row to decode steps again (called
         at decode activation, after the iteration's decode dispatch)."""
         self.shielded.discard(slot)
+
+
+# ---------------------------------------------------------------------------
+# quantized pool: int8 pages + per-(page, kv-head) scales
+# ---------------------------------------------------------------------------
+
+class PagedQ8CacheManager(PagedCacheManager):
+    """``PagedCacheManager`` over int8 pools with per-(page, kv-head)
+    float32 scale arrays (``kernels.quant`` layout).
+
+    Every host-side paging decision — admission, prefix sharing, CoW,
+    ring recycle, shields, the registry — is inherited untouched: those
+    move PAGES, and a q8 page is just (int8 bytes, scale row) instead of
+    fp bytes.  Only the pool-representation hooks differ, so the scales
+    provably travel with their page through every lifecycle transition:
+
+      * ``_init_pools``        allocates int8 pools + zero scale arrays;
+      * ``_copy_block_device`` CoW copies bytes AND scale rows atomically
+        (``copy_block_q8``) — a detached page dequantizes identically;
+      * recycle / fresh map touch no device state here, exactly like the
+        fp manager: decode's quantize-on-write resets a page's scale when
+        it enters the page at offset 0 (``kernels.quant.q8_append_token``),
+        so a stale recycled scale is garbage that is never read, same as
+        the stale page bytes.
+    """
+
+    def _init_pools(self, cfg: ModelConfig, n_blocks: int, block_size: int,
+                    n_slots: int, max_len: int) -> None:
+        cache = init_paged_q8_cache(cfg, n_blocks, block_size, n_slots,
+                                    max_len)
+        self.k, self.v = cache.k, cache.v
+        self.k_scale, self.v_scale = cache.k_scale, cache.v_scale
+
+    def _copy_block_device(self, src: int, dst: int) -> None:
+        self.k, self.v, self.k_scale, self.v_scale = copy_block_q8(
+            self.k, self.v, self.k_scale, self.v_scale,
+            jnp.int32(src), jnp.int32(dst))
+
+    def device_cache(self) -> PagedQ8DecodeCache:
+        # same copy-before-ingest + shield masking discipline as the base
+        # manager (see its device_cache comments)
+        tbl = self.tables.copy()
+        if self.shielded:
+            tbl[sorted(self.shielded), :] = -1
+        return PagedQ8DecodeCache(
+            k=self.k, v=self.v,
+            k_scale=self.k_scale, v_scale=self.v_scale,
+            block_tables=jnp.asarray(tbl),
+            length=jnp.asarray(self.lengths.copy()))
+
+    def update_pools(self, new: PagedQ8DecodeCache) -> None:
+        self.k, self.v = new.k, new.v
+        self.k_scale, self.v_scale = new.k_scale, new.v_scale
+
+    @property
+    def pool_bytes(self) -> int:
+        return (int(self.k.size + self.v.size) * self.k.dtype.itemsize
+                + int(self.k_scale.size + self.v_scale.size)
+                * self.k_scale.dtype.itemsize)

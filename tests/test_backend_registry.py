@@ -18,7 +18,8 @@ from repro.models import (DensePrefillDest, PagedPrefillDest, backends,
                           init_paged_cache, init_params, prefill_style_key,
                           serving_style_key)
 from repro.lint import walker as lint_walker
-from repro.serving import Engine, PagedCacheAdapter, ServeConfig
+from repro.serving import (Engine, PagedCacheAdapter, PagedQ8CacheAdapter,
+                           ServeConfig)
 from repro.serving.paged_kv_cache import PagedCacheManager
 
 MAX_NEW = 4
@@ -442,6 +443,176 @@ def test_serving_style_key():
     hybrid = reduce_config(get_config("hymba-1.5b")).with_(
         block_style="skipless_merged")
     assert serving_style_key(hybrid) == "generic"
+
+
+# ------------------------------------------------------------- paged_q8
+
+
+@pytest.fixture(scope="module")
+def setup_q8():
+    """mult=1 twin of ``setup`` for the q8-vs-fp greedy gate.
+
+    int8 KV error is ~0.4% of each page's absmax, and the x50 embedding
+    amplification that conditions the merged/unmerged float comparisons
+    amplifies THAT error super-linearly through the skipless stack (no
+    residual lane to damp it) — measured 75% of the logit range, far past
+    any greedy margin.  The q8-vs-fp gate therefore runs on the unscaled
+    model, where argmax margins dominate quantization noise.  The x50
+    models from ``setup`` still back the q8-vs-q8 identity grid: those
+    cells differ only by float-reordering-sized amounts (the pool bits
+    are impl-independent by construction), which x50 conditions exactly
+    as it does the fp grid."""
+    cfg = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        n_kv_heads=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    models = {"generic": (cfg, params)}
+    for variant in ("qp", "kp", "vp"):
+        mp, mc = merge_skipless(params, cfg, variant)
+        models[variant] = (mc, mp)
+    prompts = [np.arange(5) % cfg.vocab_size + 3 * i for i in range(2)]
+    return models, prompts
+
+
+def _engine_streams(cfg, params, cache, impl, prompts, n, max_len=48):
+    eng = Engine(cfg, params, ServeConfig(n_slots=2, max_len=max_len),
+                 impl=impl, cache=cache)
+    outs = eng.generate(prompts, max_new_tokens=n)
+    return eng, [list(map(int, o)) for o in outs]
+
+
+@pytest.fixture(scope="module")
+def q8_oracle(setup):
+    """The q8 grid's own oracle: the (generic, xla) paged_q8 cell on the
+    x50 models.  Every other q8 cell must be token-identical to it —
+    quantize-on-write runs in plain XLA in every impl's program, so the
+    pool bits (and hence the greedy stream) are impl- and
+    style-independent."""
+    models, prompts, _ = setup
+    cfg, params = models["generic"]
+    _, streams = _engine_streams(cfg, params, PagedQ8CacheAdapter(
+        block_size=8), "xla", prompts, MAX_NEW)
+    return streams
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("style", ["generic", "qp", "kp", "vp"])
+def test_q8_grid_token_identical_to_q8_xla_oracle(setup, q8_oracle, style,
+                                                  impl):
+    """The paged_q8 acceptance grid: every style × impl cell serves
+    through the registry ("paged_q8" row, merged fast path for qp) and
+    emits a greedy stream bit-identical to the (generic, xla) q8 cell.
+    Identity — not closeness — because prefill's in-attention fake-quant,
+    the direct-to-page writes, and decode's append all route through the
+    same masked quantize, so every cell reads the same int8 pool."""
+    models, prompts, _ = setup
+    cfg, params = models[style]
+    eng, streams = _engine_streams(cfg, params, PagedQ8CacheAdapter(
+        block_size=8), impl, prompts, MAX_NEW)
+    assert eng.backend.key == ("paged_q8", serving_style_key(cfg), impl)
+    assert eng.merged_fast_path == (style == "qp")
+    assert eng.prefill_backend.key == ("paged_q8", prefill_style_key(cfg),
+                                       impl)
+    for p, o, want in zip(prompts, streams, q8_oracle):
+        assert o == want, (style, impl, list(p[:3]), o, want)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("style", ["generic", "qp", "kp", "vp"])
+def test_q8_greedy_matches_fp_paged_on_conditioned_model(setup_q8, style,
+                                                         impl):
+    """The cross-precision numerics gate at reduced shapes: on the
+    well-conditioned (unscaled) model the int8 pool's greedy stream must
+    MATCH the fp paged pool's, token for token, in every style × impl
+    cell — quantization noise stays under the argmax margins."""
+    models, prompts = setup_q8
+    cfg, params = models[style]
+    _, fp = _engine_streams(cfg, params, PagedCacheAdapter(block_size=8),
+                            impl, prompts, MAX_NEW)
+    _, q8 = _engine_streams(cfg, params, PagedQ8CacheAdapter(block_size=8),
+                            impl, prompts, MAX_NEW)
+    assert q8 == fp, (style, impl, fp, q8)
+
+
+@pytest.fixture(scope="module")
+def q8_windowed_oracle(setup_windowed):
+    models, prompts, _ = setup_windowed
+    cfg, params = models["generic"]
+    _, streams = _engine_streams(cfg, params, PagedQ8CacheAdapter(
+        block_size=WIN_BLOCK), "xla", prompts, WIN_MAX_NEW, max_len=32)
+    return streams
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("style", ["generic", "qp", "kp", "vp"])
+def test_q8_windowed_grid_rings_and_stays_self_consistent(
+        setup_windowed, q8_windowed_oracle, style, impl):
+    """The sliding-window row of the q8 grid: bounded ring tables with
+    in-place page recycling, int8 pages and their scale rows recycled in
+    lockstep (``q8_append_token`` resets a page's scale on entry, so a
+    recycled page never inherits the evicted request's scale).  Every
+    cell token-identical to the (generic, xla) q8 windowed cell."""
+    models, prompts, _ = setup_windowed
+    cfg, params = models[style]
+    eng, streams = _engine_streams(cfg, params, PagedQ8CacheAdapter(
+        block_size=WIN_BLOCK), impl, prompts, WIN_MAX_NEW, max_len=32)
+    for p, o, want in zip(prompts, streams, q8_windowed_oracle):
+        assert o == want, (style, impl, list(p[:3]), o, want)
+    pm = eng.pm
+    assert pm.ring == -(-WIN // WIN_BLOCK) + 1 == pm.ring_bound
+    assert pm.allocator.n_recycled > 0, (
+        "the 7-token prompt + decode must roll the ring over a recycled "
+        "page — otherwise this grid isn't testing q8 scale recycling")
+    assert max(pm.request_page_hwm) <= pm.ring_bound
+
+
+def test_q8_prefill_logit_error_bounded_at_full_shape(setup_q8):
+    """The second half of the numerics gate: at the full serving shape
+    (a whole 48-token page-aligned prompt — six pages, every attention
+    read crossing page-scale boundaries) the q8 prefill logits stay
+    within a bounded relative error of the fp paged prefill logits."""
+    from repro.models import (PagedQ8PrefillDest, init_paged_q8_cache)
+    models, _ = setup_q8
+    cfg, params = models["generic"]
+    S, bs = 48, 8
+    toks = jnp.asarray(np.arange(S) * 5 % cfg.vocab_size, jnp.int32)[None]
+    nbk = S // bs
+    pc = init_paged_cache(cfg, n_blocks=nbk, block_size=bs, n_slots=1,
+                          max_len=S)
+    lg_fp, _ = forward_prefill(
+        params, cfg, toks,
+        PagedPrefillDest(pc.k, pc.v, jnp.arange(nbk, dtype=jnp.int32)))
+    qc = init_paged_q8_cache(cfg, n_blocks=nbk, block_size=bs, n_slots=1,
+                             max_len=S)
+    lg_q8, _ = forward_prefill(
+        params, cfg, toks,
+        PagedQ8PrefillDest(qc.k, qc.v, qc.k_scale, qc.v_scale,
+                           jnp.arange(nbk, dtype=jnp.int32)))
+    err = float(jnp.max(jnp.abs(lg_q8 - lg_fp)))
+    scale = float(jnp.max(jnp.abs(lg_fp)))
+    assert err <= 0.10 * scale, (
+        f"q8 prefill logit error {err:.4g} exceeds 10% of the fp logit "
+        f"range {scale:.4g}")
+    # and the greedy choice itself must survive the perturbation here
+    assert int(jnp.argmax(lg_q8[0, :cfg.vocab_size])) \
+        == int(jnp.argmax(lg_fp[0, :cfg.vocab_size]))
+
+
+def test_q8_prefill_dispatcher_rejects_unaligned_prompt():
+    """paged_q8 prefill quantizes whole pages on write — a prompt that
+    is not page-aligned must be rejected at the dispatch boundary (the
+    engine's bucket padding guarantees alignment; raw callers get a
+    ValueError, not silent garbage in the last page's scale)."""
+    from repro.models import PagedQ8PrefillDest
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    kp = jnp.zeros((cfg.n_layers, 4, 8, cfg.n_kv_heads, cfg.d_head),
+                   jnp.int8)
+    ks = jnp.zeros((cfg.n_layers, 4, cfg.n_kv_heads), jnp.float32)
+    ids1 = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError, match="multiple of the page size"):
+        forward_prefill(params, cfg, jnp.zeros((1, 5), jnp.int32),
+                        PagedQ8PrefillDest(kp, kp, ks, ks, ids1))
 
 
 def test_prefill_style_key():

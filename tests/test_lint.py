@@ -11,10 +11,11 @@ import pytest
 
 from repro.configs import get_config, reduce_config
 from repro.lint import (DonationEffective, Finding, LintRule, LintTarget,
-                        NoDtypePromotionDrift, NoForbiddenMatmul,
-                        NoHostTransferInObsHooks, NoHostTransferInStepLoop,
-                        NoOversizedBuffer, aliasing, get_rule, register_rule,
-                        registered_rules, run_rules, sweep, walker)
+                        NoDequantizedPoolBuffer, NoDtypePromotionDrift,
+                        NoForbiddenMatmul, NoHostTransferInObsHooks,
+                        NoHostTransferInStepLoop, NoOversizedBuffer, aliasing,
+                        get_rule, register_rule, registered_rules, run_rules,
+                        sweep, walker)
 from repro.lint.builtin import HOST_TRANSFER_PRIMITIVES
 from repro.models import backends, init_params
 from repro.serving import Engine, ServeConfig
@@ -168,6 +169,43 @@ def test_dtype_promotion_drift_fires_on_fp32_shadow():
     assert NoDtypePromotionDrift().check(t2) == []
 
 
+def test_no_dequantized_pool_buffer_fires_on_fp32_shadow():
+    """A paged_q8 program that materializes ``pool.astype(f32)`` — the
+    convenience bug the rule exists for — must fire; tile-bounded or
+    gathered-row dequant (different shapes) must not."""
+    shape = (6, 8, 2, 4)  # (n_blocks, block, heads, d_head) int8 pool
+    pool = jnp.zeros(shape, jnp.int8)
+    scale = jnp.zeros((6, 2), jnp.float32)
+
+    def bad(p, s):  # a full-precision shadow of the whole pool
+        return (p.astype(jnp.float32) * s[:, None, :, None]).sum()
+
+    t = _target(cache_kind="paged_q8", jaxpr=jax.make_jaxpr(bad)(pool, scale),
+                cache_shapes=(shape,), cache_dtype=jnp.int8)
+    findings = NoDequantizedPoolBuffer().check(t)
+    assert findings and findings[0].rule == "NoDequantizedPoolBuffer"
+    assert "float32" in str(findings[0].detail)
+
+    def clean(p, s):  # gathered-rows dequant: NOT pool-shaped
+        rows = p[jnp.array([0, 2])].astype(jnp.float32)
+        return (rows * s[jnp.array([0, 2])][:, None, :, None]).sum()
+
+    t2 = _target(cache_kind="paged_q8",
+                 jaxpr=jax.make_jaxpr(clean)(pool, scale),
+                 cache_shapes=(shape,), cache_dtype=jnp.int8)
+    assert NoDequantizedPoolBuffer().check(t2) == []
+    # int32 would be just as fatal as float32 — itemsize is the test
+    def bad_int(p):
+        return p.astype(jnp.int32).sum()
+    t3 = _target(cache_kind="paged_q8",
+                 jaxpr=jax.make_jaxpr(bad_int)(pool),
+                 cache_shapes=(shape,), cache_dtype=jnp.int8)
+    assert NoDequantizedPoolBuffer().check(t3)
+    # rule is scoped to paged_q8 programs only
+    assert not NoDequantizedPoolBuffer().applies(
+        _target(cache_kind="paged", cache_shapes=(shape,)))
+
+
 def test_host_transfer_fires_on_debug_print_in_step():
     def leaky(x):
         jax.debug.print("tok {}", x[0])
@@ -251,8 +289,10 @@ def test_sweep_covers_every_registered_backend(sweep_report):
     for t in rep.targets:
         if t.style == "merged":
             assert "NoForbiddenMatmul" in t.rules_run, t.key
-        if t.phase == "prefill" and t.cache_kind == "paged":
+        if t.phase == "prefill" and t.cache_kind in ("paged", "paged_q8"):
             assert "NoOversizedBuffer" in t.rules_run, t.key
+        if t.cache_kind == "paged_q8":
+            assert "NoDequantizedPoolBuffer" in t.rules_run, t.key
         if t.phase == "decode":
             assert "NoHostTransferInStepLoop" in t.rules_run, t.key
         assert "NoDtypePromotionDrift" in t.rules_run, t.key
@@ -309,7 +349,7 @@ def test_hostbufs_are_aligned_and_zero_copy_certain():
     assert np.shares_memory(np.asarray(jnp.asarray(buf)), buf)
 
 
-@pytest.mark.parametrize("kind", ["dense", "paged"])
+@pytest.mark.parametrize("kind", ["dense", "paged", "paged_q8"])
 def test_audit_clean_on_real_engines(small_model, kind):
     findings = aliasing.audit_engine(_engine(small_model, kind))
     assert findings == [], [str(f) for f in findings]

@@ -32,9 +32,12 @@ try:
 except ImportError:  # optional dev dep — property tests skip (requirements-dev.txt)
     from _hypothesis_stub import given, settings, st
 
+import jax.numpy as jnp
+
 from repro.configs import get_config, reduce_config
 from repro.kernels.paging import paged_ring_blocks
-from repro.serving.paged_kv_cache import PagedCacheManager
+from repro.serving.paged_kv_cache import (PagedCacheManager,
+                                          PagedQ8CacheManager)
 
 pytestmark = pytest.mark.property
 
@@ -175,6 +178,153 @@ def test_windowed_request_never_exceeds_ring_bound(window, n_prompt,
         assert mapped <= bound, (n_prompt, n_decode, mapped)
     pm.release(0)
     assert pm.request_page_hwm[-1] <= bound
+    assert pm.allocator.n_used == 0
+
+
+# ---------------------------------------------------------------------------
+# paged_q8: scale rows travel with their page
+# ---------------------------------------------------------------------------
+
+def _stamp(pm, page, marker, expected):
+    """Write a unique marker into page ``page``'s scale rows (all layers,
+    all kv heads) — the stand-in for the real quantize-on-write, visible
+    to the host so the model can track it through the lifecycle."""
+    ks, vs = np.asarray(pm.k_scale).copy(), np.asarray(pm.v_scale).copy()
+    ks[:, page, :] = marker
+    vs[:, page, :] = marker + 0.5
+    pm.k_scale, pm.v_scale = jnp.asarray(ks), jnp.asarray(vs)
+    expected[page] = marker
+
+
+def _live_pages(pm, slot):
+    return [p for p in pm._slots[slot].blocks if p >= 0]
+
+
+def _check_scales(pm, expected):
+    """Every page any live slot maps must carry exactly the scale marker
+    the model assigned it — through prefix sharing, CoW detach (the copy
+    must carry the SOURCE page's rows), and ring recycling."""
+    ks, vs = np.asarray(pm.k_scale), np.asarray(pm.v_scale)
+    for slot in pm._slots:
+        for p in _live_pages(pm, slot):
+            assert p in expected, (slot, p, "mapped page never stamped")
+            np.testing.assert_array_equal(
+                ks[:, p, :], np.full_like(ks[:, p, :], expected[p]),
+                err_msg=f"k_scale of page {p} lost its marker")
+            np.testing.assert_array_equal(
+                vs[:, p, :], np.full_like(vs[:, p, :], expected[p] + 0.5),
+                err_msg=f"v_scale of page {p} lost its marker")
+
+
+def _absorb_page_delta(pm, expected, before, after, d_cow, fresh_marker):
+    """Update the scale model after one op.  A CoW detach moves the
+    source page's marker to the destination (copy_block_q8 copied the
+    rows); any other newly mapped page is a fresh write and gets
+    stamped.  In-place ring recycling changes no page id, so markers
+    persist by construction."""
+    new_pages, gone = after - before, before - after
+    if d_cow and len(new_pages) == 1 and len(gone) == 1:
+        src, dst = gone.pop(), new_pages.pop()
+        # the copy must already be on the device BEFORE we update the
+        # model — _check_scales then proves dst carries src's rows
+        expected[dst] = expected[src]
+        return fresh_marker
+    for p in sorted(new_pages):
+        _stamp(pm, p, fresh_marker, expected)
+        fresh_marker += 1.0
+    return fresh_marker
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(window=st.sampled_from([0, 5, 16]), trace=_trace_strategy())
+def test_q8_scale_rows_travel_with_their_page(window, trace):
+    """The q8 lifecycle invariant: scale rows are conserved in lockstep
+    with their page through admit (prefix-shared pages keep the sharer's
+    marker), CoW detach (the fork carries the source's rows), fresh maps,
+    ring recycling (same page id — marker persists) and release — on top
+    of all the fp manager's page-conservation invariants, which the q8
+    manager inherits."""
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(
+        sliding_window=window)
+    pm = PagedQ8CacheManager(cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
+                             block_size=BLOCK, n_blocks=N_BLOCKS)
+    assert pm.k.dtype == jnp.int8 and pm.k_scale.dtype == jnp.float32
+    model: dict = {}
+    expected: dict = {}
+    marker = 1.0
+
+    def all_mapped():
+        return {p for s in pm._slots for p in _live_pages(pm, s)}
+
+    for op, sel, n in trace:
+        active = sorted(model)
+        before, cow0 = all_mapped(), pm.allocator.n_cow
+        if op == "admit" and len(model) < N_SLOTS:
+            slot = min(set(range(N_SLOTS)) - set(active))
+            toks = (np.arange(n, dtype=np.int32) + (sel % 3) * 100) \
+                % cfg.vocab_size
+            if pm.admit(slot, toks) is not None:
+                model[slot] = RefSlot(n, window)
+                pm.prefill_block_ids(slot, len(toks))
+        elif op == "step" and active:
+            slot = active[sel % len(active)]
+            if int(pm.lengths[slot]) + 1 >= MAX_LEN:
+                continue
+            if pm.ensure_appendable(slot):
+                pm.advance(slot)
+                model[slot].step()
+            else:
+                pm.release(slot)
+                del model[slot]
+        elif op == "release" and active:
+            slot = active[sel % len(active)]
+            pm.release(slot)
+            del model[slot]
+        marker = _absorb_page_delta(pm, expected, before, all_mapped(),
+                                    pm.allocator.n_cow - cow0, marker)
+        _check_invariants(pm, model)
+        _check_scales(pm, expected)
+
+    for slot in sorted(model):
+        pm.release(slot)
+    assert pm.allocator.n_used == 0
+
+
+def test_q8_scales_survive_cow_and_recycle_without_hypothesis():
+    """Tier-1 sanity for the q8 scale model: two identical windowed
+    prompts share pages, decode forks them (CoW must carry the scale
+    rows) and then rolls the ring over recycled pages — all without
+    hypothesis, so a stubbed environment still covers the path."""
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(sliding_window=16)
+    pm = PagedQ8CacheManager(cfg, n_slots=2, max_len=MAX_LEN,
+                             block_size=BLOCK, n_blocks=N_BLOCKS)
+    model, expected, marker = {}, {}, 1.0
+
+    def all_mapped():
+        return {p for s in pm._slots for p in _live_pages(pm, s)}
+
+    for slot, n in ((0, 20), (1, 20)):  # identical prompts: shared pages
+        before, cow0 = all_mapped(), pm.allocator.n_cow
+        assert pm.admit(slot, np.arange(n, dtype=np.int32)) is not None
+        model[slot] = RefSlot(n, 16)
+        pm.prefill_block_ids(slot, n)
+        marker = _absorb_page_delta(pm, expected, before, all_mapped(),
+                                    pm.allocator.n_cow - cow0, marker)
+        _check_scales(pm, expected)
+    assert pm.allocator.n_shared_hits > 0, "prompts must actually share"
+    for _ in range(24):
+        for slot in (0, 1):
+            before, cow0 = all_mapped(), pm.allocator.n_cow
+            if pm.ensure_appendable(slot):
+                pm.advance(slot)
+                model[slot].step()
+            marker = _absorb_page_delta(pm, expected, before, all_mapped(),
+                                        pm.allocator.n_cow - cow0, marker)
+            _check_invariants(pm, model)
+            _check_scales(pm, expected)
+    assert pm.allocator.n_cow > 0 or pm.allocator.n_recycled > 0
+    for slot in (0, 1):
+        pm.release(slot)
     assert pm.allocator.n_used == 0
 
 

@@ -26,8 +26,8 @@ from repro.configs import get_config, reduce_config
 from repro.core import merge_skipless
 from repro.lint import submitpath
 from repro.models import forward_seq, init_params
-from repro.serving import (Engine, PagedCacheAdapter, ServeConfig,
-                           SchedConfig, ScheduledEngine)
+from repro.serving import (Engine, PagedCacheAdapter, PagedQ8CacheAdapter,
+                           ServeConfig, SchedConfig, ScheduledEngine)
 from repro.serving.engine import Request
 from repro.serving.sched import PrefillJob, plan_iteration
 
@@ -104,6 +104,35 @@ def test_chunked_matches_whole_prompt_oracle(setup, cache_kind, style,
     for p, o, want in zip(prompts, outs, oracle):
         assert o == want, (cache_kind, style, impl, list(p[:3]))
     assert eng.n_iterations > 0 and eng.n_chunks_run >= len(prompts)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("style", ["generic", "qp"])
+def test_chunked_q8_matches_synchronous_q8(setup, style, impl):
+    """The paged_q8 row of the chunked grid: chunk-by-chunk quantized
+    prefill (each chunk masked-quantized into its own pages, scales
+    frontier-tracked through ``PagedQ8ChunkDest``) must emit a greedy
+    stream bit-identical to the synchronous whole-prompt paged_q8
+    engine's — the determinism contract is that chunked and whole
+    prefill write the SAME int8 pool bits, so the comparison is
+    identity, not closeness (the fp oracle would differ by quantization
+    noise; this gate pins the scheduling seam only)."""
+    models, prompts, _ = setup
+    cfg, params = models[style]
+    sync = Engine(cfg, params, ServeConfig(n_slots=2, max_len=48),
+                  impl="xla", cache=PagedQ8CacheAdapter(block_size=CHUNK))
+    want = sync.generate(prompts, max_new_tokens=MAX_NEW)
+    eng = ScheduledEngine(
+        cfg, params, ServeConfig(n_slots=2, max_len=48),
+        scfg=SchedConfig(token_budget=4 * CHUNK, chunk_tokens=CHUNK),
+        impl=impl,
+        cache=PagedQ8CacheAdapter(block_size=CHUNK,
+                                  n_blocks=2 * 48 // CHUNK))
+    assert eng._chunked, "windowless q8 combos must chunk like fp paged"
+    outs = eng.generate(prompts, max_new_tokens=MAX_NEW)
+    for p, o, w in zip(prompts, outs, want):
+        assert o == w, (style, impl, list(p[:3]), o, w)
+    assert eng.n_chunks_run >= len(prompts)
 
 
 @pytest.fixture(scope="module")

@@ -43,8 +43,12 @@ except ImportError:  # optional dev dep — property tests skip
 
 from repro.configs import get_config, reduce_config
 from repro.serving.engine import Request
-from repro.serving.paged_kv_cache import PagedCacheManager
+from repro.serving.paged_kv_cache import (PagedCacheManager,
+                                          PagedQ8CacheManager)
 from repro.serving.sched import PrefillJob, SchedConfig, plan_iteration
+# scale-lockstep model shared with the decode-path property suite
+from test_paged_properties import (_absorb_page_delta, _check_scales,
+                                   _live_pages)
 
 pytestmark = pytest.mark.property
 
@@ -258,6 +262,137 @@ def test_chunked_lifecycle_conserves_pages(window, trace):
     assert pm._registry == {}, \
         "registry entries must die with their pages"
     assert not pm.shielded
+
+
+# ---------------------------------------------------------------------------
+# manager: paged_q8 — scale rows conserved through the chunked lifecycle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(window=st.sampled_from([0, 5, 16]), trace=_chunk_trace_strategy())
+def test_chunked_q8_scales_conserved(window, trace):
+    """Page conservation AND scale lockstep for the quantized manager
+    under the chunked lifecycle: every page a slot maps must carry the
+    scale marker its write (or its CoW source, via copy_block_q8)
+    stamped — through ensure_chunk maps, prefix-shared admits, decode
+    CoW/ring-recycle, self-preemption and release.  The q8 manager
+    inherits the whole host lifecycle, so _conservation applies as-is."""
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(
+        sliding_window=window)
+    pm = PagedQ8CacheManager(cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
+                             block_size=BLOCK, n_blocks=N_BLOCKS)
+    C = BLOCK
+    state = {}
+    expected = {}
+    marker = [1.0]
+
+    def all_mapped():
+        return {p for s in pm._slots for p in _live_pages(pm, s)}
+
+    def absorb(before, cow0):
+        marker[0] = _absorb_page_delta(pm, expected, before, all_mapped(),
+                                       pm.allocator.n_cow - cow0,
+                                       marker[0])
+        _conservation(pm)
+        _check_scales(pm, expected)
+
+    for op, sel, n in trace:
+        before, cow0 = all_mapped(), pm.allocator.n_cow
+        if op == "admit":
+            slot = next((s for s in range(N_SLOTS) if s not in state), None)
+            if slot is None:
+                continue
+            toks = (np.arange(n, dtype=np.int32) * (sel % 3 + 1)) % 97
+            if pm.admit_chunked(slot, toks) is not None:
+                state[slot] = {"toks": toks, "frontier": 0,
+                               "active": False}
+        elif op == "chunk":
+            pre = [s for s, v in state.items() if not v["active"]]
+            if not pre:
+                continue
+            slot = pre[sel % len(pre)]
+            v = state[slot]
+            start = v["frontier"]
+            end = min(start + C, len(v["toks"]))
+            if not pm.ensure_chunk(slot, start, end):
+                pm.release(slot)
+                del state[slot]
+                absorb(before, cow0)
+                continue
+            pm.chunk_block_ids(slot, start, end, len(v["toks"]))
+            pm.set_frontier(slot, end)
+            v["frontier"] = end
+            if end >= len(v["toks"]):
+                pm.finish_chunked(slot, v["toks"])
+                pm.unshield(slot)
+                v["active"] = True
+        elif op == "step":
+            act = [s for s, v in state.items()
+                   if v["active"] and int(pm.lengths[s]) < MAX_LEN]
+            if not act:
+                continue
+            slot = act[sel % len(act)]
+            if pm.ensure_appendable(slot):
+                pm.advance(slot)
+            else:
+                pm.release(slot)
+                del state[slot]
+        elif op == "release" and state:
+            keys = sorted(state)
+            slot = keys[sel % len(keys)]
+            pm.release(slot)
+            del state[slot]
+        absorb(before, cow0)
+
+    for slot in sorted(state):
+        pm.release(slot)
+        _conservation(pm)
+    assert pm.allocator.n_used == 0
+    assert pm._registry == {} and not pm.shielded
+
+
+def test_chunked_q8_runs_without_hypothesis():
+    """Tier-1 sanity: one fixed q8 chunked lifecycle (admit → chunks →
+    finish → windowed decode over recycled pages → release) exercises
+    the scale-lockstep checker even when hypothesis is stubbed."""
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(sliding_window=16)
+    pm = PagedQ8CacheManager(cfg, n_slots=2, max_len=MAX_LEN,
+                             block_size=BLOCK, n_blocks=N_BLOCKS)
+    expected = {}
+    marker = [1.0]
+
+    def all_mapped():
+        return {p for s in pm._slots for p in _live_pages(pm, s)}
+
+    def absorb(before, cow0):
+        marker[0] = _absorb_page_delta(pm, expected, before, all_mapped(),
+                                       pm.allocator.n_cow - cow0,
+                                       marker[0])
+        _conservation(pm)
+        _check_scales(pm, expected)
+
+    toks = np.arange(20, dtype=np.int32)
+    assert pm.admit_chunked(0, toks) is not None
+    f = 0
+    while f < len(toks):
+        before, cow0 = all_mapped(), pm.allocator.n_cow
+        end = min(f + BLOCK, len(toks))
+        assert pm.ensure_chunk(0, f, end)
+        pm.chunk_block_ids(0, f, end, len(toks))
+        pm.set_frontier(0, end)
+        f = end
+        absorb(before, cow0)
+    pm.finish_chunked(0, toks)
+    pm.unshield(0)
+    for _ in range(24):
+        before, cow0 = all_mapped(), pm.allocator.n_cow
+        if pm.ensure_appendable(0):
+            pm.advance(0)
+        absorb(before, cow0)
+    assert pm.allocator.n_recycled > 0, "windowed decode must recycle"
+    pm.release(0)
+    _conservation(pm)
+    assert pm.allocator.n_used == 0
 
 
 def test_chunked_lifecycle_runs_without_hypothesis():

@@ -24,7 +24,26 @@ python -c "import pytest" 2>/dev/null || {
     exit 1
 }
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
+# One process per test FILE, not one for the whole suite: a single
+# process accumulating every suite's jitted programs has segfaulted the
+# XLA CPU compiler at full-suite scale (observed after PR 8's growth).
+# Per-file processes bound each compile cache, isolate any crash to the
+# file that triggered it, and keep reported failures identical.  Explicit
+# pytest args (a path, -k, ...) bypass sharding and run as given.
+if [ "$#" -gt 0 ]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
+else
+    FAILED_FILES=()
+    for f in tests/test_*.py; do
+        echo "[check] pytest $f"
+        PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$f" \
+            || FAILED_FILES+=("$f")
+    done
+    if [ "${#FAILED_FILES[@]}" -gt 0 ]; then
+        echo "[check] FAILED test files: ${FAILED_FILES[*]}" >&2
+        exit 1
+    fi
+fi
 
 # static analysis: the registry-wide program sweep + host-aliasing audit
 # + the scheduled-engine submit-path audit, exactly what CI's `analysis`

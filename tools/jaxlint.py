@@ -33,7 +33,7 @@ def _run_sweep(args):
 
 
 def _run_aliasing(args):
-    """Audit one dense and one paged engine at reduced shape — the real
+    """Audit one engine per cache kind at reduced shape — the real
     submit/step/preempt path with the aliasing spies armed."""
     import jax
     from repro.configs import get_config, reduce_config
@@ -44,12 +44,12 @@ def _run_aliasing(args):
     cfg = reduce_config(get_config("llama3.2-1b"))
     params = init_params(jax.random.PRNGKey(0), cfg)
     findings = []
-    for kind in ("dense", "paged"):
+    for kind in ("dense", "paged", "paged_q8"):
         eng = Engine(cfg, params, ServeConfig(n_slots=2, max_len=48),
                      cache=kind)
         findings += aliasing.audit_engine(eng)
-    report.render_findings("aliasing audit (dense + paged engines)",
-                           findings)
+    report.render_findings(
+        "aliasing audit (dense + paged + paged_q8 engines)", findings)
     return findings
 
 
@@ -70,7 +70,8 @@ def main(argv=None) -> int:
     ap.add_argument("--sweep", action="store_true",
                     help="lint every registered backend combo")
     ap.add_argument("--aliasing", action="store_true",
-                    help="host-aliasing audit of dense+paged engines")
+                    help="host-aliasing audit of dense+paged+paged_q8 "
+                         "engines")
     ap.add_argument("--submit", action="store_true",
                     help="NoSyncPrefillInSubmit audit of scheduled engines")
     ap.add_argument("--list-rules", action="store_true",

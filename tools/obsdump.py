@@ -28,15 +28,19 @@ def build_engine(args):
     import jax
     from repro.configs import get_config, reduce_config
     from repro.models import init_params
-    from repro.serving import Engine, PagedCacheAdapter, ServeConfig
+    from repro.serving import (Engine, PagedCacheAdapter,
+                               PagedQ8CacheAdapter, ServeConfig)
 
     cfg = reduce_config(get_config(args.arch))
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     sc = ServeConfig(n_slots=args.slots, max_len=args.max_len, obs=True,
                      seed=args.seed)
-    cache = (PagedCacheAdapter(block_size=args.block_size,
-                               n_blocks=args.n_blocks or None)
-             if args.cache == "paged" else "dense")
+    cache = "dense"
+    if args.cache in ("paged", "paged_q8"):
+        cls = PagedCacheAdapter if args.cache == "paged" \
+            else PagedQ8CacheAdapter
+        cache = cls(block_size=args.block_size,
+                    n_blocks=args.n_blocks or None)
     return Engine(cfg, params, sc, cache=cache), cfg
 
 
@@ -103,6 +107,17 @@ def selftest() -> int:
         evs = O.request_events(eng.obs.trace, r)
         assert sum(e["name"] == "finish" for e in evs) == 1, (r, evs)
 
+    # paged_q8: the quantized pool's lazy gauges must surface in the doc
+    ns_q8 = argparse.Namespace(arch="llama3.2-1b", seed=0, slots=2,
+                               max_len=64, cache="paged_q8", block_size=8,
+                               n_blocks=0, requests=2, max_new=2)
+    eng_q8, cfg_q8 = build_engine(ns_q8)
+    run_serve(eng_q8, cfg_q8, ns_q8)
+    doc_q8 = O.serving_obs_doc(eng_q8)
+    for g in ("q8_pool_bytes", "q8_bytes_saved_vs_fp16"):
+        assert g in doc_q8["metrics"], (g, sorted(doc_q8["metrics"]))
+        assert doc_q8["metrics"][g]["value"] > 0, g
+
     from repro.serving.engine import Engine  # off mode: NULL observer
     assert O.NULL.enabled is False and O.NULL.clock() == 0.0
     assert O.get_active() is O.NULL
@@ -122,7 +137,8 @@ def main(argv=None) -> int:
     ap.add_argument("--prometheus", metavar="PATH",
                     help="write Prometheus text format ('-' for stdout)")
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--cache", default="paged", choices=("dense", "paged"))
+    ap.add_argument("--cache", default="paged",
+                    choices=("dense", "paged", "paged_q8"))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
