@@ -58,9 +58,23 @@ exactly on well-conditioned weights, and full-shape page-crossing
 prefill logits must stay within 10% relative error — and the whole
 payload lands in ``BENCH_quant_numerics.json``.
 
+A seventh section measures the PREFIX CACHE (the radix tree with
+cross-request retention — ``serving.radix_tree``) on a multi-tenant
+Zipf workload: a few Zipf-popular tenant heads with nested few-shot
+prefixes, served in WAVES on one engine so every wave's requests are
+released before the next arrives — cross-request retention is then the
+only way a later wave hits an earlier wave's pages.  The retention
+engine's token hit-rate must be STRICTLY above the no-retention
+baseline (entries die with their last sharer — the old flat-registry
+lifecycle), with both engines' greedy streams token-identical (a warm
+hit is bytes already computed, never different bytes).  The payload
+lands in ``BENCH_prefix_cache.json``.
+
   PYTHONPATH=src python -m benchmarks.bench_paged_serving
   PYTHONPATH=src python -m benchmarks.bench_paged_serving --quant   # only
                                            the sixth section (CI artifact)
+  PYTHONPATH=src python -m benchmarks.bench_paged_serving --prefix  # only
+                                         the seventh section (CI artifact)
 """
 from __future__ import annotations
 
@@ -157,8 +171,7 @@ def _serve(cfg, params, cache_kind: str):
                    peak_pages=eng2.pm.allocator.peak_used,
                    recycled=eng2.pm.allocator.n_recycled,
                    ring_bound=eng2.pm.ring_bound,
-                   page_hwm=(max(eng2.pm.request_page_hwm)
-                             if eng2.pm.request_page_hwm else 0))
+                   page_hwm=eng2.pm.request_page_hwm.max)
         if cfg.sliding_window:
             # pages the same requests would pin WITHOUT ring recycling
             # (absolute tables hold every block until the request ends)
@@ -366,6 +379,142 @@ def print_quant(doc) -> None:
               f"{100 * n['logit_rel_err']:.2f}% <= 10% (argmax intact)")
 
 
+ZIPF_WAVES = 3
+ZIPF_REQ_PER_WAVE = 6
+
+
+def _workload_prefix(vocab: int):
+    """Multi-tenant Zipf waves: each request is a Zipf-popular tenant
+    HEAD (a shared system prompt), a nested stack of few-shot examples
+    (prefix-of-each-other, so deeper requests extend shallower ones'
+    chains), and a unique user suffix.  Returned as WAVES — the caller
+    serves each wave to completion before the next, so a later wave can
+    only hit pages the tree RETAINED across request lifetimes."""
+    rng = np.random.RandomState(3)
+    heads = [rng.randint(0, vocab, size=(16,)).astype(np.int32)
+             for _ in range(4)]
+    shots = [rng.randint(0, vocab, size=(8,)).astype(np.int32)
+             for _ in range(3)]
+    zipf = 1.0 / np.arange(1, len(heads) + 1)
+    zipf /= zipf.sum()
+    waves = []
+    for _ in range(ZIPF_WAVES):
+        wave = []
+        for _ in range(ZIPF_REQ_PER_WAVE):
+            h = rng.choice(len(heads), p=zipf)
+            depth = rng.randint(0, len(shots) + 1)
+            sfx = rng.randint(0, vocab,
+                              size=(rng.randint(2, 6),)).astype(np.int32)
+            wave.append(np.concatenate([heads[h]] + shots[:depth] + [sfx]))
+        waves.append(wave)
+    return waves
+
+
+def _serve_prefix(cfg, params):
+    """The same Zipf waves on a retention engine vs a no-retention
+    baseline (the old registry lifecycle: entries die with their page's
+    last sharer): token hit-rate must be strictly higher WITH retention,
+    greedy streams identical on both."""
+    waves = _workload_prefix(cfg.vocab_size)
+    n_tokens = sum(len(p) for wave in waves for p in wave)
+
+    def mk(retention: bool) -> Engine:
+        return Engine(cfg, params,
+                      ServeConfig(n_slots=ZIPF_REQ_PER_WAVE, max_len=MAX_LEN),
+                      cache=PagedCacheAdapter(
+                          block_size=BLOCK,
+                          n_blocks=DENSE_SLOTS * MAX_LEN // BLOCK,
+                          prefix_retention=retention))
+
+    rows, streams = {}, {}
+    for name, retention in (("retained", True), ("baseline", False)):
+        mk(retention).generate(waves[0][:1], max_new_tokens=2)  # warm jit
+        eng = mk(retention)
+        outs, ttfts = [], []
+        t0 = time.perf_counter()
+        for wave in waves:
+            res = eng.generate(wave, max_new_tokens=MAX_NEW)
+            outs.append([list(o) for o in res])
+            ttfts += [o.ttft_s for o in res]
+        dt = time.perf_counter() - t0
+        pm = eng.pm
+        rows[name] = dict(
+            retention=retention,
+            hit_tokens=pm.tree.hit_tokens,
+            hit_rate=pm.tree.hit_tokens / n_tokens,
+            shared_pages=pm.allocator.n_shared_hits,
+            retained_pages=len(pm.tree.retained),
+            tree_nodes=pm.tree.n_nodes,
+            evicted=pm.tree.n_evicted,
+            ttft_ms=1e3 * float(np.mean(ttfts)),
+            tok_s=sum(len(o) for w in outs for o in w) / dt)
+        streams[name] = outs
+        # the drained pool holds exactly the retained prefixes, and
+        # dropping them returns it to empty — conservation end to end
+        assert pm.allocator.n_used == len(pm.tree.retained)
+        pm.drop_prefix_cache()
+        assert pm.allocator.n_used == 0 and pm.tree.n_pages == 0
+    assert streams["retained"] == streams["baseline"], (
+        "a warm prefix hit must be byte-identical to recompute: greedy "
+        "streams diverged between retention on and off")
+    warm, cold = rows["retained"], rows["baseline"]
+    assert warm["hit_rate"] > cold["hit_rate"], (
+        "cross-request retention must lift the Zipf-trace token hit-rate "
+        f"strictly above the die-with-last-sharer baseline: "
+        f"{warm['hit_rate']:.3f} vs {cold['hit_rate']:.3f}")
+    return dict(n_prompt_tokens=n_tokens,
+                hit_rate_gain=warm["hit_rate"] - cold["hit_rate"],
+                ttft_delta_ms=warm["ttft_ms"] - cold["ttft_ms"],
+                retained=warm, baseline=cold)
+
+
+def prefix_section():
+    """The whole seventh section — the ``BENCH_prefix_cache.json``
+    payload.  Runs on its own windowless config, so ``--prefix`` can
+    skip everything else."""
+    base = reduce_config(get_config("mistral-7b")).with_(
+        block_style="skipless", dtype="float32", param_dtype="float32",
+        sliding_window=0)
+    params = init_params(jax.random.PRNGKey(0), base)
+    return dict(zipf=_serve_prefix(base, params),
+                workload=dict(waves=ZIPF_WAVES,
+                              requests_per_wave=ZIPF_REQ_PER_WAVE,
+                              heads=4, shots=3, max_new=MAX_NEW,
+                              block_size=BLOCK, max_len=MAX_LEN))
+
+
+def write_prefix_doc(doc, path: str = "") -> str:
+    """Persist the prefix-cache payload (default: benchmarks/
+    BENCH_prefix_cache.json next to this module) — the CI artifact."""
+    path = path or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_prefix_cache.json")
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+def print_prefix(doc) -> None:
+    z = doc["zipf"]
+    w = doc["workload"]
+    print(f"\nprefix cache (radix tree, cross-request retention) on "
+          f"{w['waves']}x{w['requests_per_wave']} Zipf multi-tenant "
+          f"waves ({z['n_prompt_tokens']} prompt tokens):")
+    hdr = ("mode", "hit_rate", "hit_tokens", "shared_pages",
+           "retained_pages", "evicted", "tree_nodes", "ttft_ms")
+    print(" ".join(f"{h:>14}" for h in hdr))
+    for name in ("retained", "baseline"):
+        r = dict(z[name], mode=name)
+        print(" ".join(
+            f"{r[h]:>14.3f}" if isinstance(r[h], float)
+            else f"{str(r[h]):>14}" for h in hdr))
+    print(f"  hit-rate gain +{z['hit_rate_gain']:.3f} (strictly above the "
+          f"no-retention baseline) | TTFT delta "
+          f"{z['ttft_delta_ms']:+.1f} ms (CPU, illustrative — sharing "
+          f"saves pages/HBM; prefill compute is not skipped yet)")
+    print("greedy streams token-identical with retention on and off OK")
+
+
 def _prefill_traffic(dense: Engine, paged: Engine, bucket: int):
     """``cost_analysis`` bytes of the compiled prefill program for one
     prompt bucket: dense engine, paged direct-to-page, and the legacy
@@ -509,11 +658,16 @@ def run():
 
     # sixth section: the quantized pool at equal HBM + its numerics gate
     quant_doc = quant_section()
-    return rows, prefill, merged_prefill, rows_w, obs_doc, quant_doc
+
+    # seventh section: the prefix cache on the multi-tenant Zipf waves
+    prefix_doc = prefix_section()
+    return (rows, prefill, merged_prefill, rows_w, obs_doc, quant_doc,
+            prefix_doc)
 
 
 def main():
-    rows, prefill, merged_prefill, rows_w, obs_doc, quant_doc = run()
+    (rows, prefill, merged_prefill, rows_w, obs_doc, quant_doc,
+     prefix_doc) = run()
     print(f"{N_REQ} requests, prompts 4..28 tok, +{MAX_NEW} new; equal "
           f"cache HBM ({rows[0]['cache_bytes']/1e6:.2f} MB)")
     hdr = ("weights", "cache", "peak_streams", "tok_s", "ttft_ms",
@@ -588,6 +742,10 @@ def main():
     qpath = write_quant_doc(quant_doc)
     print(f"BENCH_quant_numerics.json written -> {qpath}")
 
+    print_prefix(prefix_doc)
+    ppath = write_prefix_doc(prefix_doc)
+    print(f"BENCH_prefix_cache.json written -> {ppath}")
+
 
 def main_quant():
     """``--quant``: only the sixth section — the fast CI-artifact path."""
@@ -597,10 +755,21 @@ def main_quant():
     print(f"BENCH_quant_numerics.json written -> {path}")
 
 
+def main_prefix():
+    """``--prefix``: only the seventh section — the fast CI-artifact
+    path."""
+    doc = prefix_section()
+    print_prefix(doc)
+    path = write_prefix_doc(doc)
+    print(f"BENCH_prefix_cache.json written -> {path}")
+
+
 if __name__ == "__main__":
     import sys
     sys.path.insert(0, "src")
     if "--quant" in sys.argv[1:]:
         main_quant()
+    elif "--prefix" in sys.argv[1:]:
+        main_prefix()
     else:
         main()

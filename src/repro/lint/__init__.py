@@ -17,9 +17,11 @@ before a single token is decoded.  This package checks them:
   aliasing    audit_engine() — the host-aliasing race detector
   submitpath  audit_submit_path() — NoSyncPrefillInSubmit: the scheduled
               engine's submit must enqueue only (with positive control)
+  retention   audit_retention() — NoWriteIntoHeldPage: no write path may
+              mutate a page a peer or the prefix tree still holds
   report      human/JSON rendering (tools/jaxlint.py is the CLI)
 """
-from repro.lint import aliasing, report, submitpath, walker  # noqa: F401
+from repro.lint import aliasing, report, retention, submitpath, walker  # noqa: F401,E501
 from repro.lint.builtin import (BUILTIN_RULES, DonationEffective,  # noqa: F401
                                 NoDequantizedPoolBuffer,
                                 NoDtypePromotionDrift, NoForbiddenMatmul,
@@ -31,4 +33,5 @@ from repro.lint.rules import (Finding, LintRule, LintTarget,  # noqa: F401
 from repro.lint.sweep import (SweepReport, TargetReport,  # noqa: F401
                               register_sweep_builders, sweep, sweep_models)
 from repro.lint.aliasing import audit_engine  # noqa: F401
+from repro.lint.retention import audit_retention  # noqa: F401
 from repro.lint.submitpath import audit_submit_path  # noqa: F401

@@ -51,7 +51,8 @@ def render_rules(out=None) -> None:
 
 def to_json_dict(sweep: Optional[SweepReport] = None,
                  aliasing: Optional[List[Finding]] = None,
-                 submit: Optional[List[Finding]] = None
+                 submit: Optional[List[Finding]] = None,
+                 retention: Optional[List[Finding]] = None
                  ) -> Dict[str, Any]:
     doc: Dict[str, Any] = {"rules": {r.name: r.description
                                      for r in all_rules()}}
@@ -59,11 +60,10 @@ def to_json_dict(sweep: Optional[SweepReport] = None,
     if sweep is not None:
         doc["sweep"] = sweep.to_dict()
         ok = ok and sweep.ok
-    if aliasing is not None:
-        doc["aliasing"] = [f.to_dict() for f in aliasing]
-        ok = ok and not any(f.severity == "error" for f in aliasing)
-    if submit is not None:
-        doc["submit"] = [f.to_dict() for f in submit]
-        ok = ok and not any(f.severity == "error" for f in submit)
+    for key, findings in (("aliasing", aliasing), ("submit", submit),
+                          ("retention", retention)):
+        if findings is not None:
+            doc[key] = [f.to_dict() for f in findings]
+            ok = ok and not any(f.severity == "error" for f in findings)
     doc["ok"] = ok
     return doc

@@ -35,9 +35,13 @@ def snapshot(engine) -> Dict[str, Any]:
                       "n_cow": a.n_cow, "n_shared_hits": a.n_shared_hits,
                       "n_recycled": a.n_recycled,
                       "ring_bound": engine.pm.ring_bound,
-                      "request_page_hwm": (max(engine.pm.request_page_hwm)
-                                           if engine.pm.request_page_hwm
-                                           else 0)}
+                      # running max (O(1) host state), same exported shape
+                      # as the old per-release list's max(...)
+                      "request_page_hwm": engine.pm.request_page_hwm.max,
+                      "prefix_tree_nodes": engine.pm.tree.n_nodes,
+                      "prefix_retained_pages": len(engine.pm.tree.retained),
+                      "prefix_hit_tokens": engine.pm.tree.hit_tokens,
+                      "prefix_evicted": engine.pm.tree.n_evicted}
     return doc
 
 

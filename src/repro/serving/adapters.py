@@ -362,8 +362,10 @@ class PagedCacheAdapter(KVCacheAdapter):
     kind = "paged"
 
     def __init__(self, block_size: Optional[int] = None,
-                 n_blocks: Optional[int] = None):
+                 n_blocks: Optional[int] = None,
+                 prefix_retention: bool = True):
         self._block_size, self._n_blocks = block_size, n_blocks
+        self._prefix_retention = prefix_retention
 
     def init(self, cfg, sc):
         self.cfg, self.sc = cfg, sc
@@ -372,7 +374,8 @@ class PagedCacheAdapter(KVCacheAdapter):
             or sc.n_slots * (sc.max_len // bs)
         self.pm = pkv.PagedCacheManager(
             cfg, n_slots=sc.n_slots, max_len=sc.max_len,
-            block_size=bs, n_blocks=n_blocks)
+            block_size=bs, n_blocks=n_blocks,
+            prefix_retention=self._prefix_retention)
 
     def build_prefill(self, impl, mesh=None, params_sharding=None,
                       cache_shardings=None, qkv_sharding=None):
@@ -513,6 +516,16 @@ class PagedCacheAdapter(KVCacheAdapter):
             "pool_cow": (lambda: a.n_cow, "copy-on-write page splits"),
             "pool_prefix_hits": (lambda: a.n_shared_hits,
                                  "prefix pages shared at admit"),
+            "prefix_tree_nodes": (lambda: self.pm.tree.n_nodes,
+                                  "radix prefix-tree nodes resident"),
+            "prefix_retained_pages": (
+                lambda: len(self.pm.tree.retained),
+                "pages held only by the prefix tree (retention)"),
+            "prefix_hit_tokens": (lambda: self.pm.tree.hit_tokens,
+                                  "prompt tokens served from the prefix "
+                                  "cache"),
+            "prefix_evicted": (lambda: self.pm.tree.n_evicted,
+                               "retained pages evicted under pressure"),
         }
 
 
@@ -547,7 +560,8 @@ class PagedQ8CacheAdapter(PagedCacheAdapter):
             or sc.n_slots * (sc.max_len // bs)
         self.pm = pkv.PagedQ8CacheManager(
             cfg, n_slots=sc.n_slots, max_len=sc.max_len,
-            block_size=bs, n_blocks=n_blocks)
+            block_size=bs, n_blocks=n_blocks,
+            prefix_retention=self._prefix_retention)
 
     def build_prefill(self, impl, mesh=None, params_sharding=None,
                       cache_shardings=None, qkv_sharding=None):

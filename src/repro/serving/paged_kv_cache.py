@@ -34,6 +34,20 @@ sharer's causal mask hides positions beyond its own length, and (b) any
 append into a page with refcount > 1 first copies it (copy-on-write), and
 decode always writes position ``length`` before attending to it.
 
+The registry is a RADIX TREE over block-aligned token runs
+(``serving.radix_tree``): matching an L-token prompt walks its tokens
+once (O(L), vs the flat dict's O(L²/bs) tuple-prefix slicing) and —
+with ``prefix_retention`` on (the default) — pages of a released
+request that the tree references are ADOPTED instead of freed
+(``BlockAllocator.retain``: the tree becomes a holder), so popular
+prefixes survive their last sharer and later requests hit them warm.
+Retained pages are reclaimable: ``_alloc`` evicts LRU leaf-end
+tree-only pages under pool pressure before deferring a request.  The
+refcount invariant extends to ``ref[p] == live slots mapping p +
+(1 if tree-retained)``; every write path already copies-on-write at
+ref > 1, so a retained-and-reshared page can never be mutated in place
+(the detach-on-shared rule covers tree holds for free).
+
 Sliding-window ring-of-pages: when the config has a sliding window, a
 request's block table is a bounded RING of ``ceil(window/bs)+1`` slots
 (absolute block b at slot b % ring — ``kernels.paging``), so a windowed
@@ -61,7 +75,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +83,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serving import hostbufs
+from repro.serving.radix_tree import RadixPrefixTree
 from repro.models.transformer import (PagedDecodeCache, PagedQ8DecodeCache,
                                       init_paged_cache, init_paged_q8_cache,
                                       layer_plan, paged_table_blocks)
@@ -160,6 +175,15 @@ class BlockAllocator:
             self.ref[i] += 1
         self.n_shared_hits += len(ids)
 
+    def retain(self, ids: List[int]) -> None:
+        """Take a reference without counting a shared hit — the prefix
+        tree adopting a released request's pages, or an admit pinning
+        its matched chain against eviction before it knows the
+        admission will succeed."""
+        for i in ids:
+            assert self.ref[i] > 0, f"retain of free page {i}"
+            self.ref[i] += 1
+
     def release(self, ids: List[int]) -> List[int]:
         """Drop one reference per page; returns the pages that became free."""
         freed = []
@@ -170,6 +194,35 @@ class BlockAllocator:
                 self._free.append(i)
                 freed.append(i)
         return freed
+
+
+class RequestPageHwm:
+    """Running max / count / last of per-request page high-water marks.
+
+    Replaces an unbounded per-release ``List[int]`` (a host-memory leak
+    in a long-running server): every consumer only ever asked for the
+    MAX (obs export), the LAST (tests) or emptiness, so the state is
+    three ints — O(1) in requests served."""
+
+    __slots__ = ("max", "count", "last")
+
+    def __init__(self):
+        self.max = 0
+        self.count = 0
+        self.last = 0
+
+    def record(self, hwm: int) -> None:
+        if hwm > self.max:
+            self.max = hwm
+        self.last = hwm
+        self.count += 1
+
+    def __bool__(self) -> bool:
+        return self.count > 0
+
+    def __repr__(self):
+        return (f"RequestPageHwm(max={self.max}, last={self.last}, "
+                f"count={self.count})")
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +259,8 @@ class PagedCacheManager:
     """
 
     def __init__(self, cfg: ModelConfig, *, n_slots: int, max_len: int,
-                 block_size: int, n_blocks: int):
+                 block_size: int, n_blocks: int,
+                 prefix_retention: bool = True):
         assert layer_plan(cfg)["kind"] == "attn", (
             "paged serving supports attention-only stacks")
         assert max_len % block_size == 0, (max_len, block_size)
@@ -234,11 +288,15 @@ class PagedCacheManager:
         # garbage KV write instead of corrupting half-prefilled or
         # prefix-shared pages (repro.serving.sched)
         self.shielded: set = set()
-        self.request_page_hwm: List[int] = []  # hwm of each released slot
-        # prefix registry: token prefix -> physical page holding its tail
-        # block; _block_keys is the reverse map for cleanup on free.
-        self._registry: Dict[Tuple[int, ...], int] = {}
-        self._block_keys: Dict[int, List[Tuple[int, ...]]] = {}
+        self.request_page_hwm = RequestPageHwm()
+        # prefix registry: radix tree over block-aligned token runs.  With
+        # prefix_retention the tree ADOPTS a released request's registered
+        # pages (becomes a refcount holder) instead of letting them free,
+        # and _alloc evicts them LRU leaf-end first under pool pressure;
+        # without it the tree is a drop-in replacement for the old flat
+        # dict (entries die with their page's last sharer).
+        self.prefix_retention = prefix_retention
+        self.tree = RadixPrefixTree(block_size)
 
     @property
     def ring_bound(self) -> int:
@@ -296,39 +354,48 @@ class PagedCacheManager:
     def pool_bytes(self) -> int:
         return int(self.k.size + self.v.size) * self.k.dtype.itemsize
 
-    # -- prefix sharing --------------------------------------------------
+    # -- prefix sharing (radix tree) -------------------------------------
 
-    def _match_prefix(self, tokens: np.ndarray) -> List[int]:
-        """Longest chain of already-resident pages covering a prefix of
-        ``tokens``: full blocks by content chain, plus the trailing partial
-        block on an exact whole-prompt match."""
-        toks = tuple(int(t) for t in tokens)
-        ids: List[int] = []
-        for i in range(len(toks) // self.bs):
-            bid = self._registry.get(toks[: (i + 1) * self.bs])
-            if bid is None:
-                return ids
-            ids.append(bid)
-        if len(toks) % self.bs:
-            bid = self._registry.get(toks)
-            if bid is not None:
-                ids.append(bid)
-        return ids
+    def _drop_page(self, bid: int) -> None:
+        """Page ``bid``'s bytes are being rewritten (ring recycle) or have
+        been freed: registry state must die with them.  The tree also
+        removes the page's now-unreachable subtree; any RETAINED pages
+        that fall out with it lose the tree's reference here, so a
+        retained page can never outlive its resident chain."""
+        orphans = self.tree.drop_page(bid)
+        if orphans:
+            freed = self.allocator.release(orphans)
+            assert len(freed) == len(orphans), (
+                "tree-orphaned page still held by a live slot")
 
-    def _register(self, tokens: np.ndarray, blocks: List[int],
-                  first_new: int) -> None:
-        toks = tuple(int(t) for t in tokens)
-        nb_full = len(toks) // self.bs
-        for i in range(first_new, len(blocks)):
-            key = toks[: (i + 1) * self.bs] if i < nb_full else toks
-            if key not in self._registry:
-                self._registry[key] = blocks[i]
-                self._block_keys.setdefault(blocks[i], []).append(key)
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """``allocator.alloc`` with retention-aware admission: under pool
+        pressure, reclaim LRU retained leaf-end pages (whose only
+        reference is the tree's) before reporting exhaustion.  Pages a
+        live slot maps have ref >= 1 from the slot, so the ref == 1
+        guard means eviction can only ever free tree-only pages."""
+        ids = self.allocator.alloc(n)
+        if ids is not None or not self.prefix_retention:
+            return ids
+        evicted = self.tree.evict(
+            n - self.allocator.n_free,
+            lambda p: int(self.allocator.ref[p]) == 1)
+        if evicted:
+            freed = self.allocator.release(evicted)
+            assert len(freed) == len(evicted), (
+                "evicted page had holders beyond the tree")
+        return self.allocator.alloc(n)
 
-    def _drop_registry(self, bid: int) -> None:
-        for key in self._block_keys.pop(bid, []):
-            if self._registry.get(key) == bid:
-                del self._registry[key]
+    def drop_prefix_cache(self) -> int:
+        """Evict EVERY reclaimable retained page (tests / benchmarks:
+        return the pool to live-requests-only state).  Retained pages
+        pinned by a live sharer stay.  Returns pages reclaimed."""
+        evicted = self.tree.evict(
+            self.allocator.n_blocks,
+            lambda p: int(self.allocator.ref[p]) == 1)
+        if evicted:
+            self.allocator.release(evicted)
+        return len(evicted)
 
     # -- request lifecycle ----------------------------------------------
 
@@ -359,11 +426,18 @@ class PagedCacheManager:
                 f"prompt of {len(tokens)} tokens exceeds max_len "
                 f"({self.max_blocks * self.bs})")
         b_min = self._first_live_block(len(tokens))
-        shared = self._match_prefix(tokens) if b_min == 0 else []
-        fresh = self.allocator.alloc(nb - b_min - len(shared))
+        shared, covered = self.tree.match(tokens) if b_min == 0 else ([], 0)
+        # pin the matched chain BEFORE allocating: _alloc may evict
+        # retained pages under pressure, and the pages just matched must
+        # not be candidates while this admission is in flight
+        self.allocator.retain(shared)
+        fresh = self._alloc(nb - b_min - len(shared))
         if fresh is None:
+            dropped = self.allocator.release(shared)  # unpin
+            assert not dropped, "pinned tree page had no other holder"
             return None
-        self.allocator.fork(shared)
+        self.allocator.n_shared_hits += len(shared)
+        self.tree.hit_tokens += covered
         chain = shared + fresh  # absolute blocks b_min..nb-1, in order
         if self.ring:
             pages = [-1] * self.ring
@@ -382,7 +456,7 @@ class PagedCacheManager:
         self.tables[slot, :len(mapped)] = mapped
         self.lengths[slot] = len(tokens)
         if b_min == 0:
-            self._register(tokens, chain, len(shared))
+            self.tree.insert(tokens, chain)
         return len(shared)
 
     def prefill_block_ids(self, slot: int, padded_len: int) -> np.ndarray:
@@ -418,7 +492,9 @@ class PagedCacheManager:
         copy — every offset of the new block is rewritten before any query
         can attend it."""
         bid = info.blocks[idx]
-        fresh = self.allocator.alloc(1)
+        # _alloc may evict retained pages; the CoW source is safe — its
+        # ref > 1 (that's why we're detaching) fails the eviction guard
+        fresh = self._alloc(1)
         if fresh is None:
             return False
         if copy:
@@ -440,7 +516,7 @@ class PagedCacheManager:
         rs = b % self.ring
         bid = info.blocks[rs]
         if bid < 0:  # ring slot never entered: map a fresh page
-            fresh = self.allocator.alloc(1)
+            fresh = self._alloc(1)
             if fresh is None:
                 return False
             info.blocks[rs] = fresh[0]
@@ -456,10 +532,12 @@ class PagedCacheManager:
             return True
         # window rolled past the slot's old block: recycle
         if self.allocator.ref[bid] > 1:
+            # a prefix-sharing peer OR the tree's retention still holds
+            # the old bytes: detach, never rewrite in place
             if not self._cow(slot, info, rs, copy=False):
                 return False
         else:
-            self._drop_registry(bid)  # bytes no longer hold the prefix
+            self._drop_page(bid)  # bytes no longer hold the prefix
         self.allocator.n_recycled += 1
         info.abs_blocks[rs] = b
         return True
@@ -478,7 +556,7 @@ class PagedCacheManager:
         if self.ring:
             return self._ensure_ring_block(slot, info, li)
         if li >= len(info.blocks):
-            fresh = self.allocator.alloc(1)
+            fresh = self._alloc(1)
             if fresh is None:
                 return False
             info.blocks.append(fresh[0])
@@ -495,14 +573,23 @@ class PagedCacheManager:
 
     def release(self, slot: int) -> None:
         """Return a finished/preempted request's pages (shared pages stay
-        resident for their other holders)."""
+        resident for their other holders).  With ``prefix_retention``,
+        pages the radix tree references are ADOPTED first — the tree
+        takes a reference (``retained``) so registered prefixes survive
+        their last sharer until pool pressure evicts them."""
         info = self._slots.pop(slot, None)
         self.shielded.discard(slot)
         if info is None:
             return
-        self.request_page_hwm.append(info.hwm)
-        for bid in self.allocator.release([p for p in info.blocks if p >= 0]):
-            self._drop_registry(bid)
+        self.request_page_hwm.record(info.hwm)
+        live = [p for p in info.blocks if p >= 0]
+        if self.prefix_retention:
+            for p in live:
+                if p not in self.tree.retained and self.tree.references(p):
+                    self.allocator.retain([p])
+                    self.tree.retained.add(p)
+        for bid in self.allocator.release(live):
+            self._drop_page(bid)
         self.tables[slot, :] = -1
         self.lengths[slot] = 0
 
@@ -541,11 +628,15 @@ class PagedCacheManager:
                              first_owned=0, hwm=0)
             shared: List[int] = []
         else:
-            shared = self._match_prefix(tokens)
-            fresh = self.allocator.alloc(nb - len(shared))
+            shared, covered = self.tree.match(tokens)
+            self.allocator.retain(shared)  # pin vs eviction (see admit)
+            fresh = self._alloc(nb - len(shared))
             if fresh is None:
+                dropped = self.allocator.release(shared)  # unpin
+                assert not dropped, "pinned tree page had no other holder"
                 return None
-            self.allocator.fork(shared)
+            self.allocator.n_shared_hits += len(shared)
+            self.tree.hit_tokens += covered
             info = _SlotInfo(blocks=shared + fresh,
                              first_owned=len(shared),
                              hwm=nb)
@@ -604,7 +695,7 @@ class PagedCacheManager:
         info = self._slots[slot]
         self.lengths[slot] = len(tokens)
         if not self.ring:
-            self._register(tokens, info.blocks, info.first_owned)
+            self.tree.insert(tokens, info.blocks)
 
     def unshield(self, slot: int) -> None:
         """Expose the slot's true table row to decode steps again (called

@@ -162,7 +162,7 @@ def test_windowed_cross_product_matches_unmerged_dense_xla_oracle(
         assert pm.allocator.n_recycled > 0, (
             "the 7-token prompt + decode must roll the ring over a "
             "recycled page — otherwise this grid isn't testing recycling")
-        assert max(pm.request_page_hwm) <= pm.ring_bound, (
+        assert pm.request_page_hwm.max <= pm.ring_bound, (
             "a windowed request held more pages than ceil(window/block)+1")
 
 
@@ -563,7 +563,7 @@ def test_q8_windowed_grid_rings_and_stays_self_consistent(
     assert pm.allocator.n_recycled > 0, (
         "the 7-token prompt + decode must roll the ring over a recycled "
         "page — otherwise this grid isn't testing q8 scale recycling")
-    assert max(pm.request_page_hwm) <= pm.ring_bound
+    assert pm.request_page_hwm.max <= pm.ring_bound
 
 
 def test_q8_prefill_logit_error_bounded_at_full_shape(setup_q8):

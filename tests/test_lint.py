@@ -425,3 +425,62 @@ def test_findings_serialize():
     d = f.to_dict()
     assert d["rule"] == "R" and d["detail"] == {"n": 1}
     assert "error" in str(f)
+
+
+# ---------------------------------------------------------------------------
+# retention audit (NoWriteIntoHeldPage)
+# ---------------------------------------------------------------------------
+
+def test_retention_audit_clean_on_real_managers():
+    """The full audit — fp absolute + ring + q8 managers AND the
+    sabotaged positive control — must come back empty."""
+    from repro.lint import retention
+    findings = retention.audit_retention()
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_retention_audit_flags_write_into_shared_page(small_model):
+    """Strip detach-on-shared from ensure_appendable (the PR 5-era bug
+    class, now also covering tree-retained pages) — the append seam must
+    fire with the refcount evidence."""
+    from repro.lint import retention
+    from repro.serving.paged_kv_cache import PagedCacheManager
+    cfg, _ = small_model
+    pm = PagedCacheManager(cfg, n_slots=4, max_len=64, block_size=8,
+                           n_blocks=24)
+
+    def bad(self, slot):
+        info = self._slots[slot]
+        li = int(self.lengths[slot]) // self.bs
+        if self.ring or li >= len(info.blocks):
+            return PagedCacheManager.ensure_appendable(self, slot)
+        return True  # append in place even when the page is held
+
+    pm.ensure_appendable = types.MethodType(bad, pm)
+    findings = retention.audit_manager(pm, "sabotaged")
+    assert findings, "stripped detach-on-shared must fire the audit"
+    assert all(f.rule == retention.RULE_RETENTION for f in findings)
+    assert any(f.detail and f.detail.get("seam") == "ensure_appendable"
+               and f.detail.get("ref", 0) > 1 for f in findings)
+
+
+def test_retention_audit_flags_eviction_of_live_page(small_model):
+    """Evict with the refcount guard stripped while a live slot is
+    re-sharing the retained chain — the eviction seam must flag every
+    victim a request still reads."""
+    from repro.lint import retention
+    from repro.serving.paged_kv_cache import PagedCacheManager
+    cfg, _ = small_model
+    pm = PagedCacheManager(cfg, n_slots=4, max_len=64, block_size=8,
+                           n_blocks=10)
+    findings = []
+    with retention._armed(pm, findings, "sabotaged-evict"):
+        prompt = (np.arange(27, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+        assert pm.admit(0, prompt) == 0
+        pm.release(0)                      # chain retained by the tree
+        assert pm.admit(1, prompt.copy()) == 4  # warm hit: retained+live
+        # the sabotage: evict regardless of refcount (the manager's real
+        # call sites always pass the ref==1 guard)
+        assert pm.tree.evict(4, lambda p: True)
+    assert any(f.detail and f.detail.get("seam") == "tree.evict"
+               and f.detail.get("ref", 0) != 1 for f in findings), findings

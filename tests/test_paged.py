@@ -137,8 +137,14 @@ def test_manager_prefix_sharing_and_release():
     assert (m.tables[0, :2] == m.tables[1, :2]).all(), "full pages stay shared"
     m.release(0)
     m.release(1)
+    # prefix retention: the registered chain (2 full pages + the prompt
+    # tail) survives its last sharer, held by the radix tree alone
+    assert m.allocator.n_used == 3 == len(m.tree.retained)
+    assert m.admit(2, toks) == 3, "a later admit hits the retained chain"
+    m.release(2)
+    assert m.drop_prefix_cache() == 3
     assert m.allocator.n_used == 0, "all pages must return to the free list"
-    assert m._registry == {} and m._block_keys == {}
+    assert m.tree.n_pages == 0 and m.tree.n_nodes == 0
 
 
 def test_manager_admission_control():
@@ -193,6 +199,9 @@ def test_paged_engine_matches_dense_and_oracle(n_kv, impl):
     assert out_p == out_d
     for p, o in zip(prompts, out_p):
         assert o == _greedy_oracle(params, cfg, p, 6), p[:3]
+    assert paged.pm.allocator.n_used == len(paged.pm.tree.retained), \
+        "drained engine holds only tree-retained prefix pages"
+    paged.pm.drop_prefix_cache()
     assert paged.pm.allocator.n_used == 0, "drained engine must free pool"
 
 

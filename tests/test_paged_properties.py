@@ -15,8 +15,10 @@ with a deliberately tiny pool, and checks after EVERY op:
     ``ceil(window/block_size) + 1`` pages — checked both against the
     manager's own table and against an INDEPENDENT pure-python model of
     the ring-slot set a request's (prompt length, decoded tokens) implies;
-  * drained pool: once every slot is released, ``n_used == 0`` and the
-    prefix registry is empty.
+  * conservation with RETENTION: slot-mapped pages + tree-retained pages
+    + free pages == pool, and ``ref[p]`` == live sharers + (1 if the
+    radix tree retains p); after draining every slot the pool holds only
+    tree-retained pages, and ``drop_prefix_cache`` returns it to empty.
 
 Marked ``property``: the CI ``property`` job runs this file with a raised
 example budget (``PROPERTY_EXAMPLES``); tier-1 keeps the fast default and
@@ -81,20 +83,31 @@ def _check_invariants(pm: PagedCacheManager, model: dict) -> None:
     assert alloc.n_free + alloc.n_used == alloc.n_blocks
 
     holders = np.zeros((alloc.n_blocks,), np.int64)
+    mapped: set = set()
     for slot, info in pm._slots.items():
         live = [p for p in info.blocks if p >= 0]
         assert len(set(live)) == len(live), "slot maps a page twice"
         assert not set(live) & set(free), "live page is on the free list"
         holders[live] += 1
+        mapped |= set(live)
         # the ring bound, against the manager's own table …
         assert len(live) <= pm.ring_bound, (slot, live)
         assert info.hwm <= pm.ring_bound
         # … and against the independent ring-slot model
         assert len(live) == model[slot].n_pages, (slot, live)
         assert int(pm.lengths[slot]) == model[slot].len
+    retained = set(pm.tree.retained)
+    assert retained <= pm.tree.pages(), "retained page left the tree"
+    assert not retained & set(free), "retained page on the free list"
+    assert pm.tree.pages() <= mapped | retained, \
+        "tree references a page with no slot and no retention"
+    for p in retained:
+        holders[p] += 1
     np.testing.assert_array_equal(
         alloc.ref, holders,
-        err_msg="refcounts must equal the number of live sharers")
+        err_msg="refcounts must equal live sharers + tree retention")
+    # pool conservation: slot-mapped + tree-retained + free == pool
+    assert mapped | retained | set(free) == set(range(alloc.n_blocks))
 
 
 def _trace_strategy():
@@ -150,9 +163,12 @@ def test_manager_trace_invariants(window, trace):
 
     for slot in sorted(model):
         pm.release(slot)
+    assert pm.allocator.n_used == len(pm.tree.retained), \
+        "drained pool may hold only tree-retained prefix pages"
+    pm.drop_prefix_cache()
     assert pm.allocator.n_used == 0, "drained pool must free every page"
-    assert pm._registry == {} and pm._block_keys == {}
-    assert all(h <= pm.ring_bound for h in pm.request_page_hwm)
+    assert pm.tree.n_pages == 0 and pm.tree.n_nodes == 0
+    assert pm.request_page_hwm.max <= pm.ring_bound
 
 
 @settings(max_examples=MAX_EXAMPLES, deadline=None)
@@ -177,7 +193,8 @@ def test_windowed_request_never_exceeds_ring_bound(window, n_prompt,
         mapped = int((pm.tables[0] >= 0).sum())
         assert mapped <= bound, (n_prompt, n_decode, mapped)
     pm.release(0)
-    assert pm.request_page_hwm[-1] <= bound
+    assert pm.request_page_hwm.last <= bound
+    pm.drop_prefix_cache()
     assert pm.allocator.n_used == 0
 
 
@@ -216,14 +233,18 @@ def _check_scales(pm, expected):
                 err_msg=f"v_scale of page {p} lost its marker")
 
 
-def _absorb_page_delta(pm, expected, before, after, d_cow, fresh_marker):
-    """Update the scale model after one op.  A CoW detach moves the
-    source page's marker to the destination (copy_block_q8 copied the
-    rows); any other newly mapped page is a fresh write and gets
+def _absorb_page_delta(pm, expected, before, after, d_cow, fresh_marker,
+                       d_recycled=0):
+    """Update the scale model after one op.  A copying CoW detach moves
+    the source page's marker to the destination (copy_block_q8 copied
+    the rows); any other newly mapped page is a fresh write and gets
     stamped.  In-place ring recycling changes no page id, so markers
-    persist by construction."""
+    persist by construction — but a recycle-DETACH (``d_recycled`` with
+    ``d_cow``: the window rolled over a page the tree or a peer still
+    holds) copies nothing, so its fresh page is stamped like any other
+    (every offset is rewritten before any query attends it)."""
     new_pages, gone = after - before, before - after
-    if d_cow and len(new_pages) == 1 and len(gone) == 1:
+    if d_cow and not d_recycled and len(new_pages) == 1 and len(gone) == 1:
         src, dst = gone.pop(), new_pages.pop()
         # the copy must already be on the device BEFORE we update the
         # model — _check_scales then proves dst carries src's rows
@@ -258,7 +279,8 @@ def test_q8_scale_rows_travel_with_their_page(window, trace):
 
     for op, sel, n in trace:
         active = sorted(model)
-        before, cow0 = all_mapped(), pm.allocator.n_cow
+        before, cow0, rec0 = (all_mapped(), pm.allocator.n_cow,
+                              pm.allocator.n_recycled)
         if op == "admit" and len(model) < N_SLOTS:
             slot = min(set(range(N_SLOTS)) - set(active))
             toks = (np.arange(n, dtype=np.int32) + (sel % 3) * 100) \
@@ -281,7 +303,8 @@ def test_q8_scale_rows_travel_with_their_page(window, trace):
             pm.release(slot)
             del model[slot]
         marker = _absorb_page_delta(pm, expected, before, all_mapped(),
-                                    pm.allocator.n_cow - cow0, marker)
+                                    pm.allocator.n_cow - cow0, marker,
+                                    pm.allocator.n_recycled - rec0)
         _check_invariants(pm, model)
         _check_scales(pm, expected)
 
@@ -304,28 +327,150 @@ def test_q8_scales_survive_cow_and_recycle_without_hypothesis():
         return {p for s in pm._slots for p in _live_pages(pm, s)}
 
     for slot, n in ((0, 20), (1, 20)):  # identical prompts: shared pages
-        before, cow0 = all_mapped(), pm.allocator.n_cow
+        before, cow0, rec0 = (all_mapped(), pm.allocator.n_cow,
+                              pm.allocator.n_recycled)
         assert pm.admit(slot, np.arange(n, dtype=np.int32)) is not None
         model[slot] = RefSlot(n, 16)
         pm.prefill_block_ids(slot, n)
         marker = _absorb_page_delta(pm, expected, before, all_mapped(),
-                                    pm.allocator.n_cow - cow0, marker)
+                                    pm.allocator.n_cow - cow0, marker,
+                                    pm.allocator.n_recycled - rec0)
         _check_scales(pm, expected)
     assert pm.allocator.n_shared_hits > 0, "prompts must actually share"
     for _ in range(24):
         for slot in (0, 1):
-            before, cow0 = all_mapped(), pm.allocator.n_cow
+            before, cow0, rec0 = (all_mapped(), pm.allocator.n_cow,
+                              pm.allocator.n_recycled)
             if pm.ensure_appendable(slot):
                 pm.advance(slot)
                 model[slot].step()
             marker = _absorb_page_delta(pm, expected, before, all_mapped(),
-                                        pm.allocator.n_cow - cow0, marker)
+                                        pm.allocator.n_cow - cow0, marker,
+                                        pm.allocator.n_recycled - rec0)
             _check_invariants(pm, model)
             _check_scales(pm, expected)
     assert pm.allocator.n_cow > 0 or pm.allocator.n_recycled > 0
     for slot in (0, 1):
         pm.release(slot)
     assert pm.allocator.n_used == 0
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant Zipf traffic vs an independent radix model
+# ---------------------------------------------------------------------------
+
+# ~Zipf(1) popularity over 4 tenant heads: rank r drawn with weight 1/2^r
+ZIPF_RANKS = [0] * 8 + [1] * 4 + [2] * 2 + [3]
+
+
+def _zipf_prompt(vocab, rank, depth, sfx_len, sfx_seed):
+    """Tenant head (Zipf-popular system prompt, 2 blocks) + a nested
+    few-shot stack (each shot one block, prefix-of-each-other across
+    depths) + a unique user suffix — the multi-tenant serving shape
+    where cross-request retention pays."""
+    head = (np.arange(2 * BLOCK, dtype=np.int32) * 7 + 1
+            + rank * 1000) % vocab
+    shots = [(np.arange(BLOCK, dtype=np.int32) * 3 + 2 + d * 500) % vocab
+             for d in range(depth)]
+    sfx = (np.arange(sfx_len, dtype=np.int32) * 11 + sfx_seed + 17) % vocab
+    return np.concatenate([head] + shots + [sfx]).astype(np.int32)
+
+
+def _radix_cover(reg_full, reg_whole, toks) -> int:
+    """Independent model of the tree's match: tokens covered are the
+    longest registered full-block prefix chain, or the whole prompt on
+    an exact whole-prompt registration (the tail rule)."""
+    t = tuple(int(x) for x in toks)
+    if t in reg_whole:
+        return len(t)
+    cov = 0
+    for k in range(1, len(t) // BLOCK + 1):
+        if t[:k * BLOCK] not in reg_full:
+            break
+        cov = k * BLOCK
+    return cov
+
+
+def _run_zipf_trace(trace):
+    """Serve the trace one request at a time (every request RELEASED
+    before the next admits, so live sharing never contributes — every
+    hit crosses request lifetimes via retention) on two managers: a pool
+    big enough that nothing is ever evicted, checked EXACTLY against the
+    independent radix model, and the tiny default pool, where eviction
+    makes the model an upper bound.  Invariants checked after every op."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    big = PagedCacheManager(cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
+                            block_size=BLOCK, n_blocks=64)
+    small = PagedCacheManager(cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
+                              block_size=BLOCK, n_blocks=N_BLOCKS)
+    reg_full, reg_whole = set(), set()
+    expected_hits = 0
+    for rank, depth, sfx_len, sfx_seed, n_dec in trace:
+        toks = _zipf_prompt(cfg.vocab_size, rank, depth, sfx_len, sfx_seed)
+        want = _radix_cover(reg_full, reg_whole, toks)
+        _, got = big.tree.match(toks)
+        assert got == want, "tree coverage diverged from the radix model"
+        _, got_small = small.tree.match(toks)
+        assert got_small <= want, "eviction can only lose coverage"
+        for pm in (big, small):
+            if pm.admit(0, toks) is None:
+                assert pm is small, "the big pool must never defer"
+                continue
+            model = {0: RefSlot(len(toks), 0)}
+            _check_invariants(pm, model)
+            for _ in range(n_dec):
+                if int(pm.lengths[0]) + 1 >= MAX_LEN:
+                    break
+                if pm.ensure_appendable(0):
+                    pm.advance(0)
+                    model[0].step()
+                _check_invariants(pm, model)
+            pm.release(0)
+            _check_invariants(pm, {})
+        expected_hits += want
+        t = tuple(int(x) for x in toks)
+        for k in range(1, len(t) // BLOCK + 1):
+            reg_full.add(t[:k * BLOCK])
+        if len(t) % BLOCK:
+            reg_whole.add(t)
+    assert big.tree.hit_tokens == expected_hits, (
+        "hit-token accounting diverged from the radix model")
+    assert small.tree.hit_tokens <= expected_hits
+    for pm in (big, small):
+        assert pm.allocator.n_used == len(pm.tree.retained)
+        pm.drop_prefix_cache()
+        assert pm.allocator.n_used == 0
+        assert pm.tree.n_pages == 0 and pm.tree.n_nodes == 0
+    return big, small
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(trace=st.lists(
+    st.tuples(st.sampled_from(ZIPF_RANKS),   # tenant head, Zipf-weighted
+              st.integers(min_value=0, max_value=3),    # few-shot depth
+              st.integers(min_value=0, max_value=5),    # suffix length
+              st.integers(min_value=0, max_value=50),   # suffix content
+              st.integers(min_value=0, max_value=10)),  # decode steps
+    min_size=1, max_size=25))
+def test_zipf_multi_tenant_matches_radix_model(trace):
+    _run_zipf_trace(trace)
+
+
+def test_zipf_trace_runs_without_hypothesis():
+    """Tier-1 sanity: a fixed Zipf trace exercises the radix-model
+    comparison (and really fires eviction on the tiny pool) even when
+    hypothesis is stubbed out."""
+    rng = np.random.RandomState(0)
+    trace = [(ZIPF_RANKS[rng.randint(len(ZIPF_RANKS))],
+              int(rng.randint(0, 4)), int(rng.randint(0, 6)),
+              int(rng.randint(0, 51)), int(rng.randint(0, 11)))
+             for _ in range(20)]
+    # every tenant at full depth with a unique suffix: guarantees the
+    # retained footprint overflows the tiny pool, so eviction fires
+    trace += [(r, 3, 5, 90 + r, 2) for r in range(4)]
+    _, small = _run_zipf_trace(trace)
+    assert small.tree.n_evicted > 0, (
+        "the tiny pool must actually exercise eviction")
 
 
 def test_hypothesis_is_exercised():

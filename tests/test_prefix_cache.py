@@ -1,0 +1,221 @@
+"""Radix-tree prefix cache: cross-request retention regressions.
+
+Covers the PR's bugfix surface end to end:
+  * the per-request page high-water tracker is O(1) in requests served
+    (it replaced an unbounded ``List[int]`` — a host leak in a
+    long-running server) while keeping every exported stat;
+  * eviction / ring recycle fully clears registry state — a re-admitted
+    prompt can never match a page whose bytes were reclaimed;
+  * a WARM prefix hit (pages held only by the tree across request
+    lifetimes) is byte-identical to recomputing: greedy streams match a
+    cold-cache engine exactly, across fp/q8 pools and weight styles;
+  * retention off restores the old flat-registry lifecycle (entries die
+    with their page's last sharer).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import merge_skipless
+from repro.models import init_params
+from repro.serving import (Engine, PagedCacheAdapter, PagedQ8CacheAdapter,
+                           ServeConfig)
+from repro.serving.paged_kv_cache import (PagedCacheManager, RequestPageHwm)
+
+BLOCK = 8
+
+
+def _mk_pm(cfg=None, *, n_blocks=10, window=0, retention=True):
+    cfg = cfg or reduce_config(get_config("llama3.2-1b"))
+    if window:
+        cfg = cfg.with_(sliding_window=window)
+    return PagedCacheManager(cfg, n_slots=4, max_len=64, block_size=BLOCK,
+                             n_blocks=n_blocks, prefix_retention=retention)
+
+
+def _conserved(pm):
+    """Pool conservation: slot-mapped + tree-retained + free == pool,
+    refcounts == live sharers + retention."""
+    alloc = pm.allocator
+    free = set(alloc._free)
+    holders = np.zeros((alloc.n_blocks,), np.int64)
+    mapped = set()
+    for info in pm._slots.values():
+        live = [p for p in info.blocks if p >= 0]
+        holders[live] += 1
+        mapped |= set(live)
+    retained = set(pm.tree.retained)
+    for p in retained:
+        holders[p] += 1
+    np.testing.assert_array_equal(alloc.ref, holders)
+    assert not retained & free and not mapped & free
+    assert mapped | retained | free == set(range(alloc.n_blocks))
+
+
+# ---------------------------------------------------------------------------
+# satellite: the high-water tracker is O(1) in requests served
+# ---------------------------------------------------------------------------
+
+def test_request_page_hwm_state_is_o1():
+    """Serve/release far more requests than any bound and assert the
+    tracker's state stays three ints — the old list grew per release."""
+    # no containers anywhere: __slots__ pins the state, no __dict__ to
+    # hide a list in, and every slot holds a plain int
+    assert RequestPageHwm.__slots__ == ("max", "count", "last")
+    assert not hasattr(RequestPageHwm(), "__dict__")
+
+    pm = _mk_pm(n_blocks=24)
+    n_requests = 500
+    for i in range(n_requests):
+        toks = (np.arange(4 + (i % 3) * 8, dtype=np.int32) * 7 + i) % 97
+        assert pm.admit(0, toks) is not None
+        pm.release(0)
+        pm.drop_prefix_cache()  # keep the tiny pool drained as we spin
+    hwm = pm.request_page_hwm
+    assert hwm.count == n_requests
+    assert hwm.max == 3  # 20-token prompts: ceil(20/8) pages
+    assert 1 <= hwm.last <= hwm.max
+    assert all(isinstance(getattr(hwm, s), int)
+               for s in RequestPageHwm.__slots__)
+    # emptiness + repr contracts consumers rely on
+    assert bool(hwm) and not bool(RequestPageHwm())
+    assert "count=500" in repr(hwm)
+
+
+# ---------------------------------------------------------------------------
+# satellite: eviction / recycle fully clears registry state
+# ---------------------------------------------------------------------------
+
+def test_evicted_prefix_never_matches_on_readmit():
+    """Evict a retained chain under pressure, then re-admit the SAME
+    prompt: zero stale matches (its old pages now hold other bytes) and
+    conservation holds throughout."""
+    pm = _mk_pm(n_blocks=10)
+    prompt = (np.arange(27, dtype=np.int32) * 3 + 1) % 97  # 4 pages
+    assert pm.admit(0, prompt) == 0
+    pm.release(0)
+    assert len(pm.tree.retained) == 4
+    _conserved(pm)
+
+    # pressure: a distinct 8-page prompt needs 2 more than the free
+    # list holds — eviction reclaims exactly those, leaf-end first, so
+    # the chain is consumed back to front (tail, then last full block)
+    big = (np.arange(8 * BLOCK, dtype=np.int32) * 7 + 2) % 97
+    assert pm.admit(1, big) == 0
+    assert pm.tree.n_evicted == 2, "evict the minimum, back to front"
+    _conserved(pm)
+    pages, covered = pm.tree.match(prompt)
+    assert len(pages) == 2 and covered == 2 * BLOCK, (
+        "the surviving front of the chain must still match — only the "
+        "evicted tail may disappear")
+    pm.release(1)
+    pm.drop_prefix_cache()
+    _conserved(pm)
+
+    pages, covered = pm.tree.match(prompt)
+    assert pages == [] and covered == 0, "stale match after eviction"
+    assert pm.admit(2, prompt) == 0, "re-admit must share nothing"
+    _conserved(pm)
+    pm.release(2)
+    pm.drop_prefix_cache()
+    assert pm.allocator.n_used == 0
+    assert pm.tree.n_pages == 0 and pm.tree.n_nodes == 0
+
+
+def test_ring_recycle_clears_registry_for_retained_chain():
+    """Windowed: a later request's ring rolls IN PLACE over its own
+    solely-owned registered pages — the tree entry (and any retained
+    descendants) must die with the bytes, so the prompt never matches
+    stale content afterwards."""
+    pm = _mk_pm(n_blocks=10, window=16)  # ring = 3
+    prompt = (np.arange(12, dtype=np.int32) * 5 + 1) % 97  # fits window
+    assert pm.admit(0, prompt) == 0
+    # decode across the window: the ring recycles the registered pages
+    while int(pm.lengths[0]) < 40:
+        assert pm.ensure_appendable(0)
+        pm.advance(0)
+        _conserved(pm)
+    assert pm.allocator.n_recycled > 0
+    pages, covered = pm.tree.match(prompt)
+    assert pages == [] and covered == 0, (
+        "rolled-over page still matches its registered prompt")
+    pm.release(0)
+    assert pm.allocator.n_used == len(pm.tree.retained)
+    pm.drop_prefix_cache()
+    assert pm.allocator.n_used == 0
+    _conserved(pm)
+
+
+def test_retention_off_restores_old_registry_lifecycle():
+    """``prefix_retention=False``: entries die with their page's last
+    sharer — release returns the pool to empty, nothing survives for a
+    later admit to hit."""
+    pm = _mk_pm(n_blocks=10, retention=False)
+    prompt = (np.arange(20, dtype=np.int32) * 3 + 2) % 97
+    assert pm.admit(0, prompt) == 0
+    assert pm.admit(1, prompt.copy()) == 3, "live sharing still works"
+    pm.release(0)
+    pm.release(1)
+    assert pm.allocator.n_used == 0, "no retention: release frees all"
+    assert pm.tree.n_pages == 0 and not pm.tree.retained
+    assert pm.admit(2, prompt.copy()) == 0, "nothing survives to hit"
+    pm.release(2)
+    assert pm.allocator.n_used == 0
+
+
+# ---------------------------------------------------------------------------
+# warm hit == recompute, across pools and weight styles
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduce_config(get_config("llama3.2-1b")).with_(
+        block_style="skipless")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("cache_cls,merged", [
+    (PagedCacheAdapter, False),
+    (PagedCacheAdapter, True),
+    (PagedQ8CacheAdapter, False),
+    (PagedQ8CacheAdapter, True),
+])
+def test_warm_prefix_hit_token_identical_to_cold(small_model, cache_cls,
+                                                 merged):
+    """Two serve waves on one engine: wave 2 shares wave 1's prompt head
+    AFTER every wave-1 request released, so its pages come from the
+    tree's retention.  The warm streams must equal a cold-cache engine's
+    (every page recomputed) token for token."""
+    cfg, params = small_model
+    if merged:
+        params, cfg = merge_skipless(params, cfg, "qp")
+    head = (np.arange(16, dtype=np.int32) * 5 + 1) % cfg.vocab_size
+    wave1 = [head.copy(),
+             np.concatenate([head, np.full((4,), 7, np.int32)])]
+    wave2 = [np.concatenate([head, np.full((3,), 11, np.int32)]),
+             head.copy()]
+
+    def engine(retention):
+        return Engine(cfg, params, ServeConfig(n_slots=2, max_len=64),
+                      cache=cache_cls(block_size=BLOCK, n_blocks=24,
+                                      prefix_retention=retention))
+
+    warm = engine(True)
+    warm.generate(wave1, max_new_tokens=4)
+    assert not warm.pm._slots, "wave 1 must have fully released"
+    assert warm.pm.tree.retained, "released prefix must be retained"
+    hits0 = warm.pm.tree.hit_tokens
+    warm_outs = warm.generate(wave2, max_new_tokens=4)
+    assert warm.pm.tree.hit_tokens > hits0, (
+        "wave 2 must hit the retained head across request lifetimes")
+
+    cold = engine(False)
+    cold_outs = cold.generate(wave2, max_new_tokens=4)
+    assert warm_outs == cold_outs, (
+        "a retained-page hit must be byte-identical to recomputing")
+    # drained conservation on the warm engine
+    warm.pm.drop_prefix_cache()
+    assert warm.pm.allocator.n_used == 0
+    _conserved(warm.pm)

@@ -187,6 +187,7 @@ def test_tiny_pool_preemption_and_deferral_identical(setup):
         "pool sized to starve: deferral or preemption must fire"
     for o, w in zip(outs, want):
         assert o == w
+    eng.pm.drop_prefix_cache()
     assert eng.pm.allocator.n_used == 0, "drained pool leaks no pages"
 
 

@@ -167,14 +167,22 @@ def _conservation(pm: PagedCacheManager) -> None:
     assert len(set(free)) == len(free), "double-free: duplicate free pages"
     assert alloc.n_free + alloc.n_used == alloc.n_blocks
     holders = np.zeros((alloc.n_blocks,), np.int64)
+    mapped: set = set()
     for slot, info in pm._slots.items():
         live = [p for p in info.blocks if p >= 0]
         assert len(set(live)) == len(live), "slot maps a page twice"
         assert not set(live) & set(free), "live page on the free list"
         holders[live] += 1
+        mapped |= set(live)
+    retained = set(pm.tree.retained)
+    assert not retained & set(free), "retained page on the free list"
+    for p in retained:
+        holders[p] += 1
     np.testing.assert_array_equal(
         alloc.ref, holders,
-        err_msg="refcounts must equal the number of live holders")
+        err_msg="refcounts must equal live holders + tree retention")
+    # conservation: slot-mapped + tree-retained + free == pool
+    assert mapped | retained | set(free) == set(range(alloc.n_blocks))
     assert pm.shielded <= set(pm._slots), "shield on a dead slot"
 
 
@@ -258,8 +266,11 @@ def test_chunked_lifecycle_conserves_pages(window, trace):
     for slot in sorted(state):
         pm.release(slot)
         _conservation(pm)
+    assert pm.allocator.n_used == len(pm.tree.retained), \
+        "drained pool may hold only tree-retained prefix pages"
+    pm.drop_prefix_cache()
     assert pm.allocator.n_used == 0, "drained pool leaks pages"
-    assert pm._registry == {}, \
+    assert pm.tree.n_pages == 0, \
         "registry entries must die with their pages"
     assert not pm.shielded
 
@@ -289,15 +300,17 @@ def test_chunked_q8_scales_conserved(window, trace):
     def all_mapped():
         return {p for s in pm._slots for p in _live_pages(pm, s)}
 
-    def absorb(before, cow0):
+    def absorb(before, cow0, rec0):
         marker[0] = _absorb_page_delta(pm, expected, before, all_mapped(),
                                        pm.allocator.n_cow - cow0,
-                                       marker[0])
+                                       marker[0],
+                                       pm.allocator.n_recycled - rec0)
         _conservation(pm)
         _check_scales(pm, expected)
 
     for op, sel, n in trace:
-        before, cow0 = all_mapped(), pm.allocator.n_cow
+        before, cow0, rec0 = (all_mapped(), pm.allocator.n_cow,
+                              pm.allocator.n_recycled)
         if op == "admit":
             slot = next((s for s in range(N_SLOTS) if s not in state), None)
             if slot is None:
@@ -317,7 +330,7 @@ def test_chunked_q8_scales_conserved(window, trace):
             if not pm.ensure_chunk(slot, start, end):
                 pm.release(slot)
                 del state[slot]
-                absorb(before, cow0)
+                absorb(before, cow0, rec0)
                 continue
             pm.chunk_block_ids(slot, start, end, len(v["toks"]))
             pm.set_frontier(slot, end)
@@ -342,13 +355,14 @@ def test_chunked_q8_scales_conserved(window, trace):
             slot = keys[sel % len(keys)]
             pm.release(slot)
             del state[slot]
-        absorb(before, cow0)
+        absorb(before, cow0, rec0)
 
     for slot in sorted(state):
         pm.release(slot)
         _conservation(pm)
+    pm.drop_prefix_cache()
     assert pm.allocator.n_used == 0
-    assert pm._registry == {} and not pm.shielded
+    assert pm.tree.n_pages == 0 and not pm.shielded
 
 
 def test_chunked_q8_runs_without_hypothesis():
@@ -364,10 +378,11 @@ def test_chunked_q8_runs_without_hypothesis():
     def all_mapped():
         return {p for s in pm._slots for p in _live_pages(pm, s)}
 
-    def absorb(before, cow0):
+    def absorb(before, cow0, rec0):
         marker[0] = _absorb_page_delta(pm, expected, before, all_mapped(),
                                        pm.allocator.n_cow - cow0,
-                                       marker[0])
+                                       marker[0],
+                                       pm.allocator.n_recycled - rec0)
         _conservation(pm)
         _check_scales(pm, expected)
 
@@ -375,20 +390,22 @@ def test_chunked_q8_runs_without_hypothesis():
     assert pm.admit_chunked(0, toks) is not None
     f = 0
     while f < len(toks):
-        before, cow0 = all_mapped(), pm.allocator.n_cow
+        before, cow0, rec0 = (all_mapped(), pm.allocator.n_cow,
+                              pm.allocator.n_recycled)
         end = min(f + BLOCK, len(toks))
         assert pm.ensure_chunk(0, f, end)
         pm.chunk_block_ids(0, f, end, len(toks))
         pm.set_frontier(0, end)
         f = end
-        absorb(before, cow0)
+        absorb(before, cow0, rec0)
     pm.finish_chunked(0, toks)
     pm.unshield(0)
     for _ in range(24):
-        before, cow0 = all_mapped(), pm.allocator.n_cow
+        before, cow0, rec0 = (all_mapped(), pm.allocator.n_cow,
+                              pm.allocator.n_recycled)
         if pm.ensure_appendable(0):
             pm.advance(0)
-        absorb(before, cow0)
+        absorb(before, cow0, rec0)
     assert pm.allocator.n_recycled > 0, "windowed decode must recycle"
     pm.release(0)
     _conservation(pm)
@@ -423,4 +440,5 @@ def test_chunked_lifecycle_runs_without_hypothesis():
             _conservation(pm)
         pm.release(0)
         _conservation(pm)
+        pm.drop_prefix_cache()
         assert pm.allocator.n_used == 0

@@ -46,10 +46,10 @@ else
 fi
 
 # static analysis: the registry-wide program sweep + host-aliasing audit
-# + the scheduled-engine submit-path audit, exactly what CI's `analysis`
-# job gates (tools/jaxlint.py exits non-zero on any violation or
-# coverage hole)
-python tools/jaxlint.py --sweep --aliasing --submit
+# + the scheduled-engine submit-path audit + the paged-pool retention
+# audit, exactly what CI's `analysis` job gates (tools/jaxlint.py
+# exits non-zero on any violation or coverage hole)
+python tools/jaxlint.py --sweep --aliasing --submit --retention
 echo "[check] jaxlint clean"
 
 # observability self-check: metrics math, trace-ring semantics, a real

@@ -5,7 +5,9 @@
     tools/jaxlint.py --aliasing     host-aliasing audit of real engines
     tools/jaxlint.py --submit       NoSyncPrefillInSubmit audit of the
                                     scheduled engines (+ positive control)
-    tools/jaxlint.py                all three (the CI `analysis` gate)
+    tools/jaxlint.py --retention    NoWriteIntoHeldPage audit of the paged
+                                    managers (+ positive control)
+    tools/jaxlint.py                all four (the CI `analysis` gate)
     tools/jaxlint.py --list-rules   registered rule names + descriptions
     tools/jaxlint.py --json out.json  also write the structured report
 
@@ -65,6 +67,19 @@ def _run_submit(args):
     return findings
 
 
+def _run_retention(args):
+    """NoWriteIntoHeldPage: no write/eviction path may touch a page a
+    prefix-sharing peer or the retention tree still holds (with a
+    positive control on a sabotaged manager)."""
+    from repro.lint import report, retention
+
+    findings = retention.audit_retention()
+    report.render_findings(
+        "retention audit (paged fp absolute + ring + q8, sabotage "
+        "control)", findings)
+    return findings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="jaxlint", description=__doc__)
     ap.add_argument("--sweep", action="store_true",
@@ -74,6 +89,8 @@ def main(argv=None) -> int:
                          "engines")
     ap.add_argument("--submit", action="store_true",
                     help="NoSyncPrefillInSubmit audit of scheduled engines")
+    ap.add_argument("--retention", action="store_true",
+                    help="NoWriteIntoHeldPage audit of the paged managers")
     ap.add_argument("--list-rules", action="store_true",
                     help="print registered rules and exit")
     ap.add_argument("--json", metavar="PATH",
@@ -87,17 +104,21 @@ def main(argv=None) -> int:
         report.render_rules()
         return 0
 
-    none_picked = not (args.sweep or args.aliasing or args.submit)
+    none_picked = not (args.sweep or args.aliasing or args.submit
+                       or args.retention)
     run_sweep = args.sweep or none_picked
     run_alias = args.aliasing or none_picked
     run_submit = args.submit or none_picked
+    run_retention = args.retention or none_picked
 
     sweep_rep = _run_sweep(args) if run_sweep else None
     alias_findings = _run_aliasing(args) if run_alias else None
     submit_findings = _run_submit(args) if run_submit else None
+    retention_findings = _run_retention(args) if run_retention else None
 
     doc = report.to_json_dict(sweep=sweep_rep, aliasing=alias_findings,
-                              submit=submit_findings)
+                              submit=submit_findings,
+                              retention=retention_findings)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(doc, fh, indent=2)

@@ -101,6 +101,13 @@ def selftest() -> int:
                 "decode_step_p99_ms", "pool_peak_used", "preempted",
                 "deferred"):
         assert key in doc["headline"], key
+    # the prefix-cache gauges (radix tree + retention) must surface in
+    # both the paged pool section and the lazy-gauge metrics
+    for g in ("prefix_tree_nodes", "prefix_retained_pages",
+              "prefix_hit_tokens", "prefix_evicted"):
+        assert g in doc["pool"], (g, sorted(doc["pool"]))
+        assert g in doc["metrics"], (g, sorted(doc["metrics"]))
+    assert doc["pool"]["request_page_hwm"] == eng.pm.request_page_hwm.max
     counts = O.validate_perfetto(eng.obs.trace.to_perfetto())
     assert counts.get("X", 0) > 0 and counts.get("M", 0) > 0
     for r in range(4):  # exactly one terminal event per request
