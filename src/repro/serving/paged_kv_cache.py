@@ -361,12 +361,17 @@ class PagedCacheManager:
         been freed: registry state must die with them.  The tree also
         removes the page's now-unreachable subtree; any RETAINED pages
         that fall out with it lose the tree's reference here, so a
-        retained page can never outlive its resident chain."""
+        retained page can never outlive its resident chain.  An orphan is
+        not necessarily FREED by that release: a live slot whose ring
+        already rolled past ``bid`` may still map a retained descendant
+        (its window covers the orphan but no longer the dropped
+        ancestor), in which case ``ref`` simply falls back to the
+        live-sharer count and the page dies with its last slot.
+        (``allocator.release`` asserts each orphan actually held the
+        reference being dropped.)"""
         orphans = self.tree.drop_page(bid)
         if orphans:
-            freed = self.allocator.release(orphans)
-            assert len(freed) == len(orphans), (
-                "tree-orphaned page still held by a live slot")
+            self.allocator.release(orphans)
 
     def _alloc(self, n: int) -> Optional[List[int]]:
         """``allocator.alloc`` with retention-aware admission: under pool

@@ -42,6 +42,7 @@ the page through the normal alloc path.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 TokenRun = Tuple[int, ...]
@@ -258,7 +259,11 @@ class RadixPrefixTree:
         node.children.clear()
         return dropped
 
-    def _unlink_if_empty(self, node: _Node) -> None:
+    def _unlink_if_empty(self, node: _Node) -> _Node:
+        """Unlink ``node`` (and any ancestors emptied by that) from the
+        tree; returns the first SURVIVING node on the path to the root —
+        eviction watches it, since losing its last child may have just
+        made its own last page a leaf-end candidate."""
         while node.parent is not None and node.empty:
             parent = node.parent
             for key, child in list(parent.children.items()):
@@ -267,6 +272,7 @@ class RadixPrefixTree:
                     self.n_nodes -= 1
                     break
             node = parent
+        return node
 
     # -- eviction --------------------------------------------------------
 
@@ -278,31 +284,58 @@ class RadixPrefixTree:
         a candidate, so a resident chain is always consumed back to
         front and never broken in the middle.  ``evictable(p)`` is the
         manager's refcount guard (tree-only reference); the caller
-        releases the returned pages."""
+        releases the returned pages.
+
+        ONE traversal collects every candidate into a heap ordered by
+        ``(last_used, tail_first)``; victims pop cheapest-first, each
+        re-validated against the live tree (a popped entry may be stale:
+        its node shrank or unlinked since the push).  Evicting a page
+        EXPOSES at most one new candidate — the node's next page up, or
+        the first surviving ancestor's last page once the emptied node
+        unlinks — which is pushed as it appears.  Total host work is
+        O(nodes + reclaimed·log(candidates)) per call, not one full DFS
+        per reclaimed page."""
         out: List[int] = []
-        while len(out) < need:
-            victim = None  # (last_used, tail_first, node, where, page)
-            stack = [self.root]
-            while stack:
-                node = stack.pop()
-                stack.extend(node.children.values())
-                # the root holds no pages but CAN hold tails (prompts
-                # shorter than one block register on the root itself)
-                for key, bid in node.tails.items():
-                    if bid in self.retained and evictable(bid):
-                        cand = (node.last_used, 0, node, key, bid)
-                        if victim is None or cand[:2] < victim[:2]:
-                            victim = cand
-                if node.pages and not node.children and not node.tails:
-                    bid = node.pages[-1]
-                    if bid in self.retained and evictable(bid):
-                        cand = (node.last_used, 1, node,
-                                len(node.pages) - 1, bid)
-                        if victim is None or cand[:2] < victim[:2]:
-                            victim = cand
-            if victim is None:
-                break
-            _, _, node, where, bid = victim
+        if need <= 0:
+            return out
+        # entries: (last_used, tail_first, seq, node, where, page) — seq
+        # is the traversal/exposure order, so ties pop first-seen-first
+        # (matching the old full-scan's DFS first-win) and heapq never
+        # compares _Node objects
+        heap: List[Tuple[int, int, int, _Node, object, int]] = []
+        seq = 0
+
+        def push(node: _Node, where, bid: int, tail_first: int) -> None:
+            nonlocal seq
+            heapq.heappush(
+                heap, (node.last_used, tail_first, seq, node, where, bid))
+            seq += 1
+
+        def push_leaf_end(node: _Node) -> None:
+            if node.pages and not node.children and not node.tails:
+                push(node, len(node.pages) - 1, node.pages[-1], 1)
+
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            # the root holds no pages but CAN hold tails (prompts
+            # shorter than one block register on the root itself)
+            for key, bid in node.tails.items():
+                push(node, key, bid, 0)
+            push_leaf_end(node)
+        while len(out) < need and heap:
+            _, _, _, node, where, bid = heapq.heappop(heap)
+            if isinstance(where, int):
+                live = (not node.children and not node.tails
+                        and node.pages and node.pages[-1] == bid)
+            else:
+                live = node.tails.get(where) == bid
+            if not live or bid not in self.retained or not evictable(bid):
+                # stale entry, or pinned by a live sharer — a pinned
+                # leaf-end stays put and (as before) shields the rest
+                # of its node's chain for the duration of this call
+                continue
             if isinstance(where, int):
                 node.pages.pop()
                 node.run = node.run[:len(node.pages) * self.bs]
@@ -310,7 +343,7 @@ class RadixPrefixTree:
                 node.tails.pop(where)
             self._loc.pop(bid)
             self.retained.discard(bid)
-            self._unlink_if_empty(node)
+            push_leaf_end(self._unlink_if_empty(node))
             self.n_evicted += 1
             out.append(bid)
         return out

@@ -147,6 +147,66 @@ def test_ring_recycle_clears_registry_for_retained_chain():
     _conserved(pm)
 
 
+def test_evict_order_lru_leaf_end_through_branches():
+    """Pin the eviction semantics the single-traversal heap must keep:
+    LRU leaf-end first (tails before their node's last block), chains
+    consumed back to front, and a node drained of its subtree becomes
+    the next candidate (cascade), until the tree is fully dry."""
+    from repro.serving.radix_tree import RadixPrefixTree
+    tree = RadixPrefixTree(block_size=4)
+    head = list(range(8))                      # shared 2-block head
+    a = np.asarray(head + [20, 21, 22, 23, 30], np.int32)  # + block + tail
+    b = np.asarray(head + [40, 41, 42, 43], np.int32)      # + block
+    tree.insert(a, [0, 1, 2, 3])
+    tree.insert(b, [0, 1, 4])                  # shares pages 0,1
+    tree.match(b)                              # bump branch b's LRU stamp
+    tree.retained = set(tree.pages())
+    order = tree.evict(100, lambda p: True)
+    # branch a drains first (older LRU stamp): tail 3 before page 2;
+    # then branch b's page 4; the shared head cascades last, back to
+    # front, once both branches are gone
+    assert order == [3, 2, 4, 1, 0]
+    assert tree.n_pages == 0 and tree.n_nodes == 0 and not tree.retained
+    assert tree.n_evicted == 5
+    assert tree.evict(1, lambda p: True) == [], "dry tree yields nothing"
+
+
+def test_ring_drop_with_live_sharer_of_retained_descendants():
+    """Regression (review): C registers [b0..b3]; D shares, extends, and
+    CoW-detaches from b0 as its window rolls (ref[b0] falls back to C
+    alone), then finishes — the tree adopts b1..b3 (ref = C + tree).
+    When C's window later rolls past b0, ``_drop_page(b0)`` drops the
+    subtree and its retained orphans b1..b3 are STILL MAPPED by C:
+    releasing the tree's reference must leave them to die with C's
+    slot, not assert they were freed (the old assert crashed the
+    serving loop on this reachable state)."""
+    pm = _mk_pm(n_blocks=12, window=32)  # ring = 5, bs = 8
+    prompt = (np.arange(32, dtype=np.int32) * 3 + 1) % 97  # blocks b0..b3
+    assert pm.admit(0, prompt) == 0          # C registers the chain
+    assert pm.admit(1, prompt.copy()) == 4   # D shares all four pages
+    b0 = pm._slots[0].blocks[0]
+    # D decodes until block 5 reuses ring slot 0: shared → CoW-detach
+    while int(pm.lengths[1]) < 41:
+        assert pm.ensure_appendable(1)
+        pm.advance(1)
+    assert int(pm.allocator.ref[b0]) == 1, "D must have detached from b0"
+    pm.release(1)  # tree adopts D's still-registered pages b1..b3
+    assert len(pm.tree.retained) == 3
+    _conserved(pm)
+    # C's window now rolls past b0: the drop's orphans are retained AND
+    # live-mapped — must neither assert nor free them out from under C
+    while int(pm.lengths[0]) < 41:
+        assert pm.ensure_appendable(0)
+        pm.advance(0)
+        _conserved(pm)
+    assert not pm.tree.retained, "orphans must lose the tree's reference"
+    assert pm.tree.n_pages == 0
+    pm.release(0)
+    pm.drop_prefix_cache()
+    assert pm.allocator.n_used == 0
+    _conserved(pm)
+
+
 def test_retention_off_restores_old_registry_lifecycle():
     """``prefix_retention=False``: entries die with their page's last
     sharer — release returns the pool to empty, nothing survives for a
